@@ -1,0 +1,104 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): the paper's
+//! section-4.1 experiment — pretrain LeNet-5 in float, then SYMOG-train it
+//! to 2-bit fixed point — with the loss curve, epoch metrics, and the final
+//! Table-1-style row logged to results/.
+//!
+//!     make artifacts && cargo run --release --example lenet_mnist
+//!
+//! Pass `--fast` for a shortened run (CI smoke).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use symog::config::Experiment;
+use symog::data::Preset;
+use symog::driver::{self, artifacts_root};
+use symog::report::{render_table1, Table1Row};
+use symog::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+
+    let (epochs_base, epochs_symog, train_n, test_n) =
+        if fast { (2, 3, 1024, 256) } else { (10, 25, 8192, 1024) };
+
+    let baseline = Experiment {
+        name: "lenet-baseline".into(),
+        artifact: "lenet5-baseline-synth-mnist-w1-b2".into(),
+        dataset: Preset::SynthMnist,
+        train_n,
+        test_n,
+        epochs: epochs_base,
+        lambda_kind: "off".into(),
+        verbose: true,
+        ..Default::default()
+    };
+    let symog_exp = Experiment {
+        name: "lenet-symog".into(),
+        artifact: "lenet5-symog-synth-mnist-w1-b2".into(),
+        epochs: epochs_symog,
+        track_modes: true,
+        hist_epochs: vec![0, epochs_symog / 2, epochs_symog],
+        hist_layers: vec![0, 2, 4],
+        ..baseline.clone()
+    };
+
+    let (train, test) = Preset::SynthMnist.load(train_n, test_n, 0);
+    println!(
+        "=== phase 1: FP32 pretraining ({epochs_base} epochs), then phase 2: \
+         SYMOG 2-bit training ({epochs_symog} epochs) ==="
+    );
+    let (base, symog_run) =
+        driver::pretrain_then_run(&rt, &baseline, &symog_exp, &root, &train, &test)?;
+
+    // loss curve (the end-to-end validation record for EXPERIMENTS.md)
+    println!("\nSYMOG loss curve:");
+    for e in &symog_run.outcome.log.epochs {
+        println!(
+            "  epoch {:3}  train_loss {:.4}  testq_err {:.2}%  switch {:.1}%",
+            e.epoch,
+            e.train_loss,
+            e.quantized_error() * 100.0,
+            e.switch_rate * 100.0
+        );
+    }
+
+    let params = 62_582; // LeNet-5 at width 1.0
+    let rows = vec![
+        Table1Row {
+            dataset: "synth-mnist".into(),
+            method: "SYMOG".into(),
+            model: "LeNet5".into(),
+            params,
+            bits: "2".into(),
+            fixed_point: true,
+            epochs: epochs_symog,
+            error: symog_run.best_q_error,
+        },
+        Table1Row {
+            dataset: "synth-mnist".into(),
+            method: "Baseline".into(),
+            model: "LeNet5".into(),
+            params,
+            bits: "32".into(),
+            fixed_point: false,
+            epochs: epochs_base,
+            error: base.best_f_error,
+        },
+    ];
+    println!("\n{}", render_table1(&rows));
+
+    std::fs::create_dir_all("results").ok();
+    symog_run.outcome.log.save_csv(Path::new("results/lenet_mnist_symog.csv"))?;
+    if let Some(t) = &symog_run.outcome.tracker {
+        std::fs::write("results/lenet_mnist_switches.csv", t.to_csv())?;
+    }
+    symog_run
+        .final_ckpt
+        .write(Path::new("results/lenet_mnist_symog.ckpt"))
+        .context("saving checkpoint")?;
+    println!("logs -> results/lenet_mnist_symog.csv, checkpoint -> results/lenet_mnist_symog.ckpt");
+    Ok(())
+}

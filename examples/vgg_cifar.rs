@@ -1,0 +1,69 @@
+//! Section 4.2's CIFAR-10 experiment: VGG7 (width-scaled) with SYMOG vs the
+//! TWN comparator and the float baseline — the three-way comparison that
+//! anchors the paper's Table 1 CIFAR-10 block.
+//!
+//!     make artifacts && cargo run --release --example vgg_cifar
+//!
+//! Pass `--fast` for a shortened run.
+
+use anyhow::Result;
+use symog::config::Experiment;
+use symog::data::Preset;
+use symog::driver::{self, artifacts_root};
+use symog::report::{render_table1, Table1Row};
+use symog::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let (epochs, train_n, test_n, steps) = if fast {
+        (3u32, 1024usize, 256usize, Some(8usize))
+    } else {
+        (15, 4096, 512, None)
+    };
+
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let base = Experiment {
+        name: "vgg7-cifar".into(),
+        artifact: String::new(),
+        dataset: Preset::SynthCifar10,
+        train_n,
+        test_n,
+        epochs,
+        augment: true,
+        steps_per_epoch: steps,
+        verbose: true,
+        ..Default::default()
+    };
+
+    let (train, test) = Preset::SynthCifar10.load(train_n, test_n, 0);
+    let mut rows = Vec::new();
+    for (label, artifact, lambda_kind, bits, fixed) in [
+        ("SYMOG", "vgg7-symog-synth-cifar10-w0.25-b2", "exp", "2", true),
+        ("TWN", "vgg7-twn-synth-cifar10-w0.25-b2", "off", "2", false),
+        ("Baseline", "vgg7-baseline-synth-cifar10-w0.25-b2", "off", "32", false),
+    ] {
+        println!("=== {label} ===");
+        let exp = Experiment {
+            artifact: artifact.into(),
+            lambda_kind: lambda_kind.into(),
+            ..base.clone()
+        };
+        let art = driver::load_artifact(&rt, &exp, &root)?;
+        let result = driver::run_experiment(&art, &exp, &train, &test)?;
+        let err = if bits == "32" { result.best_f_error } else { result.best_q_error };
+        println!("{label}: best error {:.2}%\n", err * 100.0);
+        rows.push(Table1Row {
+            dataset: "synth-cifar10".into(),
+            method: label.into(),
+            model: "VGG7 (0.25x)".into(),
+            params: art.manifest.num_params(),
+            bits: bits.into(),
+            fixed_point: fixed,
+            epochs,
+            error: err,
+        });
+    }
+    println!("{}", render_table1(&rows));
+    Ok(())
+}

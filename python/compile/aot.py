@@ -1,0 +1,230 @@
+"""AOT driver: lower (model x method) train/eval steps to HLO text.
+
+This is the ONLY entry point of the Python side; it runs at `make artifacts`
+time and never again. For each requested configuration it emits
+
+    artifacts/<tag>/train.hlo.txt     fused train step (fwd+bwd+update+clip)
+    artifacts/<tag>/eval.hlo.txt      float eval
+    artifacts/<tag>/evalq.hlo.txt     eval with hard-quantized weights
+    artifacts/<tag>/manifest.json     flat calling convention + layer graph
+    artifacts/<tag>/init.ckpt         He-init params + BN state
+
+HLO *text* is the interchange format (NOT lowered.compiler_ir("hlo") protos
+or .serialize(): jax >= 0.5 emits 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly — see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        --model lenet5 --method symog --dataset synth-mnist --batch 64
+    python -m compile.aot --suite default --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import ckpt, layers, models, train_step
+from .kernels import ref
+from .methods import METHODS, Hyper
+
+DATASETS = {
+    # name: (input HWC, classes) — synthetic stand-ins, see DESIGN.md
+    "synth-mnist": ((28, 28, 1), 10),
+    "synth-cifar10": ((32, 32, 3), 10),
+    "synth-cifar100": ((32, 32, 3), 100),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass
+class Config:
+    model: str
+    method: str
+    dataset: str
+    width_mult: float = 1.0
+    batch: int = 64
+    n_bits: int = 2
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    clip: bool = True
+    use_pallas: bool = True
+    act_bits: "int | None" = None
+    seed: int = 0
+    tag: str = ""
+
+    def resolve_tag(self) -> str:
+        if self.tag:
+            return self.tag
+        parts = [self.model, self.method, self.dataset,
+                 f"w{self.width_mult:g}", f"b{self.n_bits}"]
+        if not self.clip:
+            parts.append("noclip")
+        if self.act_bits:
+            parts.append(f"actq{self.act_bits}")
+        if not self.use_pallas:
+            parts.append("ref")
+        return "-".join(parts)
+
+
+def layer_manifest(model) -> list:
+    """Serializable layer graph for the Rust integer inference engine."""
+    out = []
+    for layer in model.layers:
+        d = {k: v for k, v in layer.items() if not callable(v)}
+        out.append(d)
+    return out
+
+
+def compile_config(cfg: Config, out_dir: str) -> str:
+    shape, classes = DATASETS[cfg.dataset]
+    model = models.get_model(cfg.model, shape, classes, cfg.width_mult)
+    hp = Hyper(n_bits=cfg.n_bits, momentum=cfg.momentum,
+               weight_decay=cfg.weight_decay, clip=cfg.clip,
+               use_pallas=cfg.use_pallas, act_bits=cfg.act_bits)
+    tag = cfg.resolve_tag()
+    tdir = os.path.join(out_dir, tag)
+    os.makedirs(tdir, exist_ok=True)
+
+    # --- lower the three executables
+    train_fn = train_step.flatten_train(model, cfg.method, hp)
+    train_specs = train_step.train_input_specs(model, cfg.batch)
+    with open(os.path.join(tdir, "train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(jax.jit(train_fn, keep_unused=True).lower(*train_specs)))
+
+    for quantized, fname in ((False, "eval.hlo.txt"), (True, "evalq.hlo.txt")):
+        fn = train_step.flatten_eval(model, hp, quantized)
+        specs = train_step.eval_input_specs(model, cfg.batch, quantized)
+        with open(os.path.join(tdir, fname), "w") as f:
+            f.write(to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs)))
+
+    # --- init checkpoint (params + BN state; momenta are zeroed by Rust)
+    init_p = layers.init_params(model, cfg.seed)
+    init_s = layers.init_state(model)
+    tensors = [(p.name, p.kind, a) for p, a in zip(model.params, init_p)]
+    tensors += [(s.name, "state", a) for s, a in zip(model.state, init_s)]
+    # suggested per-layer step sizes from the init weights (Alg. 1 l.2-5);
+    # Rust recomputes these from the *pretrained* weights before SYMOG runs.
+    deltas = np.array(
+        [ref.optimal_delta_ref(np.asarray(a), cfg.n_bits)[0]
+         for p, a in zip(model.params, init_p) if p.kind == "weight"]
+        or [1.0], np.float32)
+    tensors.append(("__deltas__", "deltas", deltas))
+    ckpt.write_ckpt(os.path.join(tdir, "init.ckpt"),
+                    {"model": cfg.model, "epoch": 0, "method": "init"}, tensors)
+
+    # --- manifest
+    manifest = {
+        "tag": tag,
+        "model": cfg.model,
+        "method": cfg.method,
+        "dataset": cfg.dataset,
+        "width_mult": cfg.width_mult,
+        "batch": cfg.batch,
+        "n_bits": cfg.n_bits,
+        "momentum": cfg.momentum,
+        "weight_decay": cfg.weight_decay,
+        "clip": cfg.clip,
+        "use_pallas": cfg.use_pallas,
+        "act_bits": cfg.act_bits,
+        "input_shape": list(shape),
+        "num_classes": classes,
+        "n_quant": model.n_quant,
+        "params": [
+            {"name": p.name, "shape": list(p.shape), "kind": p.kind,
+             "qidx": p.qidx, "fan_in": p.fan_in}
+            for p in model.params
+        ],
+        "state": [{"name": s.name, "shape": list(s.shape), "init": s.init}
+                  for s in model.state],
+        "layers": layer_manifest(model),
+        "artifacts": {"train": "train.hlo.txt", "eval": "eval.hlo.txt",
+                      "evalq": "evalq.hlo.txt", "init": "init.ckpt"},
+    }
+    with open(os.path.join(tdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return tag
+
+
+# The default suite: everything the test/bench harness loads out of the box.
+# Width-scaled so the full CPU sweep stays tractable; Table-1 full-scale
+# configs are produced on demand with explicit flags.
+DEFAULT_SUITE = [
+    Config("mlp", "symog", "synth-mnist", batch=64),
+    Config("mlp", "baseline", "synth-mnist", batch=64),
+    Config("lenet5", "symog", "synth-mnist", batch=64),
+    Config("lenet5", "baseline", "synth-mnist", batch=64),
+    Config("lenet5", "bc", "synth-mnist", batch=64),
+    Config("lenet5", "twn", "synth-mnist", batch=64),
+    Config("lenet5", "br", "synth-mnist", batch=64),
+    Config("lenet5", "symog", "synth-mnist", batch=64, clip=False),
+    # activation-quantization extension (8-bit acts after every ReLU)
+    Config("lenet5", "symog", "synth-mnist", batch=64, act_bits=8),
+    # N-bit ablation (A1): 3/4/8-bit symmetric codes
+    Config("lenet5", "symog", "synth-mnist", batch=64, n_bits=3),
+    Config("lenet5", "symog", "synth-mnist", batch=64, n_bits=4),
+    Config("lenet5", "symog", "synth-mnist", batch=64, n_bits=8),
+    Config("vgg7", "symog", "synth-cifar10", width_mult=0.25, batch=64),
+    Config("vgg7", "baseline", "synth-cifar10", width_mult=0.25, batch=64),
+    Config("vgg7", "twn", "synth-cifar10", width_mult=0.25, batch=64),
+    Config("densenet", "symog", "synth-cifar10", width_mult=0.5, batch=64),
+    Config("densenet", "baseline", "synth-cifar10", width_mult=0.5, batch=64),
+    Config("vgg11", "symog", "synth-cifar100", width_mult=0.25, batch=64),
+    Config("vgg11", "symog", "synth-cifar100", width_mult=0.25, batch=64,
+           clip=False),
+    Config("vgg11", "baseline", "synth-cifar100", width_mult=0.25, batch=64),
+    Config("vgg11", "br", "synth-cifar100", width_mult=0.25, batch=64),
+    Config("vgg16", "symog", "synth-cifar100", width_mult=0.25, batch=64),
+    Config("vgg16", "baseline", "synth-cifar100", width_mult=0.25, batch=64),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--suite", choices=["default", "none"], default="none")
+    ap.add_argument("--model", choices=sorted(models._ZOO))
+    ap.add_argument("--method", choices=METHODS, default="symog")
+    ap.add_argument("--dataset", choices=sorted(DATASETS), default="synth-mnist")
+    ap.add_argument("--width-mult", type=float, default=1.0)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--weight-decay", type=float, default=0.0)
+    ap.add_argument("--no-clip", action="store_true")
+    ap.add_argument("--act-bits", type=int, default=0)
+    ap.add_argument("--no-pallas", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cfgs = list(DEFAULT_SUITE) if args.suite == "default" else []
+    if args.model:
+        cfgs.append(Config(
+            args.model, args.method, args.dataset, args.width_mult,
+            args.batch, args.bits, args.momentum, args.weight_decay,
+            not args.no_clip, not args.no_pallas, args.act_bits or None,
+            args.seed, args.tag))
+    if not cfgs:
+        ap.error("nothing to do: pass --suite default and/or --model ...")
+    for cfg in cfgs:
+        tag = compile_config(cfg, args.out_dir)
+        print(f"compiled {tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Checkpoint binary format — shared with rust/src/coordinator/checkpoint.rs.
+
+Layout (little-endian):
+
+    magic   8 bytes  b"SYMGCKP1"
+    u32     meta_len
+    bytes   meta JSON (utf-8): {"model":..., "epoch":..., ...}
+    u32     n_tensors
+    per tensor:
+        u32   name_len
+        bytes name (utf-8)
+        u8    kind  (0 weight, 1 bias, 2 gamma, 3 beta, 4 state,
+                     5 momentum, 6 deltas)
+        u8    ndim
+        u32   dims[ndim]
+        f32   data[prod(dims)]
+
+Python only *writes* init checkpoints (aot.py); Rust reads and writes them
+during training. Keep the two implementations in lockstep.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"SYMGCKP1"
+KINDS = {"weight": 0, "bias": 1, "gamma": 2, "beta": 3, "state": 4,
+         "momentum": 5, "deltas": 6}
+KIND_NAMES = {v: k for k, v in KINDS.items()}
+
+
+def write_ckpt(path: str, meta: dict,
+               tensors: List[Tuple[str, str, np.ndarray]]) -> None:
+    """tensors: list of (name, kind, f32 array)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        mj = json.dumps(meta).encode()
+        f.write(struct.pack("<I", len(mj)))
+        f.write(mj)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, kind, arr in tensors:
+            # np.asarray (not ascontiguousarray: it collapses 0-d to 1-d);
+            # tobytes() always emits C order regardless of input layout
+            arr = np.asarray(arr, dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", KINDS[kind], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_ckpt(path: str) -> Tuple[dict, List[Tuple[str, str, np.ndarray]]]:
+    with open(path, "rb") as f:
+        assert f.read(8) == MAGIC, f"{path}: bad magic"
+        (mlen,) = struct.unpack("<I", f.read(4))
+        meta = json.loads(f.read(mlen))
+        (n,) = struct.unpack("<I", f.read(4))
+        out = []
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode()
+            kind, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            size = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(4 * size), np.float32).reshape(dims)
+            out.append((name, KIND_NAMES[kind], arr))
+        return meta, out

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for SYMOG + their pure-jnp oracles (ref.py).
+
+All kernels run with interpret=True on this image (CPU PJRT cannot execute
+Mosaic custom-calls); BlockSpecs are TPU-shaped so the same code lowers to
+real hardware unchanged. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul  # noqa: F401
+from .mode_hist import mode_hist  # noqa: F401
+from .quantize import quantize  # noqa: F401
+from .reg_grad import reg_grad  # noqa: F401
+from .sgd_update import sgd_update  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pallas kernel: tiled f32 matmul for the dense layers of the model zoo.
+
+MXU-shaped schedule: the grid is (M/bm, N/bn, K/bk); each step multiplies a
+(bm, bk) x (bk, bn) tile pair into a VMEM f32 accumulator, writing the
+output tile once on the last K step. Tiles default to 128x128x128 — the MXU
+systolic-array shape — with VMEM footprint
+
+    bm*bk + bk*bn + 2*bm*bn   f32 = 256 KiB per step at the defaults,
+
+leaving headroom for double buffering well under the 16 MiB VMEM budget.
+Under interpret=True the same schedule runs on numpy for correctness; the
+MXU-utilization estimate lives in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is importable on CPU images; used only for scratch shapes
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover - fallback if tpu module is absent
+    _VMEM = None
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad2(x, m0, m1):
+    p0 = -(-x.shape[0] // m0) * m0 - x.shape[0]
+    p1 = -(-x.shape[1] // m1) * m1 - x.shape[1]
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    """f32 `a @ b` with an MXU-tiled Pallas schedule. Any (M,K)x(K,N)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    a_p = _pad2(a.astype(jnp.float32), bm, bk)
+    b_p = _pad2(b.astype(jnp.float32), bk, bn)
+    mp, kp = a_p.shape
+    _, np_ = b_p.shape
+    k_steps = kp // bk
+
+    kwargs = {}
+    if _VMEM is not None:
+        kwargs["scratch_shapes"] = [_VMEM((bm, bn), jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(a_p, b_p)
+    return out[:m, :n]

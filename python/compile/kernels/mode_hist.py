@@ -1,0 +1,62 @@
+"""Pallas kernel: fixed-point mode occupancy histogram (drives Fig 3/4).
+
+For each weight, the nearest fixed-point mode index is
+clip(round(w/delta), -qmax, qmax); the kernel accumulates the count of each
+of the 2*qmax+1 modes across grid steps into a single output block. The L3
+tracker consumes these counts every epoch to compute the mode-switch rate
+(Fig 4) and the per-mode mass (Fig 3) without streaming whole weight tensors
+back to the host.
+
+Padding note: pad_to_grid zero-pads, and zero lands exactly on mode 0, so
+the wrapper subtracts the pad count from the centre bin.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import util
+
+
+def _mode_hist_kernel(w_ref, p_ref, o_ref, *, n_bits: int):
+    qmax = 2 ** (n_bits - 1) - 1
+    delta = p_ref[0, 0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = w_ref[...] / delta
+    r = jnp.sign(s) * jnp.floor(jnp.abs(s) + 0.5)
+    idx = jnp.clip(r, -qmax, qmax).astype(jnp.int32) + qmax
+    # one-hot reduce: counts[k] = #(idx == k) over the (BLOCK_ROWS, LANES) tile
+    modes = jax.lax.broadcasted_iota(jnp.int32, (1, 2 * qmax + 1), 1)
+    counts = jnp.sum(
+        (idx[..., None] == modes[0]).astype(jnp.int32), axis=(0, 1)
+    )
+    o_ref[...] += counts.reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
+def mode_hist(w: jnp.ndarray, delta, n_bits: int = 2, interpret: bool = True):
+    """Counts per fixed-point mode; int32 vector of length 2^{N-1}*2 - 1."""
+    qmax = 2 ** (n_bits - 1) - 1
+    rows, n, n_blocks = util.pad_to_grid(w.astype(jnp.float32))
+    params = util.pack_params(delta)
+    out = pl.pallas_call(
+        functools.partial(_mode_hist_kernel, n_bits=n_bits),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, params.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * qmax + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2 * qmax + 1), jnp.int32),
+        interpret=interpret,
+    )(rows, params)
+    pad = rows.size - n
+    return out[0].at[qmax].add(-pad)

@@ -1,0 +1,48 @@
+"""Pallas kernel: symmetric uniform N-bit fixed-point quantizer (Eq. 1).
+
+    Q_N(x; delta) = clip(round(x / delta), -qmax, qmax) * delta,
+    qmax = 2^{N-1} - 1
+
+The kernel is elementwise over VREG-shaped tiles (see util.py). `delta` is a
+runtime scalar (it is a traced input of the AOT train step), `n_bits` is
+static. Rounding is half-away-from-zero so the quantizer is odd — see
+ref.quantize_ref for the rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import util
+
+
+def _quantize_kernel(x_ref, p_ref, o_ref, *, n_bits: int):
+    delta = p_ref[0, 0]
+    qmax = float(2 ** (n_bits - 1) - 1)
+    s = x_ref[...] / delta
+    r = jnp.sign(s) * jnp.floor(jnp.abs(s) + 0.5)
+    o_ref[...] = jnp.clip(r, -qmax, qmax) * delta
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
+def quantize(x: jnp.ndarray, delta, n_bits: int = 2, interpret: bool = True):
+    """Q_N(x; delta) via Pallas. Shape/dtype preserved; f32 compute."""
+    orig_shape, orig_dtype = x.shape, x.dtype
+    rows, n, n_blocks = util.pad_to_grid(x.astype(jnp.float32))
+    params = util.pack_params(delta)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, n_bits=n_bits),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, params.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(rows.shape, jnp.float32),
+        interpret=interpret,
+    )(rows, params)
+    return util.unpad(out, n, orig_shape).astype(orig_dtype)

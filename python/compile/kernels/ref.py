@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the Pallas kernels are tested against (pytest +
+hypothesis, see python/tests/). They are also what the L2 model falls back to
+when `use_pallas=False` (e.g. for fast HLO lowering of the very large
+configurations where interpret-mode Pallas would dominate compile time).
+
+All functions are pure jnp, shape-polymorphic, and differentiable where the
+paper requires it (the quantizer uses a straight-through zero derivative via
+`lax.stop_gradient`, matching Eq. 4 of the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Symmetric uniform N-bit fixed-point quantizer Q_N(x; delta), Eq. 1.
+
+    q = clip(round(x / delta), -(2^{N-1} - 1), 2^{N-1} - 1) * delta
+
+    Note the symmetric (one-value-short) integer range: the paper drops
+    -2^{N-1} so the code-book is symmetric around zero (section 3.1).
+    Rounding is round-half-away-from-zero to keep the quantizer odd
+    (Q(-x) == -Q(x)) — jnp.round would round half-to-even and break the
+    symmetry property the paper's Figure 2 depicts.
+    """
+    qmax = float(2 ** (n_bits - 1) - 1)
+    scaled = x / delta
+    # round half away from zero: sign(x) * floor(|x| + 0.5)
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    clipped = jnp.clip(rounded, -qmax, qmax)
+    return clipped * delta
+
+
+def quantize_ste(x: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Quantizer with straight-through *zero* gradient (dQ/dx = 0, Eq. 4).
+
+    SYMOG treats Q_N as piecewise-constant, so its derivative is zero a.e.;
+    the regularizer gradient then reduces to (2/M)(w - Q(w)).
+    """
+    return jax.lax.stop_gradient(quantize_ref(x, delta, n_bits))
+
+
+def reg_grad_ref(w: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """SYMOG prior gradient dR/dw = (2/M) (w - Q_N(w; delta)), Eq. 4."""
+    m = w.size
+    return (2.0 / m) * (w - quantize_ref(w, delta, n_bits))
+
+
+def clip_ref(w: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Weight clipping to the quantization domain (section 3.4)."""
+    bound = delta * float(2 ** (n_bits - 1) - 1)
+    return jnp.clip(w, -bound, bound)
+
+
+def sgd_update_ref(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    grad: jnp.ndarray,
+    delta,
+    *,
+    lr,
+    lam,
+    momentum: float,
+    n_bits: int,
+    weight_decay: float = 0.0,
+    clip: bool = True,
+):
+    """Fused SYMOG update step (Algorithm 1, lines 14-17).
+
+    g_total = dC/dw + lam * (2/M)(w - Q(w)) + weight_decay * w
+    v'      = momentum * v - lr * g_total           (Nesterov velocity)
+    w'      = w + momentum * v' - lr * g_total      (Nesterov lookahead)
+    w'      = clip(w', +-delta (2^{N-1}-1))         (section 3.4)
+
+    Returns (w', v').
+    """
+    g = grad + lam * reg_grad_ref(w, delta, n_bits) + weight_decay * w
+    v_new = momentum * v - lr * g
+    w_new = w + momentum * v_new - lr * g
+    if clip:
+        w_new = clip_ref(w_new, delta, n_bits)
+    return w_new, v_new
+
+
+def mode_hist_ref(w: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Occupancy count of each fixed-point mode (drives Fig 3/4).
+
+    Returns an int32 vector of length 2*qmax + 1 where entry k counts
+    weights whose nearest mode is (k - qmax) * delta.
+    """
+    qmax = 2 ** (n_bits - 1) - 1
+    scaled = w / delta
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    idx = jnp.clip(rounded, -qmax, qmax).astype(jnp.int32) + qmax
+    return jnp.zeros(2 * qmax + 1, jnp.int32).at[idx.reshape(-1)].add(1)
+
+
+def mode_assign_ref(w: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Per-weight signed mode index in [-qmax, qmax] (int8)."""
+    qmax = 2 ** (n_bits - 1) - 1
+    scaled = w / delta
+    rounded = jnp.sign(scaled) * jnp.floor(jnp.abs(scaled) + 0.5)
+    return jnp.clip(rounded, -qmax, qmax).astype(jnp.int8)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32 matmul oracle for the Pallas tiled kernel."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def quant_error_ref(w: jnp.ndarray, delta, n_bits: int) -> jnp.ndarray:
+    """Mean squared quantization error (the R term for one layer, Eq. 3)."""
+    return jnp.mean((w - quantize_ref(w, delta, n_bits)) ** 2)
+
+
+def optimal_delta_ref(w: jnp.ndarray, n_bits: int, f_range=(-12, 12)):
+    """Brute-force the fixed-point constraint: argmin over f in Z of
+    ||w - Q_N(w; 2^-f)||^2 (Algorithm 1, lines 2-5). Returns (delta, f)."""
+    best_f, best_err = None, None
+    for f in range(f_range[0], f_range[1] + 1):
+        delta = 2.0 ** (-f)
+        err = float(jnp.sum((w - quantize_ref(w, delta, n_bits)) ** 2))
+        if best_err is None or err < best_err:
+            best_f, best_err = f, err
+    return 2.0 ** (-best_f), best_f

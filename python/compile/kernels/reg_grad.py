@@ -1,0 +1,49 @@
+"""Pallas kernel: SYMOG regularizer gradient (Eq. 4).
+
+    dR/dw = (2 / M) * (w - Q_N(w; delta))
+
+M is the number of weights in the layer — a static shape property, folded
+into the kernel as a compile-time constant. The quantizer is re-derived
+inline (cheaper than a second kernel launch and keeps the sub-expression
+fused in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import util
+
+
+def _reg_grad_kernel(w_ref, p_ref, o_ref, *, n_bits: int, inv_m2: float):
+    delta = p_ref[0, 0]
+    qmax = float(2 ** (n_bits - 1) - 1)
+    w = w_ref[...]
+    s = w / delta
+    r = jnp.sign(s) * jnp.floor(jnp.abs(s) + 0.5)
+    q = jnp.clip(r, -qmax, qmax) * delta
+    o_ref[...] = inv_m2 * (w - q)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "interpret"))
+def reg_grad(w: jnp.ndarray, delta, n_bits: int = 2, interpret: bool = True):
+    """(2/M)(w - Q_N(w; delta)) via Pallas; M = w.size (static)."""
+    orig_shape = w.shape
+    rows, n, n_blocks = util.pad_to_grid(w.astype(jnp.float32))
+    params = util.pack_params(delta)
+    out = pl.pallas_call(
+        functools.partial(_reg_grad_kernel, n_bits=n_bits, inv_m2=2.0 / w.size),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, params.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(rows.shape, jnp.float32),
+        interpret=interpret,
+    )(rows, params)
+    return util.unpad(out, n, orig_shape)

@@ -1,0 +1,109 @@
+"""Pallas kernel: fused SYMOG update step (Algorithm 1, lines 14-17).
+
+One VMEM round-trip performs, per weight:
+
+    g  = dC/dw + lam * (2/M)(w - Q_N(w; delta)) + wd * w
+    v' = mu * v - lr * g            (Nesterov velocity)
+    w' = w + mu * v' - lr * g       (Nesterov lookahead step)
+    w' = clip(w', +-delta * (2^{N-1}-1))   (weight clipping, section 3.4)
+
+This is the L1 hot spot of SYMOG training: without fusion the update is five
+elementwise passes (quantize, reg-grad, axpy, momentum, clip) each streaming
+W-sized tensors through HBM; fused it reads {w, v, g} once and writes
+{w', v'} once — a 10/5 -> 5/2 HBM traffic reduction (see DESIGN.md §Perf).
+
+Runtime scalars [delta, lr, lam] travel in a params row; mu (momentum), wd
+(weight decay), clip flag and n_bits are static.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import util
+
+
+def _sgd_update_kernel(
+    w_ref, v_ref, g_ref, p_ref, wo_ref, vo_ref,
+    *, n_bits: int, inv_m2: float, momentum: float, weight_decay: float,
+    clip: bool,
+):
+    delta = p_ref[0, 0]
+    lr = p_ref[0, 1]
+    lam = p_ref[0, 2]
+    qmax = float(2 ** (n_bits - 1) - 1)
+
+    w = w_ref[...]
+    v = v_ref[...]
+
+    s = w / delta
+    r = jnp.sign(s) * jnp.floor(jnp.abs(s) + 0.5)
+    q = jnp.clip(r, -qmax, qmax) * delta
+
+    g = g_ref[...] + lam * (inv_m2 * (w - q)) + weight_decay * w
+    v_new = momentum * v - lr * g
+    w_new = w + momentum * v_new - lr * g
+    if clip:
+        bound = qmax * delta
+        w_new = jnp.clip(w_new, -bound, bound)
+    wo_ref[...] = w_new
+    vo_ref[...] = v_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bits", "momentum", "weight_decay", "clip", "interpret"),
+)
+def sgd_update(
+    w: jnp.ndarray,
+    v: jnp.ndarray,
+    grad: jnp.ndarray,
+    delta,
+    lr,
+    lam,
+    *,
+    n_bits: int = 2,
+    momentum: float = 0.9,
+    weight_decay: float = 0.0,
+    clip: bool = True,
+    interpret: bool = True,
+):
+    """Fused SYMOG parameter update. Returns (w_new, v_new)."""
+    orig_shape = w.shape
+    w_rows, n, n_blocks = util.pad_to_grid(w.astype(jnp.float32))
+    v_rows, _, _ = util.pad_to_grid(v.astype(jnp.float32))
+    g_rows, _, _ = util.pad_to_grid(grad.astype(jnp.float32))
+    params = util.pack_params(delta, lr, lam)
+
+    blk = pl.BlockSpec((util.BLOCK_ROWS, util.LANES), lambda i: (i, 0))
+    w_new, v_new = pl.pallas_call(
+        functools.partial(
+            _sgd_update_kernel,
+            n_bits=n_bits,
+            inv_m2=2.0 / w.size,
+            momentum=momentum,
+            weight_decay=weight_decay,
+            clip=clip,
+        ),
+        grid=(n_blocks,),
+        in_specs=[
+            blk,
+            blk,
+            blk,
+            pl.BlockSpec((1, params.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct(w_rows.shape, jnp.float32),
+            jax.ShapeDtypeStruct(w_rows.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_rows, v_rows, g_rows, params)
+    return (
+        util.unpad(w_new, n, orig_shape),
+        util.unpad(v_new, n, orig_shape),
+    )

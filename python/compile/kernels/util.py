@@ -1,0 +1,47 @@
+"""Shared plumbing for the Pallas kernels.
+
+Every elementwise SYMOG kernel operates on a flattened weight tensor that is
+padded to a (SUBLANES x LANES)-tile multiple and reshaped to rows of 128
+lanes — the native TPU VREG layout. The grid walks row-blocks; each grid step
+sees one (BLOCK_ROWS, LANES) VMEM tile. On real TPU hardware this maps
+1:1 onto the VPU; under interpret=True (this image) the same BlockSpecs are
+executed with numpy, so the layout choices are validated structurally.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# TPU vector-register geometry: 8 sublanes x 128 lanes for f32.
+LANES = 128
+SUBLANES = 8
+# Rows of the VMEM block each grid step processes. 64 rows x 128 lanes x 4 B
+# = 32 KiB per operand — small enough that even the 3-operand fused update
+# kernel stays far below VMEM (16 MiB) with double buffering.
+BLOCK_ROWS = 64
+BLOCK_ELEMS = BLOCK_ROWS * LANES
+
+
+def pad_to_grid(x: jnp.ndarray):
+    """Flatten `x`, zero-pad to a BLOCK_ELEMS multiple, reshape to rows of
+    LANES. Returns (rows_2d, original_size, n_blocks)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    padded = -(-n // BLOCK_ELEMS) * BLOCK_ELEMS
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    rows = flat.reshape(padded // LANES, LANES)
+    return rows, n, padded // BLOCK_ELEMS
+
+
+def unpad(rows: jnp.ndarray, n: int, shape) -> jnp.ndarray:
+    """Inverse of pad_to_grid: strip padding and restore `shape`."""
+    return rows.reshape(-1)[:n].reshape(shape)
+
+
+def pack_params(*vals) -> jnp.ndarray:
+    """Pack runtime scalars (delta, lr, lam, ...) into a (1, P) f32 row that
+    the kernels receive as a whole-array block. Scalars must travel as
+    array operands because lr/lam change every epoch and are traced inputs
+    of the AOT-lowered train step."""
+    return jnp.stack([jnp.asarray(v, jnp.float32) for v in vals]).reshape(1, -1)

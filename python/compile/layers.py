@@ -1,0 +1,339 @@
+"""Functional layer primitives for the L2 model zoo.
+
+A model is a flat list of layer dicts (see models.py). Parameters live in a
+flat, deterministically-ordered list of `Param`s; BN running statistics live
+in a parallel `state` list. Every `kind == "weight"` parameter is a
+*quantized* parameter in the paper's sense — it owns a slot in the per-layer
+step-size vector `deltas` and is routed through the active method's weight
+transform before use (identity for SYMOG/baseline, sign/ternary/relaxed for
+the BC/TWN/BR comparators, hard Q_N for quantized eval).
+
+Biases, BN scale/shift are trained in float (the paper quantizes weights
+only; section 5 lists full fixed-point BN as future work).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul as pallas_matmul
+
+# ---------------------------------------------------------------------------
+# parameter / state descriptors
+
+
+@dataclasses.dataclass
+class Param:
+    """One trainable tensor. `qidx` is the index into the `deltas` vector for
+    kind == "weight" parameters, else None."""
+
+    name: str
+    shape: Tuple[int, ...]
+    kind: str  # "weight" | "bias" | "gamma" | "beta"
+    fan_in: int = 0
+    qidx: Optional[int] = None
+
+
+@dataclasses.dataclass
+class StateVar:
+    """One non-trainable tensor (BN running mean / variance)."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: float  # 0.0 for means, 1.0 for variances
+
+
+# weight transform: (w, qidx) -> tensor used in the forward pass
+WeightTransform = Callable[[jnp.ndarray, int], jnp.ndarray]
+
+
+def identity_transform(w: jnp.ndarray, qidx: int) -> jnp.ndarray:
+    return w
+
+
+# ---------------------------------------------------------------------------
+# pallas-backed dense matmul with a custom VJP (the Pallas call itself has no
+# autodiff rule; its cotangents are two more tiled matmuls)
+
+
+@jax.custom_vjp
+def _pmatmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return pallas_matmul(a, b)
+
+
+def _pmatmul_fwd(a, b):
+    return pallas_matmul(a, b), (a, b)
+
+
+def _pmatmul_bwd(res, g):
+    a, b = res
+    return pallas_matmul(g, b.T), pallas_matmul(a.T, g)
+
+
+_pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+def dense_matmul(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """a @ b via the Pallas MXU-tiled kernel or plain jnp (HLO dot)."""
+    if use_pallas:
+        return _pmatmul(a, b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def fake_quant_act(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Dynamic per-tensor activation quantization with a power-of-two scale
+    (our extension toward the paper's "pure fixed-point models" future work;
+    mirrors the integer engine's runtime behaviour). Straight-through
+    identity gradient."""
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    # largest power-of-two delta with amax/delta <= qmax
+    frac = jnp.floor(jnp.log2(qmax / amax))
+    delta = jnp.exp2(-frac)
+    s = x / delta
+    q = jnp.clip(jnp.sign(s) * jnp.floor(jnp.abs(s) + 0.5), -qmax, qmax) * delta
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# layer constructors: each returns a dict consumed by build()/apply()
+
+
+def conv(out_ch: int, k: int = 3, stride: int = 1, padding: str = "SAME",
+         use_bias: bool = False) -> dict:
+    return {"type": "conv", "out_ch": out_ch, "k": k, "stride": stride,
+            "padding": padding, "use_bias": use_bias}
+
+
+def dense(out_f: int, use_bias: bool = True) -> dict:
+    return {"type": "dense", "out_f": out_f, "use_bias": use_bias}
+
+
+def bn() -> dict:
+    return {"type": "bn"}
+
+
+def relu() -> dict:
+    return {"type": "relu"}
+
+
+def maxpool(k: int = 2, stride: Optional[int] = None) -> dict:
+    return {"type": "maxpool", "k": k, "stride": stride or k}
+
+
+def avgpool(k: int = 2, stride: Optional[int] = None) -> dict:
+    return {"type": "avgpool", "k": k, "stride": stride or k}
+
+
+def global_avgpool() -> dict:
+    return {"type": "global_avgpool"}
+
+
+def flatten() -> dict:
+    return {"type": "flatten"}
+
+
+def concat_shortcut(from_idx: int) -> dict:
+    """DenseNet-style feature concatenation with the activation recorded at
+    layer index `from_idx` (indices refer to the built layer list)."""
+    return {"type": "concat", "from": from_idx}
+
+
+# ---------------------------------------------------------------------------
+# build: walk the layer list once with shape inference, allocating params
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    name: str
+    layers: List[dict]          # layer dicts augmented with param indices
+    params: List[Param]
+    state: List[StateVar]
+    input_shape: Tuple[int, int, int]  # HWC
+    num_classes: int
+    n_quant: int                # number of quantized weight tensors
+
+
+def build(name: str, layer_spec: Sequence[dict], input_shape, num_classes) -> BuiltModel:
+    params: List[Param] = []
+    state: List[StateVar] = []
+    layers: List[dict] = []
+    h, w, c = input_shape
+    shapes: List[Tuple[int, ...]] = []  # per-layer output shapes (HWC / F)
+    qidx = 0
+
+    def add_param(p: Param) -> int:
+        params.append(p)
+        return len(params) - 1
+
+    flat_features = None
+    for li, spec in enumerate(layer_spec):
+        layer = dict(spec)
+        t = spec["type"]
+        if t == "conv":
+            k, oc = spec["k"], spec["out_ch"]
+            wname = f"l{li}.conv.w"
+            layer["w"] = add_param(
+                Param(wname, (k, k, c, oc), "weight", fan_in=k * k * c, qidx=qidx))
+            qidx += 1
+            if spec["use_bias"]:
+                layer["b"] = add_param(Param(f"l{li}.conv.b", (oc,), "bias"))
+            if spec["padding"] == "SAME":
+                h = -(-h // spec["stride"])
+                w = -(-w // spec["stride"])
+            else:
+                h = (h - k) // spec["stride"] + 1
+                w = (w - k) // spec["stride"] + 1
+            c = oc
+        elif t == "dense":
+            of = spec["out_f"]
+            if flat_features is None:
+                raise ValueError("dense before flatten")
+            layer["w"] = add_param(
+                Param(f"l{li}.dense.w", (flat_features, of), "weight",
+                      fan_in=flat_features, qidx=qidx))
+            qidx += 1
+            if spec["use_bias"]:
+                layer["b"] = add_param(Param(f"l{li}.dense.b", (of,), "bias"))
+            flat_features = of
+        elif t == "bn":
+            layer["gamma"] = add_param(Param(f"l{li}.bn.gamma", (c,), "gamma"))
+            layer["beta"] = add_param(Param(f"l{li}.bn.beta", (c,), "beta"))
+            layer["mean"] = len(state)
+            state.append(StateVar(f"l{li}.bn.mean", (c,), 0.0))
+            layer["var"] = len(state)
+            state.append(StateVar(f"l{li}.bn.var", (c,), 1.0))
+        elif t in ("maxpool", "avgpool"):
+            h //= spec["stride"]
+            w //= spec["stride"]
+        elif t == "global_avgpool":
+            h, w = 1, 1
+        elif t == "flatten":
+            flat_features = h * w * c
+        elif t == "relu":
+            pass
+        elif t == "concat":
+            src = shapes[spec["from"]]
+            if len(src) != 3 or src[0] != h or src[1] != w:
+                raise ValueError(f"concat shape mismatch at layer {li}: {src} vs {(h, w, c)}")
+            c += src[2]
+        else:
+            raise ValueError(f"unknown layer type {t}")
+        shapes.append((h, w, c) if flat_features is None else (flat_features,))
+        layers.append(layer)
+
+    if flat_features is None or flat_features != num_classes:
+        raise ValueError(
+            f"model must end in a dense({num_classes}); got features={flat_features}")
+    return BuiltModel(name, layers, params, state, tuple(input_shape),
+                      num_classes, qidx)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_params(model: BuiltModel, seed: int = 0) -> List[np.ndarray]:
+    """He-normal conv/dense weights, zero biases, unit gammas. NumPy (host)
+    arrays — these are written into the init checkpoint consumed by Rust."""
+    rng = np.random.default_rng(seed)
+    out: List[np.ndarray] = []
+    for p in model.params:
+        if p.kind == "weight":
+            std = float(np.sqrt(2.0 / max(p.fan_in, 1)))
+            out.append(rng.normal(0.0, std, p.shape).astype(np.float32))
+        elif p.kind == "gamma":
+            out.append(np.ones(p.shape, np.float32))
+        else:
+            out.append(np.zeros(p.shape, np.float32))
+    return out
+
+
+def init_state(model: BuiltModel) -> List[np.ndarray]:
+    return [np.full(s.shape, s.init, np.float32) for s in model.state]
+
+
+# ---------------------------------------------------------------------------
+# apply
+
+_BN_MOMENTUM = 0.9
+_BN_EPS = 1e-5
+
+
+def apply(
+    model: BuiltModel,
+    params: Sequence[jnp.ndarray],
+    state: Sequence[jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    train: bool,
+    wt: WeightTransform = identity_transform,
+    use_pallas: bool = False,
+    act_bits: Optional[int] = None,
+):
+    """Forward pass. Returns (logits, new_state). `x` is NHWC f32.
+    `act_bits` enables fake-quantized activations after every ReLU."""
+    new_state = list(state)
+    acts: List[jnp.ndarray] = []  # per-layer outputs, for concat shortcuts
+    for layer in model.layers:
+        t = layer["type"]
+        if t == "conv":
+            wp = model.params[layer["w"]]
+            w = wt(params[layer["w"]], wp.qidx)
+            x = jax.lax.conv_general_dilated(
+                x, w,
+                window_strides=(layer["stride"], layer["stride"]),
+                padding=layer["padding"],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            if layer.get("b") is not None:
+                x = x + params[layer["b"]]
+        elif t == "dense":
+            wp = model.params[layer["w"]]
+            w = wt(params[layer["w"]], wp.qidx)
+            x = dense_matmul(x, w, use_pallas)
+            if layer.get("b") is not None:
+                x = x + params[layer["b"]]
+        elif t == "bn":
+            gamma, beta = params[layer["gamma"]], params[layer["beta"]]
+            if train:
+                axes = tuple(range(x.ndim - 1))
+                mean = jnp.mean(x, axis=axes)
+                var = jnp.var(x, axis=axes)
+                new_state[layer["mean"]] = (
+                    _BN_MOMENTUM * state[layer["mean"]] + (1 - _BN_MOMENTUM) * mean)
+                new_state[layer["var"]] = (
+                    _BN_MOMENTUM * state[layer["var"]] + (1 - _BN_MOMENTUM) * var)
+            else:
+                mean = state[layer["mean"]]
+                var = state[layer["var"]]
+            x = (x - mean) * jax.lax.rsqrt(var + _BN_EPS) * gamma + beta
+        elif t == "relu":
+            x = jnp.maximum(x, 0.0)
+            if act_bits is not None:
+                x = fake_quant_act(x, act_bits)
+        elif t == "maxpool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer["k"], layer["k"], 1), (1, layer["stride"], layer["stride"], 1),
+                "VALID")
+        elif t == "avgpool":
+            x = jax.lax.reduce_window(
+                x, 0.0, jax.lax.add,
+                (1, layer["k"], layer["k"], 1), (1, layer["stride"], layer["stride"], 1),
+                "VALID") / float(layer["k"] * layer["k"])
+        elif t == "global_avgpool":
+            x = jnp.mean(x, axis=(1, 2), keepdims=True)
+        elif t == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif t == "concat":
+            x = jnp.concatenate([acts[layer["from"]], x], axis=-1)
+        else:  # pragma: no cover
+            raise ValueError(t)
+        acts.append(x)
+    return x, new_state

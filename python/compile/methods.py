@@ -1,0 +1,136 @@
+"""Quantization methods: SYMOG plus every comparator in Table 1.
+
+A method is (a) a *weight transform* applied to each quantized parameter in
+the forward pass and (b) an *update rule* for quantized parameters. All
+methods share the plain Nesterov-SGD update for non-quantized parameters
+(bias / BN gamma / beta).
+
+| method    | forward weights          | update of w                                  |
+|-----------|--------------------------|----------------------------------------------|
+| baseline  | w (float)                | Nesterov + weight decay                      |
+| symog     | w (float)                | fused Pallas kernel: +lam*(2/M)(w-Q(w)), clip|
+| bc        | sign(w)   (STE)          | Nesterov, clip to [-1, 1]                    |
+| twn       | ternary(w) (STE)         | Nesterov                                     |
+| br        | (w + lam*Q(w))/(1 + lam) | Nesterov (relaxation pulls fwd to Q)         |
+
+BC: Courbariaux et al. 2015.  TWN: Li & Liu 2016 (threshold 0.7 E|w|, scale
+alpha = mean |w| over above-threshold weights).  BR: Yin et al. 2018
+(Moreau-envelope relaxation; we reuse the lam input as the relaxation
+coefficient, growing over training exactly like SYMOG's lambda).
+STE = straight-through estimator: the discretization contributes identity
+gradient, implemented as `w + stop_gradient(f(w) - w)`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, sgd_update
+
+METHODS = ("baseline", "symog", "bc", "twn", "br")
+
+
+@dataclasses.dataclass(frozen=True)
+class Hyper:
+    """Static hyper-parameters baked into the lowered train step."""
+
+    n_bits: int = 2
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    clip: bool = True          # SYMOG weight clipping (section 3.4 / Fig 4)
+    use_pallas: bool = True    # L1 kernels vs pure-jnp ref path
+    # fake-quantize activations after every ReLU (extension; None = off)
+    act_bits: "int | None" = None
+
+
+def nesterov(w, v, g, lr, momentum):
+    """Nesterov momentum step; returns (w', v')."""
+    v_new = momentum * v - lr * g
+    w_new = w + momentum * v_new - lr * g
+    return w_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# forward weight transforms.  Each factory takes (deltas, lam, hp) and
+# returns wt(w, qidx) -> tensor used by the forward pass.
+
+
+def _ste(w: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def ternary_twn(w: jnp.ndarray) -> jnp.ndarray:
+    """TWN ternarization: threshold 0.7*E|w|, scale = mean of surviving |w|."""
+    absw = jnp.abs(w)
+    thr = 0.7 * jnp.mean(absw)
+    mask = (absw > thr).astype(w.dtype)
+    alpha = jnp.sum(absw * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return alpha * jnp.sign(w) * mask
+
+
+def make_transform(method: str, deltas, lam, hp: Hyper):
+    if method in ("baseline", "symog"):
+        return lambda w, qidx: w
+    if method == "bc":
+        return lambda w, qidx: _ste(w, jnp.sign(w))
+    if method == "twn":
+        return lambda w, qidx: _ste(w, ternary_twn(w))
+    if method == "br":
+        # relaxed weight (w + lam Q(w)) / (1 + lam): Q is piecewise constant
+        # (zero gradient), so the relaxation is differentiable as written —
+        # the gradient w.r.t. w is 1/(1+lam), matching BinaryRelax.
+        return lambda w, qidx: (w + lam * jax.lax.stop_gradient(
+            ref.quantize_ref(w, deltas[qidx], hp.n_bits))) / (1.0 + lam)
+    raise KeyError(method)
+
+
+def make_quantized_transform(deltas, n_bits: int):
+    """Hard Q_N for the quantized-eval executable (post-quantization)."""
+    return lambda w, qidx: ref.quantize_ref(w, deltas[qidx], n_bits)
+
+
+# ---------------------------------------------------------------------------
+# update rules
+
+
+def update_params(
+    method: str,
+    kinds: Sequence[str],
+    qidxs: Sequence[Optional[int]],
+    params: List[jnp.ndarray],
+    momenta: List[jnp.ndarray],
+    grads: List[jnp.ndarray],
+    deltas,
+    lr,
+    lam,
+    hp: Hyper,
+):
+    """Apply the method's update to every parameter; returns (params', momenta')."""
+    new_p, new_v = [], []
+    for w, v, g, kind, qidx in zip(params, momenta, grads, kinds, qidxs):
+        if kind != "weight":
+            # float-trained auxiliaries: plain Nesterov + weight decay
+            w2, v2 = nesterov(w, v, g + hp.weight_decay * w, lr, hp.momentum)
+        elif method == "symog":
+            if hp.use_pallas:
+                w2, v2 = sgd_update(
+                    w, v, g, deltas[qidx], lr, lam,
+                    n_bits=hp.n_bits, momentum=hp.momentum,
+                    weight_decay=hp.weight_decay, clip=hp.clip)
+            else:
+                w2, v2 = ref.sgd_update_ref(
+                    w, v, g, deltas[qidx], lr=lr, lam=lam,
+                    momentum=hp.momentum, n_bits=hp.n_bits,
+                    weight_decay=hp.weight_decay, clip=hp.clip)
+        elif method == "bc":
+            w2, v2 = nesterov(w, v, g + hp.weight_decay * w, lr, hp.momentum)
+            w2 = jnp.clip(w2, -1.0, 1.0)
+        else:  # baseline, twn, br: plain Nesterov on the float shadow weights
+            w2, v2 = nesterov(w, v, g + hp.weight_decay * w, lr, hp.momentum)
+        new_p.append(w2)
+        new_v.append(v2)
+    return new_p, new_v

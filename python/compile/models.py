@@ -1,0 +1,168 @@
+"""Model zoo — the architectures the paper evaluates (section 4).
+
+Every constructor takes `width_mult` so the benchmark harness can run
+width-scaled variants that finish on CPU PJRT; `width_mult=1.0` is the
+paper's full-size configuration. Channel counts are rounded up to
+multiples of 4 so scaled variants stay conv-friendly.
+
+| paper model | here | paper params | section |
+|---|---|---|---|
+| LeNet-5     | lenet5()                | 60k  | 4.1 |
+| VGG7        | vgg7()                  | 12M  | 4.2 |
+| DenseNet (L=76, k=12) | densenet(depth=76, growth=12) | 0.49M | 4.2 |
+| VGG11       | vgg11()                 | 32M  | 4.3 |
+| VGG16       | vgg16()                 | 34M  | 4.3 |
+| (extra) MLP | mlp() — quickstart / integration tests | — | — |
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+from . import layers as L
+from .layers import BuiltModel
+
+
+def _ch(base: int, width_mult: float) -> int:
+    c = max(int(round(base * width_mult)), 4)
+    return -(-c // 4) * 4  # round up to a multiple of 4
+
+
+def mlp(input_shape=(28, 28, 1), num_classes=10, width_mult: float = 1.0) -> BuiltModel:
+    """Small 2-hidden-layer MLP. Quickstart + fast integration tests."""
+    h1, h2 = _ch(256, width_mult), _ch(128, width_mult)
+    spec = [
+        L.flatten(),
+        L.dense(h1), L.relu(),
+        L.dense(h2), L.relu(),
+        L.dense(num_classes),
+    ]
+    return L.build("mlp", spec, input_shape, num_classes)
+
+
+def lenet5(input_shape=(28, 28, 1), num_classes=10, width_mult: float = 1.0) -> BuiltModel:
+    """LeNet-5 (Lecun et al. 1998) as used in section 4.1 (60k params)."""
+    c1, c2 = _ch(6, width_mult), _ch(16, width_mult)
+    f1, f2 = _ch(120, width_mult), _ch(84, width_mult)
+    spec = [
+        L.conv(c1, k=5, padding="SAME"), L.bn(), L.relu(), L.maxpool(2),
+        L.conv(c2, k=5, padding="VALID"), L.bn(), L.relu(), L.maxpool(2),
+        L.flatten(),
+        L.dense(f1), L.relu(),
+        L.dense(f2), L.relu(),
+        L.dense(num_classes),
+    ]
+    return L.build("lenet5", spec, input_shape, num_classes)
+
+
+def vgg7(input_shape=(32, 32, 3), num_classes=10, width_mult: float = 1.0) -> BuiltModel:
+    """The 7-layer VGG variant of the ternary-quantization literature
+    (2x128C3 - MP2 - 2x256C3 - MP2 - 2x512C3 - MP2 - 1024FC - softmax),
+    ~12M params at width_mult=1 — section 4.2."""
+    c1, c2, c3 = _ch(128, width_mult), _ch(256, width_mult), _ch(512, width_mult)
+    fc = _ch(1024, width_mult)
+    spec = []
+    for c in (c1, c1):
+        spec += [L.conv(c), L.bn(), L.relu()]
+    spec += [L.maxpool(2)]
+    for c in (c2, c2):
+        spec += [L.conv(c), L.bn(), L.relu()]
+    spec += [L.maxpool(2)]
+    for c in (c3, c3):
+        spec += [L.conv(c), L.bn(), L.relu()]
+    spec += [L.maxpool(2), L.flatten(), L.dense(fc), L.relu(), L.dense(num_classes)]
+    return L.build("vgg7", spec, input_shape, num_classes)
+
+
+def _vgg(name: str, cfg, input_shape, num_classes, width_mult: float) -> BuiltModel:
+    spec = []
+    for v in cfg:
+        if v == "M":
+            spec.append(L.maxpool(2))
+        else:
+            spec += [L.conv(_ch(v, width_mult)), L.bn(), L.relu()]
+    spec += [L.flatten(), L.dense(_ch(512, width_mult)), L.relu(),
+             L.dense(num_classes)]
+    return L.build(name, spec, input_shape, num_classes)
+
+
+def vgg11(input_shape=(32, 32, 3), num_classes=100, width_mult: float = 1.0) -> BuiltModel:
+    """VGG11 (configuration A) adapted to 32x32 — section 4.3 (32M)."""
+    cfg = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+    return _vgg("vgg11", cfg, input_shape, num_classes, width_mult)
+
+
+def vgg16(input_shape=(32, 32, 3), num_classes=100, width_mult: float = 1.0) -> BuiltModel:
+    """VGG16 (configuration D) adapted to 32x32 — section 4.3 (34M)."""
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    return _vgg("vgg16", cfg, input_shape, num_classes, width_mult)
+
+
+def densenet(input_shape=(32, 32, 3), num_classes=10, depth: int = 76,
+             growth: int = 12, width_mult: float = 1.0) -> BuiltModel:
+    """DenseNet (Huang et al. 2016) with 3 dense blocks — the L=76, k=12
+    configuration of section 4.2 (0.49M params). `width_mult` scales the
+    growth rate; `depth` must satisfy (depth - 4) % 3 == 0."""
+    if (depth - 4) % 3 != 0:
+        raise ValueError("densenet depth must be 3n+4")
+    k = max(int(round(growth * width_mult)), 2)
+    n = (depth - 4) // 3  # conv layers per dense block
+    spec = [L.conv(2 * k), L.bn(), L.relu()]  # stem: idx 0..2
+    for block in range(3):
+        for _ in range(n):
+            # pre-activation composite: BN-ReLU-Conv(k), then concat input
+            src = len(spec) - 1  # index of current feature map
+            spec += [L.bn(), L.relu(), L.conv(k)]
+            spec += [L.concat_shortcut(src)]
+        if block < 2:  # transition: BN-ReLU-Conv(1x1, compress)-AvgPool
+            spec += [L.bn(), L.relu()]
+            # compression 0.5 is resolved at build time via a marker conv
+            spec += [L.conv(-1, k=1)]  # placeholder, patched below
+            spec += [L.avgpool(2)]
+    spec += [L.bn(), L.relu(), L.global_avgpool(), L.flatten(),
+             L.dense(num_classes)]
+
+    # resolve the transition 1x1 conv widths (0.5 compression) with a dry
+    # channel walk mirroring build()'s shape inference
+    c = 0
+    chans: list = []
+    out = []
+    for s in spec:
+        if s["type"] == "conv" and s["out_ch"] == -1:
+            s = dict(s, out_ch=max(c // 2, 2))
+        if s["type"] == "conv":
+            c = s["out_ch"]
+        elif s["type"] == "concat":
+            c = chans[s["from"]] + c
+        chans.append(c)
+        out.append(s)
+    return L.build("densenet", out, input_shape, num_classes)
+
+
+def densenet40(input_shape=(32, 32, 3), num_classes=10,
+               width_mult: float = 1.0) -> BuiltModel:
+    """Reduced-depth DenseNet (L=40) for CPU-budget benches; same block
+    structure as the paper's L=76 configuration."""
+    return densenet(input_shape, num_classes, depth=40, growth=12,
+                    width_mult=width_mult)
+
+
+_ZOO = {
+    "mlp": mlp,
+    "lenet5": lenet5,
+    "vgg7": vgg7,
+    "vgg11": vgg11,
+    "vgg16": vgg16,
+    "densenet": densenet,
+    "densenet40": densenet40,
+}
+
+
+def get_model(name: str, input_shape: Tuple[int, int, int], num_classes: int,
+              width_mult: float = 1.0) -> BuiltModel:
+    """Look up a zoo model by name."""
+    if name not in _ZOO:
+        raise KeyError(f"unknown model {name!r}; have {sorted(_ZOO)}")
+    return _ZOO[name](input_shape=input_shape, num_classes=num_classes,
+                      width_mult=width_mult)

@@ -1,0 +1,157 @@
+"""Fused train/eval step builders + the flat AOT calling convention.
+
+The whole SYMOG step — forward, softmax-CE loss, backward, method-specific
+update (with the L1 Pallas kernels inlined), weight clipping — is ONE jax
+function, lowered once to a single HLO executable. The Rust coordinator then
+drives it with positional literals; nothing Python survives to runtime.
+
+Flat calling convention (manifest.json mirrors this):
+
+  train  inputs : images, labels, params[0..P), momenta[0..P),
+                  state[0..S), deltas[Q], lr, lam
+  train  outputs: loss, correct, params'[0..P), momenta'[0..P), state'[0..S)
+
+  eval   inputs : images, labels, params[0..P), state[0..S)
+  eval   outputs: loss, correct
+
+  evalq  inputs : images, labels, params[0..P), state[0..S), deltas[Q]
+  evalq  outputs: loss, correct          (weights hard-quantized with Q_N)
+
+`correct` is an f32 count of argmax hits so every tensor in the interface is
+f32 (labels are i32). All hyper-parameters that change during training
+(lr, lam) are runtime scalars; everything else is baked in via `Hyper`.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, methods
+from .layers import BuiltModel
+from .methods import Hyper
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def correct_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def make_train_step(model: BuiltModel, method: str, hp: Hyper):
+    """Returns step(images, labels, params, momenta, state, deltas, lr, lam)
+    -> (loss, correct, params', momenta', state')."""
+    kinds = [p.kind for p in model.params]
+    qidxs = [p.qidx for p in model.params]
+
+    def step(images, labels, params, momenta, state, deltas, lr, lam):
+        wt = methods.make_transform(method, deltas, lam, hp)
+
+        def loss_fn(params):
+            logits, new_state = layers.apply(
+                model, params, state, images, train=True, wt=wt,
+                use_pallas=hp.use_pallas, act_bits=hp.act_bits)
+            return cross_entropy(logits, labels), (new_state, logits)
+
+        (loss, (new_state, logits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(list(params))
+        new_params, new_momenta = methods.update_params(
+            method, kinds, qidxs, list(params), list(momenta), grads,
+            deltas, lr, lam, hp)
+        return loss, correct_count(logits, labels), new_params, new_momenta, new_state
+
+    return step
+
+
+def make_eval_step(model: BuiltModel, hp: Hyper):
+    """Float evaluation: step(images, labels, params, state) -> (loss, correct)."""
+
+    def step(images, labels, params, state):
+        logits, _ = layers.apply(model, list(params), list(state), images,
+                                 train=False, use_pallas=hp.use_pallas,
+                                 act_bits=hp.act_bits)
+        return cross_entropy(logits, labels), correct_count(logits, labels)
+
+    return step
+
+
+def make_evalq_step(model: BuiltModel, hp: Hyper):
+    """Quantized evaluation: weights replaced by Q_N(w; delta_l) — this is
+    the error rate Table 1 reports for SYMOG."""
+
+    def step(images, labels, params, state, deltas):
+        wt = methods.make_quantized_transform(deltas, hp.n_bits)
+        logits, _ = layers.apply(model, list(params), list(state), images,
+                                 train=False, wt=wt,
+                                 use_pallas=hp.use_pallas, act_bits=hp.act_bits)
+        return cross_entropy(logits, labels), correct_count(logits, labels)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# flat wrappers: jax.jit(...).lower requires a fixed positional signature
+
+
+def flatten_train(model: BuiltModel, method: str, hp: Hyper):
+    P, S = len(model.params), len(model.state)
+    step = make_train_step(model, method, hp)
+
+    def flat(*args):
+        images, labels = args[0], args[1]
+        params = list(args[2 : 2 + P])
+        momenta = list(args[2 + P : 2 + 2 * P])
+        state = list(args[2 + 2 * P : 2 + 2 * P + S])
+        deltas, lr, lam = args[2 + 2 * P + S :]
+        loss, correct, p2, v2, s2 = step(
+            images, labels, params, momenta, state, deltas, lr, lam)
+        return tuple([loss, correct] + p2 + v2 + s2)
+
+    return flat
+
+
+def flatten_eval(model: BuiltModel, hp: Hyper, quantized: bool):
+    P, S = len(model.params), len(model.state)
+    stepq = make_evalq_step(model, hp)
+    stepf = make_eval_step(model, hp)
+
+    def flat(*args):
+        images, labels = args[0], args[1]
+        params = list(args[2 : 2 + P])
+        state = list(args[2 + P : 2 + P + S])
+        if quantized:
+            return tuple(stepq(images, labels, params, state, args[2 + P + S]))
+        return tuple(stepf(images, labels, params, state))
+
+    return flat
+
+
+def train_input_specs(model: BuiltModel, batch: int) -> List[jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs in the flat train-input order."""
+    f32, i32 = jnp.float32, jnp.int32
+    img = jax.ShapeDtypeStruct((batch, *model.input_shape), f32)
+    lab = jax.ShapeDtypeStruct((batch,), i32)
+    ps = [jax.ShapeDtypeStruct(p.shape, f32) for p in model.params]
+    ss = [jax.ShapeDtypeStruct(s.shape, f32) for s in model.state]
+    deltas = jax.ShapeDtypeStruct((max(model.n_quant, 1),), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return [img, lab] + ps + ps + ss + [deltas, scalar, scalar]
+
+
+def eval_input_specs(model: BuiltModel, batch: int, quantized: bool):
+    f32, i32 = jnp.float32, jnp.int32
+    img = jax.ShapeDtypeStruct((batch, *model.input_shape), f32)
+    lab = jax.ShapeDtypeStruct((batch,), i32)
+    ps = [jax.ShapeDtypeStruct(p.shape, f32) for p in model.params]
+    ss = [jax.ShapeDtypeStruct(s.shape, f32) for s in model.state]
+    specs = [img, lab] + ps + ss
+    if quantized:
+        specs.append(jax.ShapeDtypeStruct((max(model.n_quant, 1),), jnp.float32))
+    return specs

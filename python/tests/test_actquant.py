@@ -1,0 +1,80 @@
+"""Activation quantization extension: fake_quant_act + act_bits training."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers, models, train_step
+from compile.layers import fake_quant_act
+from compile.methods import Hyper
+
+
+def rand(shape, scale=1.0, seed=0):
+    return np.random.default_rng(seed).normal(0, scale, shape).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2000), bits=st.integers(4, 8),
+       scale=st.floats(1e-3, 100.0), seed=st.integers(0, 2**31 - 1))
+def test_outputs_on_power_of_two_grid(n, bits, scale, seed):
+    x = jnp.asarray(np.abs(rand((n,), scale, seed)))  # post-ReLU: non-negative
+    q = np.asarray(fake_quant_act(x, bits))
+    qmax = 2 ** (bits - 1) - 1
+    amax = float(jnp.max(jnp.abs(x)))
+    # the delta the function chose: largest power of two with amax/delta <= qmax
+    delta = 2.0 ** -np.floor(np.log2(qmax / amax))
+    m = q / delta
+    np.testing.assert_allclose(m, np.round(m), atol=1e-3)
+    assert np.max(np.abs(m)) <= qmax + 0.5
+    # error bounded by one step of the chosen grid
+    err = np.max(np.abs(q - np.asarray(x)))
+    assert err <= delta * 0.5 + 1e-6, f"err {err} delta {delta}"
+
+
+def test_gradient_is_identity():
+    x = jnp.asarray(np.abs(rand((128,), seed=1)))
+    g = jax.grad(lambda x: jnp.sum(fake_quant_act(x, 8) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, atol=1e-6)
+
+
+def test_high_bits_near_lossless():
+    x = jnp.asarray(np.abs(rand((512,), seed=2)))
+    q = np.asarray(fake_quant_act(x, 16))
+    np.testing.assert_allclose(q, np.asarray(x), rtol=1e-3, atol=1e-4)
+
+
+def test_train_step_with_act_bits_learns():
+    m = models.get_model("mlp", (8, 8, 1), 4, 0.25)
+    hp = Hyper(use_pallas=False, act_bits=8)
+    step = jax.jit(train_step.flatten_train(m, "symog", hp))
+    params = [jnp.asarray(a) for a in layers.init_params(m, 0)]
+    momenta = [jnp.zeros_like(p) for p in params]
+    state = [jnp.asarray(a) for a in layers.init_state(m)]
+    deltas = jnp.asarray([0.25] * m.n_quant)
+    rng = np.random.default_rng(0)
+    protos = rng.normal(0, 1, (4, 8, 8, 1)).astype(np.float32)
+    P = len(params)
+    losses = []
+    for i in range(20):
+        y = rng.integers(0, 4, 16)
+        x = protos[y] + rng.normal(0, 0.4, (16, 8, 8, 1)).astype(np.float32)
+        out = step(jnp.asarray(x), jnp.asarray(y, jnp.int32), *params, *momenta,
+                   *state, deltas, jnp.float32(0.05), jnp.float32(0.5))
+        losses.append(float(out[0]))
+        params = list(out[2:2 + P])
+        momenta = list(out[2 + P:2 + 2 * P])
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_act_bits_changes_forward():
+    m = models.get_model("mlp", (8, 8, 1), 4, 0.25)
+    params = [jnp.asarray(a) for a in layers.init_params(m, 3)]
+    state = [jnp.asarray(a) for a in layers.init_state(m)]
+    x = jnp.asarray(rand((4, 8, 8, 1), seed=4))
+    l_full, _ = layers.apply(m, params, state, x, train=False)
+    l_q4, _ = layers.apply(m, params, state, x, train=False, act_bits=4)
+    # 4-bit activations must perturb the logits (but not destroy them)
+    assert not np.allclose(np.asarray(l_full), np.asarray(l_q4))
+    assert np.all(np.isfinite(np.asarray(l_q4)))

@@ -1,0 +1,73 @@
+"""AOT pipeline: HLO text generation + manifest integrity (fast config)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, ckpt
+from compile.aot import Config
+
+
+@pytest.fixture(scope="module")
+def compiled(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = Config("mlp", "symog", "synth-mnist", width_mult=0.25, batch=8,
+                 tag="aottest")
+    tag = aot.compile_config(cfg, out)
+    return os.path.join(out, tag)
+
+
+def test_hlo_text_shape(compiled):
+    for f in ("train.hlo.txt", "eval.hlo.txt", "evalq.hlo.txt"):
+        text = open(os.path.join(compiled, f)).read()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text, f
+        # interchange-format guard: text, not serialized proto
+        assert "\x00" not in text
+
+
+def test_manifest_matches_interface(compiled):
+    man = json.load(open(os.path.join(compiled, "manifest.json")))
+    text = open(os.path.join(compiled, "train.hlo.txt")).read()
+    # train inputs: images, labels, P params, P momenta, S state, deltas, lr, lam
+    P, S = len(man["params"]), len(man["state"])
+    n_inputs = 2 + 2 * P + S + 3
+    # count parameters of the ENTRY computation only (nested computations
+    # from the Pallas while-loops have their own parameter() instructions)
+    entry = text[text.index("ENTRY"):]
+    assert entry.count("parameter(") == n_inputs
+    assert man["n_quant"] == sum(1 for p in man["params"] if p["kind"] == "weight")
+    # qidx is dense over quantized params
+    qidxs = [p["qidx"] for p in man["params"] if p["kind"] == "weight"]
+    assert qidxs == list(range(man["n_quant"]))
+
+
+def test_init_ckpt_covers_manifest(compiled):
+    man = json.load(open(os.path.join(compiled, "manifest.json")))
+    _, tensors = ckpt.read_ckpt(os.path.join(compiled, "init.ckpt"))
+    by_name = {n: (k, a) for n, k, a in tensors}
+    for p in man["params"]:
+        kind, arr = by_name[p["name"]]
+        assert list(arr.shape) == p["shape"]
+        assert kind == p["kind"]
+    for s in man["state"]:
+        _, arr = by_name[s["name"]]
+        assert list(arr.shape) == s["shape"]
+    _, deltas = by_name["__deltas__"]
+    assert deltas.shape == (max(man["n_quant"], 1),)
+    assert np.all(deltas > 0)
+    # fixed-point constraint: every delta is a power of two
+    f = np.log2(deltas)
+    np.testing.assert_allclose(f, np.round(f), atol=1e-6)
+
+
+def test_layer_manifest_structure(compiled):
+    man = json.load(open(os.path.join(compiled, "manifest.json")))
+    types = [l["type"] for l in man["layers"]]
+    assert types[0] == "flatten"
+    assert types[-1] == "dense"
+    for l in man["layers"]:
+        if l["type"] in ("conv", "dense"):
+            assert isinstance(l["w"], int)

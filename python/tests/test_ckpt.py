@@ -1,0 +1,44 @@
+"""Checkpoint format roundtrip (must stay in lockstep with the Rust reader)."""
+
+import numpy as np
+import pytest
+
+from compile import ckpt
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.ckpt")
+    tensors = [
+        ("a.w", "weight", np.arange(24, dtype=np.float32).reshape(2, 3, 4)),
+        ("a.b", "bias", np.zeros(7, np.float32)),
+        ("bn.m", "state", np.ones(3, np.float32)),
+        ("__deltas__", "deltas", np.array([0.5, 0.25], np.float32)),
+    ]
+    meta = {"model": "mlp", "epoch": 3}
+    ckpt.write_ckpt(path, meta, tensors)
+    meta2, tensors2 = ckpt.read_ckpt(path)
+    assert meta2 == meta
+    assert len(tensors2) == len(tensors)
+    for (n1, k1, a1), (n2, k2, a2) in zip(tensors, tensors2):
+        assert n1 == n2 and k1 == k2
+        np.testing.assert_array_equal(a1.astype(np.float32), a2)
+
+
+def test_scalarless_shapes(tmp_path):
+    path = str(tmp_path / "s.ckpt")
+    ckpt.write_ckpt(path, {}, [("x", "weight", np.float32(3.5).reshape(()))])
+    _, [(n, k, a)] = ckpt.read_ckpt(path)
+    assert a.shape == () and float(a) == 3.5
+
+
+def test_bad_magic(tmp_path):
+    p = tmp_path / "bad.ckpt"
+    p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        ckpt.read_ckpt(str(p))
+
+
+def test_kind_codes_stable():
+    """The Rust reader hard-codes these — do not renumber."""
+    assert ckpt.KINDS == {"weight": 0, "bias": 1, "gamma": 2, "beta": 3,
+                          "state": 4, "momentum": 5, "deltas": 6}

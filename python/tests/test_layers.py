@@ -1,0 +1,126 @@
+"""layers.py: shape inference, init statistics, transform routing."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+
+
+def build_random_cnn(rng_seed: int, n_blocks: int, input_hw: int, classes: int):
+    """Deterministic pseudo-random conv stack builder (valid by construction)."""
+    rng = np.random.default_rng(rng_seed)
+    spec = []
+    hw = input_hw
+    for _ in range(n_blocks):
+        ch = int(rng.integers(4, 17))
+        k = int(rng.choice([1, 3, 5]))
+        spec.append(L.conv(ch, k=k, padding="SAME"))
+        if rng.random() < 0.5:
+            spec.append(L.bn())
+        spec.append(L.relu())
+        if hw >= 4 and rng.random() < 0.5:
+            spec.append(L.maxpool(2))
+            hw //= 2
+    spec += [L.flatten(), L.dense(classes)]
+    return spec
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(1, 4))
+def test_random_cnn_builds_and_runs(seed, n_blocks):
+    spec = build_random_cnn(seed, n_blocks, 16, 5)
+    m = L.build("rand", spec, (16, 16, 3), 5)
+    params = [jnp.asarray(a) for a in L.init_params(m, seed)]
+    state = [jnp.asarray(a) for a in L.init_state(m)]
+    x = jnp.asarray(np.random.default_rng(seed).normal(0, 1, (2, 16, 16, 3)),
+                    jnp.float32)
+    logits, _ = L.apply(m, params, state, x, train=True)
+    assert logits.shape == (2, 5)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_valid_conv_shape_inference():
+    spec = [L.conv(4, k=5, padding="VALID"), L.relu(), L.flatten(), L.dense(3)]
+    m = L.build("v", spec, (12, 12, 1), 3)
+    # VALID 5x5: 12 -> 8; flatten = 8*8*4
+    assert m.params[0].shape == (5, 5, 1, 4)
+    assert m.params[1].shape == (8 * 8 * 4, 3)
+
+
+def test_strided_conv_shapes():
+    spec = [L.conv(4, k=3, stride=2, padding="SAME"), L.flatten(), L.dense(2)]
+    m = L.build("s", spec, (9, 9, 1), 2)
+    # SAME stride 2: ceil(9/2) = 5
+    assert m.params[1].shape == (5 * 5 * 4, 2)
+    params = [jnp.asarray(a) for a in L.init_params(m, 0)]
+    x = jnp.zeros((1, 9, 9, 1), jnp.float32)
+    logits, _ = L.apply(m, params, [], x, train=False)
+    assert logits.shape == (1, 2)
+
+
+def test_dense_before_flatten_rejected():
+    with pytest.raises(ValueError, match="dense before flatten"):
+        L.build("bad", [L.dense(4)], (8, 8, 1), 4)
+
+
+def test_model_must_end_in_classes():
+    with pytest.raises(ValueError, match="must end"):
+        L.build("bad", [L.flatten(), L.dense(7)], (8, 8, 1), 4)
+
+
+def test_concat_shape_mismatch_rejected():
+    spec = [
+        L.conv(4), L.relu(), L.maxpool(2),
+        L.concat_shortcut(0),  # 4x4 vs 8x8 -> mismatch
+        L.flatten(), L.dense(2),
+    ]
+    with pytest.raises(ValueError, match="concat shape mismatch"):
+        L.build("bad", spec, (8, 8, 1), 2)
+
+
+def test_he_init_statistics():
+    spec = [L.flatten(), L.dense(256, use_bias=False), L.relu(), L.dense(10)]
+    m = L.build("he", spec, (16, 16, 4), 10)
+    params = L.init_params(m, 0)
+    w = params[0]  # (1024, 256)
+    expected_std = np.sqrt(2.0 / 1024)
+    assert abs(w.std() - expected_std) / expected_std < 0.05
+    assert abs(w.mean()) < expected_std / 10
+
+
+def test_weight_transform_applied_only_to_weights():
+    calls = []
+
+    def wt(w, qidx):
+        calls.append(qidx)
+        return w * 0.0  # zero out -> logits must be bias-only
+
+    spec = [L.flatten(), L.dense(4)]
+    m = L.build("wt", spec, (4, 4, 1), 4)
+    params = [jnp.asarray(a) + 1.0 for a in L.init_params(m, 0)]  # bias = 1
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (3, 4, 4, 1)), jnp.float32)
+    logits, _ = L.apply(m, params, [], x, train=False, wt=wt)
+    assert calls == [0]
+    np.testing.assert_allclose(np.asarray(logits), 1.0, atol=1e-6)
+
+
+def test_avgpool_and_global_avgpool():
+    spec = [L.avgpool(2), L.global_avgpool(), L.flatten(), L.dense(2)]
+    m = L.build("p", spec, (8, 8, 2), 2)
+    params = [jnp.asarray(a) for a in L.init_params(m, 0)]
+    x = jnp.ones((1, 8, 8, 2), jnp.float32)
+    logits, _ = L.apply(m, params, [], x, train=False)
+    assert logits.shape == (1, 2)
+
+
+def test_pallas_dense_path_matches_jnp():
+    spec = [L.flatten(), L.dense(32), L.relu(), L.dense(4)]
+    m = L.build("pl", spec, (8, 8, 1), 4)
+    params = [jnp.asarray(a) for a in L.init_params(m, 1)]
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (4, 8, 8, 1)), jnp.float32)
+    l_jnp, _ = L.apply(m, params, [], x, train=False, use_pallas=False)
+    l_pal, _ = L.apply(m, params, [], x, train=False, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l_jnp), np.asarray(l_pal),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,126 @@
+"""Method semantics: SYMOG vs the Table-1 comparators (BC, TWN, BR)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import methods
+from compile.kernels import ref
+from compile.methods import Hyper, make_transform, ternary_twn
+
+
+def rand(shape, scale=1.0, seed=0):
+    return np.random.default_rng(seed).normal(0, scale, shape).astype(np.float32)
+
+
+HP = Hyper()
+DELTAS = jnp.asarray([0.5, 0.25])
+
+
+class TestTWN:
+    def test_ternary_codebook(self):
+        w = jnp.asarray(rand((1000,), seed=1))
+        t = np.asarray(ternary_twn(w))
+        vals = np.unique(t)
+        assert len(vals) <= 3
+        alpha = np.max(np.abs(vals))
+        assert set(np.round(vals / max(alpha, 1e-9), 6)) <= {-1.0, 0.0, 1.0}
+
+    def test_threshold_rule(self):
+        """Weights below 0.7 E|w| must map to zero, others to +-alpha."""
+        w = np.asarray(rand((500,), seed=2))
+        thr = 0.7 * np.mean(np.abs(w))
+        t = np.asarray(ternary_twn(jnp.asarray(w)))
+        np.testing.assert_array_equal(t[np.abs(w) <= thr], 0.0)
+        assert np.all(t[np.abs(w) > thr] != 0.0)
+
+    def test_alpha_is_surviving_mean(self):
+        w = np.asarray(rand((500,), seed=3))
+        thr = 0.7 * np.mean(np.abs(w))
+        mask = np.abs(w) > thr
+        alpha = np.abs(w[mask]).mean()
+        t = np.asarray(ternary_twn(jnp.asarray(w)))
+        np.testing.assert_allclose(np.max(np.abs(t)), alpha, rtol=1e-5)
+
+    def test_ste_gradient_is_identity(self):
+        wt = make_transform("twn", DELTAS, 0.0, HP)
+        w = jnp.asarray(rand((64,), seed=4))
+        g = jax.grad(lambda w: jnp.sum(wt(w, 0) * 2.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 2.0, atol=1e-5)
+
+
+class TestBC:
+    def test_sign_forward(self):
+        wt = make_transform("bc", DELTAS, 0.0, HP)
+        w = jnp.asarray(rand((100,), seed=5))
+        out = np.asarray(wt(w, 0))
+        np.testing.assert_array_equal(out, np.sign(np.asarray(w)))
+
+    def test_ste_gradient_is_identity(self):
+        wt = make_transform("bc", DELTAS, 0.0, HP)
+        w = jnp.asarray(rand((64,), seed=6))
+        g = jax.grad(lambda w: jnp.sum(wt(w, 0) * 3.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 3.0, atol=1e-5)
+
+    def test_update_clips_to_unit(self):
+        p, v = [jnp.asarray(rand((50,), 2.0, 7))], [jnp.zeros(50)]
+        g = [jnp.asarray(rand((50,), 2.0, 8))]
+        p2, _ = methods.update_params(
+            "bc", ["weight"], [0], p, v, g, DELTAS, 0.5, 0.0, HP)
+        assert np.all(np.abs(np.asarray(p2[0])) <= 1.0)
+
+
+class TestBR:
+    def test_lambda_zero_is_identity(self):
+        wt = make_transform("br", DELTAS, jnp.float32(0.0), HP)
+        w = jnp.asarray(rand((100,), seed=9))
+        np.testing.assert_allclose(np.asarray(wt(w, 0)), np.asarray(w), atol=1e-6)
+
+    def test_lambda_inf_is_quantized(self):
+        wt = make_transform("br", DELTAS, jnp.float32(1e6), HP)
+        w = jnp.asarray(rand((100,), seed=10))
+        q = ref.quantize_ref(w, DELTAS[0], HP.n_bits)
+        np.testing.assert_allclose(np.asarray(wt(w, 0)), np.asarray(q), atol=1e-4)
+
+    def test_gradient_shrinks_with_lambda(self):
+        w = jnp.asarray(rand((64,), seed=11))
+        for lam, expect in [(0.0, 1.0), (1.0, 0.5), (3.0, 0.25)]:
+            wt = make_transform("br", DELTAS, jnp.float32(lam), HP)
+            g = jax.grad(lambda w: jnp.sum(wt(w, 0)))(w)
+            np.testing.assert_allclose(np.asarray(g), expect, atol=1e-5)
+
+
+class TestSymogUpdate:
+    def test_pallas_and_ref_paths_agree(self):
+        p = [jnp.asarray(rand((300,), seed=12))]
+        v = [jnp.asarray(rand((300,), 0.1, 13))]
+        g = [jnp.asarray(rand((300,), 0.1, 14))]
+        out_pallas = methods.update_params(
+            "symog", ["weight"], [0], p, v, g, DELTAS, 0.01, 5.0,
+            Hyper(use_pallas=True))
+        out_ref = methods.update_params(
+            "symog", ["weight"], [0], p, v, g, DELTAS, 0.01, 5.0,
+            Hyper(use_pallas=False))
+        np.testing.assert_allclose(
+            np.asarray(out_pallas[0][0]), np.asarray(out_ref[0][0]), atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out_pallas[1][0]), np.asarray(out_ref[1][0]), atol=1e-6)
+
+    def test_non_weight_params_not_clipped(self):
+        """gamma/beta/bias follow plain Nesterov — no quantization domain."""
+        p = [jnp.asarray(rand((50,), 3.0, 15))]
+        v = [jnp.zeros(50)]
+        g = [jnp.zeros(50)]
+        p2, _ = methods.update_params(
+            "symog", ["gamma"], [None], p, v, g, DELTAS, 0.01, 100.0, HP)
+        np.testing.assert_allclose(np.asarray(p2[0]), np.asarray(p[0]), atol=1e-6)
+
+
+class TestQuantizedTransform:
+    def test_matches_ref_quantizer(self):
+        wt = methods.make_quantized_transform(DELTAS, 2)
+        w = jnp.asarray(rand((128,), seed=16))
+        np.testing.assert_array_equal(
+            np.asarray(wt(w, 1)),
+            np.asarray(ref.quantize_ref(w, DELTAS[1], 2)))

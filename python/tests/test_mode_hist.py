@@ -1,0 +1,60 @@
+"""Mode-occupancy histogram kernel vs oracle (Fig 3/4 probe)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mode_hist, ref
+
+
+def rand(shape, scale=1.0, seed=0):
+    return np.random.default_rng(seed).normal(0, scale, shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [1, 5, 1024, 4097])
+@pytest.mark.parametrize("n_bits", [2, 3, 4])
+def test_matches_ref(n, n_bits):
+    w = rand((n,), seed=n * n_bits)
+    got = np.asarray(mode_hist(w, 0.5, n_bits))
+    want = np.asarray(ref.mode_hist_ref(jnp.asarray(w), 0.5, n_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 5000), f=st.integers(-4, 4),
+       n_bits=st.integers(2, 5), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref_hypothesis(n, f, n_bits, seed):
+    w = rand((n,), seed=seed)
+    delta = 2.0 ** (-f)
+    got = np.asarray(mode_hist(w, delta, n_bits))
+    want = np.asarray(ref.mode_hist_ref(jnp.asarray(w), delta, n_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 3000), n_bits=st.integers(2, 5),
+       seed=st.integers(0, 2**31 - 1))
+def test_total_mass(n, n_bits, seed):
+    """Histogram counts sum to the number of weights (padding excluded)."""
+    w = rand((n,), seed=seed)
+    h = np.asarray(mode_hist(w, 0.25, n_bits))
+    assert h.sum() == n
+    assert len(h) == 2 ** n_bits - 1
+
+
+def test_known_assignment():
+    delta = 1.0
+    w = np.array([-3.0, -1.0, -0.4, 0.0, 0.4, 0.6, 1.2], np.float32)
+    # modes for 2 bits: {-1, 0, 1}; 0.5 rounds away from zero
+    h = np.asarray(mode_hist(w, delta, 2))
+    np.testing.assert_array_equal(h, [2, 3, 2])
+
+
+def test_ternary_distribution_shape():
+    """A trained-SYMOG-like trimodal sample lands in three clean bins."""
+    rng = np.random.default_rng(0)
+    modes = rng.choice([-0.5, 0.0, 0.5], 3000, p=[0.3, 0.4, 0.3])
+    w = (modes + rng.normal(0, 0.01, 3000)).astype(np.float32)
+    h = np.asarray(mode_hist(w, 0.5, 2))
+    np.testing.assert_array_equal(h, np.bincount(((modes / 0.5) + 1).astype(int), minlength=3))

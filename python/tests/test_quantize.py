@@ -1,0 +1,101 @@
+"""Pallas quantizer kernel vs the jnp oracle + quantizer invariants (Eq. 1)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize, ref
+
+SHAPES = [(1,), (7,), (128,), (1024,), (65, 129), (3, 5, 7), (2, 3, 4, 5)]
+
+
+def rand(shape, scale=2.0, seed=0):
+    return (np.random.default_rng(seed).normal(0, scale, shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("n_bits", [2, 3, 4, 8])
+def test_kernel_matches_ref(shape, n_bits):
+    x = rand(shape, seed=hash((shape, n_bits)) % 2**31)
+    delta = 0.25
+    got = quantize(x, delta, n_bits)
+    want = ref.quantize_ref(jnp.asarray(x), delta, n_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 4000),
+    n_bits=st.integers(2, 8),
+    f=st.integers(-6, 6),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 10.0),
+)
+def test_kernel_matches_ref_hypothesis(n, n_bits, f, seed, scale):
+    x = rand((n,), scale=scale, seed=seed)
+    delta = 2.0 ** (-f)
+    got = np.asarray(quantize(x, delta, n_bits))
+    want = np.asarray(ref.quantize_ref(jnp.asarray(x), delta, n_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2000), n_bits=st.integers(2, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_idempotent(n, n_bits, seed):
+    """Q(Q(x)) == Q(x): quantized values are fixed points of Q."""
+    x = rand((n,), seed=seed)
+    q1 = np.asarray(quantize(x, 0.5, n_bits))
+    q2 = np.asarray(quantize(q1, 0.5, n_bits))
+    np.testing.assert_array_equal(q1, q2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2000), n_bits=st.integers(2, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_odd_symmetry(n, n_bits, seed):
+    """Q(-x) == -Q(x): the symmetric codebook of section 3.1."""
+    x = rand((n,), seed=seed)
+    qp = np.asarray(quantize(x, 0.25, n_bits))
+    qn = np.asarray(quantize(-x, 0.25, n_bits))
+    np.testing.assert_array_equal(qp, -qn)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2000), n_bits=st.integers(2, 6),
+       f=st.integers(-4, 4), seed=st.integers(0, 2**31 - 1))
+def test_output_in_codebook(n, n_bits, f, seed):
+    """Every output is m * delta with |m| <= 2^{N-1}-1 integer mantissa."""
+    delta = 2.0 ** (-f)
+    x = rand((n,), scale=5 * delta, seed=seed)
+    q = np.asarray(quantize(x, delta, n_bits))
+    m = q / delta
+    qmax = 2 ** (n_bits - 1) - 1
+    assert np.all(np.abs(m - np.round(m)) < 1e-5)
+    assert np.all(np.abs(m) <= qmax + 1e-5)
+
+
+def test_quantization_error_bounded():
+    """|x - Q(x)| <= delta/2 inside the clip range."""
+    x = rand((5000,), scale=0.3)
+    delta = 0.25
+    inside = np.abs(x) <= delta * 1.0  # well within the 2-bit range
+    q = np.asarray(quantize(x, delta, 2))
+    assert np.all(np.abs(x[inside] - q[inside]) <= delta / 2 + 1e-6)
+
+
+def test_fig2_transfer_curve():
+    """The 2-bit quantizer of Figure 2: ternary plateaus at {-D, 0, D}."""
+    delta = 1.0
+    x = np.linspace(-2, 2, 401).astype(np.float32)
+    q = np.asarray(quantize(x, delta, 2))
+    assert set(np.unique(q)) == {-1.0, 0.0, 1.0}
+    assert q[x < -0.5][-1] == -1.0
+    assert np.all(q[np.abs(x) < 0.5] == 0.0)
+    assert np.all(q[x >= 0.5] == 1.0)
+
+
+def test_dtype_preserved():
+    x = rand((33,)).astype(np.float32)
+    assert quantize(x, 0.5, 2).dtype == jnp.float32

@@ -1,0 +1,74 @@
+"""SYMOG regularizer-gradient kernel vs oracle (Eq. 4) + analytic checks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import reg_grad, ref
+
+
+def rand(shape, scale=1.0, seed=0):
+    return np.random.default_rng(seed).normal(0, scale, shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", [(5,), (1024,), (31, 67), (4, 4, 3, 8)])
+@pytest.mark.parametrize("n_bits", [2, 3, 4])
+def test_matches_ref(shape, n_bits):
+    w = rand(shape, seed=abs(hash((shape, n_bits))) % 2**31)
+    got = np.asarray(reg_grad(w, 0.25, n_bits))
+    want = np.asarray(ref.reg_grad_ref(jnp.asarray(w), 0.25, n_bits))
+    np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 3000), f=st.integers(-5, 5),
+       n_bits=st.integers(2, 6), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref_hypothesis(n, f, n_bits, seed):
+    w = rand((n,), seed=seed)
+    delta = 2.0 ** (-f)
+    got = np.asarray(reg_grad(w, delta, n_bits))
+    want = np.asarray(ref.reg_grad_ref(jnp.asarray(w), delta, n_bits))
+    np.testing.assert_allclose(got, want, atol=1e-7)
+
+
+def test_gradient_is_scaled_quant_error():
+    """dR/dw == (2/M) * (w - Q(w)) exactly (the paper's closed form)."""
+    w = rand((777,), seed=3)
+    g = np.asarray(reg_grad(w, 0.5, 2))
+    q = np.asarray(ref.quantize_ref(jnp.asarray(w), 0.5, 2))
+    np.testing.assert_allclose(g, (2.0 / w.size) * (w - q), atol=1e-7)
+
+
+def test_zero_at_modes():
+    """Weights sitting exactly on a fixed-point mode get zero gradient."""
+    delta = 0.25
+    w = np.array([-delta, 0.0, delta], np.float32)
+    g = np.asarray(reg_grad(w, delta, 2))
+    np.testing.assert_array_equal(g, np.zeros_like(w))
+
+
+def test_matches_autodiff_of_R():
+    """The closed form equals jax.grad of R = (1/M)||w - stop_grad(Q(w))||^2.
+
+    This validates the paper's Eq. 4 derivation (dQ/dw treated as 0)."""
+    w = jnp.asarray(rand((256,), seed=9))
+    delta, n_bits = 0.5, 2
+
+    def R(w):
+        q = jax.lax.stop_gradient(ref.quantize_ref(w, delta, n_bits))
+        return jnp.sum((w - q) ** 2) / w.size
+
+    auto = jax.grad(R)(w)
+    closed = reg_grad(np.asarray(w), delta, n_bits)
+    np.testing.assert_allclose(np.asarray(auto), np.asarray(closed), atol=1e-7)
+
+
+def test_pull_direction():
+    """Gradient descent on R moves weights toward their nearest mode."""
+    w = rand((512,), seed=11)
+    g = np.asarray(reg_grad(w, 0.25, 2))
+    q = np.asarray(ref.quantize_ref(jnp.asarray(w), 0.25, 2))
+    w2 = w - 50.0 * g  # one large step
+    assert np.linalg.norm(w2 - q) < np.linalg.norm(w - q)

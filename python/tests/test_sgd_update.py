@@ -1,0 +1,92 @@
+"""Fused SYMOG update kernel vs oracle (Algorithm 1, lines 14-17)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sgd_update, ref
+
+
+def rand(shape, scale=1.0, seed=0):
+    return np.random.default_rng(seed).normal(0, scale, shape).astype(np.float32)
+
+
+def run_both(w, v, g, delta, lr, lam, **kw):
+    got = sgd_update(w, v, g, delta, lr, lam, **kw)
+    want = ref.sgd_update_ref(
+        jnp.asarray(w), jnp.asarray(v), jnp.asarray(g), delta, lr=lr, lam=lam,
+        momentum=kw.get("momentum", 0.9), n_bits=kw.get("n_bits", 2),
+        weight_decay=kw.get("weight_decay", 0.0), clip=kw.get("clip", True))
+    return got, want
+
+
+@pytest.mark.parametrize("shape", [(3,), (1024,), (65, 67)])
+@pytest.mark.parametrize("clip", [True, False])
+def test_matches_ref(shape, clip):
+    seed = abs(hash((shape, clip))) % 2**31
+    w, v, g = rand(shape, seed=seed), rand(shape, 0.1, seed + 1), rand(shape, 0.1, seed + 2)
+    (wn, vn), (wr, vr) = run_both(w, v, g, 0.25, 0.01, 5.0, clip=clip)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(wr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vr), atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 2000), f=st.integers(-4, 4), n_bits=st.integers(2, 4),
+       lr=st.floats(1e-4, 0.1), lam=st.floats(0.0, 100.0),
+       wd=st.floats(0.0, 1e-2), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref_hypothesis(n, f, n_bits, lr, lam, wd, seed):
+    delta = 2.0 ** (-f)
+    w, v, g = rand((n,), seed=seed), rand((n,), 0.1, seed + 1), rand((n,), 0.1, seed + 2)
+    (wn, vn), (wr, vr) = run_both(
+        w, v, g, delta, lr, lam, n_bits=n_bits, weight_decay=wd)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(wr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vr), atol=2e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 1000), n_bits=st.integers(2, 4),
+       f=st.integers(-3, 3), seed=st.integers(0, 2**31 - 1))
+def test_clip_bounds(n, n_bits, f, seed):
+    """After a clipped update every weight is within +-delta (2^{N-1}-1)."""
+    delta = 2.0 ** (-f)
+    w = rand((n,), scale=3 * delta, seed=seed)
+    v, g = rand((n,), 1.0, seed + 1), rand((n,), 1.0, seed + 2)
+    wn, _ = sgd_update(w, v, g, delta, 0.1, 10.0, n_bits=n_bits, clip=True)
+    bound = delta * (2 ** (n_bits - 1) - 1)
+    assert np.all(np.abs(np.asarray(wn)) <= bound + 1e-6)
+
+
+def test_no_clip_can_exceed():
+    """Without clipping (the Fig-4 ablation) weights may leave the domain."""
+    w = np.full(100, 0.49, np.float32)
+    v = np.full(100, 0.5, np.float32)   # momentum pushing outward
+    g = np.full(100, -1.0, np.float32)
+    wn, _ = sgd_update(w, v, g, 0.5, 0.1, 0.0, clip=False)
+    assert np.any(np.abs(np.asarray(wn)) > 0.5)
+
+
+def test_zero_lambda_is_plain_nesterov():
+    """lam=0, wd=0 reduces to textbook Nesterov momentum."""
+    w, v, g = rand((257,), seed=1), rand((257,), 0.1, 2), rand((257,), 0.1, 3)
+    wn, vn = sgd_update(w, v, g, 0.5, 0.05, 0.0, clip=False)
+    v_exp = 0.9 * v - 0.05 * g
+    w_exp = w + 0.9 * v_exp - 0.05 * g
+    np.testing.assert_allclose(np.asarray(vn), v_exp, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(wn), w_exp, atol=1e-6)
+
+
+def test_large_lambda_converges_to_modes():
+    """Iterating the update with huge lambda and zero task gradient collapses
+    weights onto the fixed-point codebook — the SYMOG end state (Fig 1)."""
+    # per-step contraction toward the mode is lr*lam*2/M; pick values with
+    # rate ~0.16 so 200 steps shrink the residual by ~1e-15
+    delta = 0.25
+    w = rand((128,), scale=0.2, seed=7)
+    v = np.zeros_like(w)
+    g = np.zeros_like(w)
+    for _ in range(200):
+        w, v = (np.asarray(t) for t in sgd_update(
+            w, v, g, delta, 0.01, 1000.0, momentum=0.0))
+    q = np.asarray(ref.quantize_ref(jnp.asarray(w), delta, 2))
+    assert np.max(np.abs(w - q)) < 1e-3

@@ -1,0 +1,166 @@
+"""End-to-end train-step semantics for every method, plus gradient checks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import layers, models, train_step
+from compile.kernels import ref
+from compile.methods import METHODS, Hyper
+
+RNG = np.random.default_rng(42)
+
+
+_PROTOS = {}
+
+
+def toy_batch(m, bs=16, seed=0):
+    """Learnable toy data: FIXED class prototypes + per-batch noise."""
+    key = (m.num_classes, m.input_shape)
+    if key not in _PROTOS:
+        _PROTOS[key] = np.random.default_rng(1234).normal(
+            0, 1, (m.num_classes, *m.input_shape)).astype(np.float32)
+    protos = _PROTOS[key]
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, m.num_classes, bs)
+    x = protos[y] + rng.normal(0, 0.5, (bs, *m.input_shape)).astype(np.float32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+def fresh(m, seed=0):
+    params = [jnp.asarray(a) for a in layers.init_params(m, seed)]
+    momenta = [jnp.zeros_like(p) for p in params]
+    state = [jnp.asarray(a) for a in layers.init_state(m)]
+    deltas = jnp.asarray(
+        [ref.optimal_delta_ref(p, 2)[0]
+         for p, pp in zip(params, m.params) if pp.kind == "weight"] or [1.0],
+        jnp.float32)
+    return params, momenta, state, deltas
+
+
+MLP = models.get_model("mlp", (28, 28, 1), 10, 0.5)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_loss_decreases(method):
+    hp = Hyper(use_pallas=False)  # jnp path: fast tracing for the sweep
+    step = jax.jit(train_step.flatten_train(MLP, method, hp))
+    params, momenta, state, deltas = fresh(MLP)
+    P, S = len(params), len(state)
+    first = last = None
+    for i in range(25):
+        x, y = toy_batch(MLP, seed=i)
+        lam = jnp.float32(min(0.1 * i, 1.0)) if method in ("symog", "br") else jnp.float32(0.0)
+        out = step(x, y, *params, *momenta, *state, deltas, jnp.float32(0.05), lam)
+        loss = float(out[0])
+        params = list(out[2:2 + P])
+        momenta = list(out[2 + P:2 + 2 * P])
+        state = list(out[2 + 2 * P:])
+        first = first if first is not None else loss
+        last = loss
+    assert last < first * 0.7, f"{method}: {first} -> {last}"
+
+
+def test_symog_pallas_matches_ref_path():
+    """The full train step with Pallas kernels == with jnp oracles."""
+    hp_p, hp_r = Hyper(use_pallas=True), Hyper(use_pallas=False)
+    sp = jax.jit(train_step.flatten_train(MLP, "symog", hp_p))
+    sr = jax.jit(train_step.flatten_train(MLP, "symog", hp_r))
+    params, momenta, state, deltas = fresh(MLP)
+    x, y = toy_batch(MLP, seed=99)
+    args = (x, y, *params, *momenta, *state, deltas, jnp.float32(0.01), jnp.float32(5.0))
+    op, orf = sp(*args), sr(*args)
+    for a, b in zip(op, orf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_symog_weights_stay_in_domain():
+    hp = Hyper(use_pallas=False, clip=True)
+    step = jax.jit(train_step.flatten_train(MLP, "symog", hp))
+    params, momenta, state, deltas = fresh(MLP)
+    P, S = len(params), len(state)
+    for i in range(10):
+        x, y = toy_batch(MLP, seed=i)
+        out = step(x, y, *params, *momenta, *state, deltas,
+                   jnp.float32(0.1), jnp.float32(10.0))
+        params = list(out[2:2 + P])
+        momenta = list(out[2 + P:2 + 2 * P])
+        state = list(out[2 + 2 * P:])
+    for p, meta in zip(params, MLP.params):
+        if meta.kind == "weight":
+            bound = float(deltas[meta.qidx])  # qmax = 1 for 2 bits
+            assert np.all(np.abs(np.asarray(p)) <= bound + 1e-6)
+
+
+def test_eval_consistency_with_train_forward():
+    """eval on the same batch gives the same loss as the train forward
+    (baseline method, BN batch-stats aside: use a BN-free model)."""
+    hp = Hyper(use_pallas=False)
+    step = jax.jit(train_step.flatten_train(MLP, "baseline", hp))
+    ev = jax.jit(train_step.flatten_eval(MLP, hp, False))
+    params, momenta, state, deltas = fresh(MLP)
+    x, y = toy_batch(MLP, seed=5)
+    out = step(x, y, *params, *momenta, *state, deltas,
+               jnp.float32(0.0), jnp.float32(0.0))
+    el, ec = ev(x, y, *params, *state)
+    np.testing.assert_allclose(float(out[0]), float(el), rtol=1e-5)
+    assert float(out[1]) == float(ec)
+
+
+def test_evalq_equals_eval_on_quantized_weights():
+    """evalq(params) == eval(Q(params)): the quantized-eval executable is
+    exactly post-training quantization of the weight tensors."""
+    hp = Hyper(use_pallas=False)
+    ev = jax.jit(train_step.flatten_eval(MLP, hp, False))
+    evq = jax.jit(train_step.flatten_eval(MLP, hp, True))
+    params, _, state, deltas = fresh(MLP)
+    x, y = toy_batch(MLP, seed=6)
+    lq, cq = evq(x, y, *params, *state, deltas)
+    qparams = [
+        ref.quantize_ref(p, deltas[meta.qidx], 2) if meta.kind == "weight" else p
+        for p, meta in zip(params, MLP.params)]
+    lf, cf = ev(x, y, *qparams, *state)
+    np.testing.assert_allclose(float(lq), float(lf), rtol=1e-5)
+    assert float(cq) == float(cf)
+
+
+def test_gradient_against_finite_differences():
+    """Spot-check the fused step's task gradient with central differences on
+    a few random weight coordinates (baseline method, no regularizer)."""
+    hp = Hyper(use_pallas=False)
+    m = models.get_model("mlp", (8, 8, 1), 4, 0.25)
+    params = [jnp.asarray(a) for a in layers.init_params(m, 3)]
+    state = [jnp.asarray(a) for a in layers.init_state(m)]
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (8, 8, 8, 1)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, 8), jnp.int32)
+
+    def loss_of(params):
+        logits, _ = layers.apply(m, params, state, x, train=False)
+        return train_step.cross_entropy(logits, y)
+
+    grads = jax.grad(lambda ps: loss_of(ps))(params)
+    eps = 1e-3
+    for pi in [0, 2]:
+        flat = np.asarray(params[pi]).ravel()
+        for ci in rng.choice(flat.size, 3, replace=False):
+            delta_vec = np.zeros_like(flat)
+            delta_vec[ci] = eps
+            pplus = [p if i != pi else jnp.asarray(
+                (flat + delta_vec).reshape(params[pi].shape)) for i, p in enumerate(params)]
+            pminus = [p if i != pi else jnp.asarray(
+                (flat - delta_vec).reshape(params[pi].shape)) for i, p in enumerate(params)]
+            fd = (float(loss_of(pplus)) - float(loss_of(pminus))) / (2 * eps)
+            an = float(np.asarray(grads[pi]).ravel()[ci])
+            assert abs(fd - an) < 5e-3, (pi, ci, fd, an)
+
+
+def test_correct_count_range():
+    hp = Hyper(use_pallas=False)
+    ev = jax.jit(train_step.flatten_eval(MLP, hp, False))
+    params, _, state, _ = fresh(MLP)
+    x, y = toy_batch(MLP, bs=32, seed=8)
+    _, c = ev(x, y, *params, *state)
+    assert 0.0 <= float(c) <= 32.0

@@ -1,0 +1,228 @@
+//! Hot-path microbenchmarks (the §Perf instrument): where does a training
+//! step spend its time, and how fast are the L3 substrates?
+//!
+//!   cargo bench --bench hotpath
+//!
+//! Sections:
+//!   1. train-step latency breakdown (batch assembly / literal upload /
+//!      execute) for the lenet5 artifact — the L3 coordinator target is
+//!      <10% of step time outside `execute`.
+//!   2. eval + integer-engine throughput.
+//!   3. substrate microbenches: quantizer, solver, mode tracking, synth-data.
+
+use anyhow::Result;
+use symog::bench::{bench, bench_budgeted, fmt_time, Stats};
+use symog::coordinator::{ModeTracker, Trainer};
+use symog::data::{AugmentConfig, BatchIter, Preset};
+use symog::driver::artifacts_root;
+use symog::fixedpoint;
+use symog::inference::IntModel;
+use symog::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Runtime};
+use symog::util::rng::Rng;
+
+fn main() -> Result<()> {
+    println!("== SYMOG hot-path benchmarks ==\n");
+    // SYMOG_HOTPATH=substrates|runtime|engine runs one section only
+    let section = std::env::var("SYMOG_HOTPATH").unwrap_or_default();
+    let mut report: Vec<Stats> = Vec::new();
+
+    if section.is_empty() || section == "substrates" {
+        substrate_benches(&mut report);
+    }
+    if section.is_empty() || section == "runtime" || section == "engine" {
+        if let Err(e) = runtime_benches(&mut report, &section) {
+            println!("(runtime benches skipped: {e:#})");
+        }
+    }
+
+    println!("\n== summary ==");
+    for s in &report {
+        println!("{}", s.row());
+    }
+    std::fs::create_dir_all("results").ok();
+    let mut csv = String::from("name,iters,mean_s,median_s,p95_s,min_s\n");
+    for s in &report {
+        csv.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            s.name, s.iters, s.mean_s, s.median_s, s.p95_s, s.min_s
+        ));
+    }
+    std::fs::write("results/hotpath.csv", csv)?;
+    println!("-> results/hotpath.csv");
+    Ok(())
+}
+
+fn substrate_benches(report: &mut Vec<Stats>) {
+    println!("--- substrates ---");
+    let mut rng = Rng::new(0);
+    let w: Vec<f32> = (0..1_000_000).map(|_| rng.normal() * 0.3).collect();
+    let mut out = vec![0f32; w.len()];
+
+    let s = bench("quantize_slice 1M f32", 2, 20, || {
+        fixedpoint::quantize_slice(&w, 0.25, 2, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!("{}  ({:.0} Melem/s)", s.row(), s.throughput(w.len()) / 1e6);
+    report.push(s);
+
+    let s = bench("optimal_delta_refined 1M f32", 1, 10, || {
+        std::hint::black_box(fixedpoint::optimal_delta_refined(&w, 2));
+    });
+    println!("{}", s.row());
+    report.push(s);
+
+    let s = bench("mode_indices 1M f32", 2, 20, || {
+        std::hint::black_box(fixedpoint::mode_indices(&w, 0.25, 2));
+    });
+    println!("{}", s.row());
+    report.push(s);
+
+    let mut tracker = ModeTracker::new(1, 2);
+    tracker.record([(w.as_slice(), 0.25f32)].into_iter());
+    let s = bench("tracker.record 1M weights", 1, 10, || {
+        std::hint::black_box(tracker.record([(w.as_slice(), 0.25f32)].into_iter()));
+    });
+    println!("{}", s.row());
+    report.push(s);
+
+    let s = bench("synth-cifar10 generate 1k imgs", 1, 5, || {
+        std::hint::black_box(symog::data::synth_dataset(
+            &Preset::SynthCifar10.spec(),
+            1000,
+            1,
+        ));
+    });
+    println!("{}", s.row());
+    report.push(s);
+
+    let (train, _) = Preset::SynthCifar10.load(2048, 64, 0);
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    let s = bench("batch assembly 64x32x32x3 (augmented)", 5, 50, || {
+        let mut it = BatchIter::new(&train, 64, 1, 0, AugmentConfig::cifar());
+        it.next_into(&mut images, &mut labels);
+        std::hint::black_box(&images);
+    });
+    println!("{}", s.row());
+    report.push(s);
+}
+
+fn runtime_benches(report: &mut Vec<Stats>, section: &str) -> Result<()> {
+    println!("\n--- runtime hot path (lenet5 symog artifact) ---");
+    let rt = Runtime::cpu()?;
+    let tag = std::env::var("SYMOG_HOTPATH_TAG")
+        .unwrap_or_else(|_| "lenet5-symog-synth-mnist-w1-b2".to_string());
+    let dir = artifacts_root().join(&tag);
+    println!("artifact: {tag}");
+    let art = rt.load_artifact(&dir)?;
+    let man = &art.manifest;
+    let batch = man.batch;
+    let (train, test) = Preset::SynthMnist.load(2048, 512, 0);
+    let mut trainer = Trainer::from_init(&art)?;
+    if section == "engine" {
+        let ck = trainer.to_checkpoint()?;
+        let model = IntModel::build(man, &ck)?;
+        let s = bench_budgeted("integer engine 64 imgs", 1, 15.0, 50, || {
+            std::hint::black_box(
+                model
+                    .accuracy(&test.images[..64 * test.image_elems()], &test.labels[..64], 64)
+                    .unwrap(),
+            );
+        });
+        println!("{}  ({:.0} imgs/s)", s.row(), s.throughput(64));
+        report.push(s);
+        return Ok(());
+    }
+
+    // batch assembly alone
+    let mut images = Vec::new();
+    let mut labels = Vec::new();
+    let mut it = BatchIter::new(&train, batch, 1, 0, AugmentConfig::none());
+    it.next_into(&mut images, &mut labels);
+    let img_dims = [batch, man.input_shape[0], man.input_shape[1], man.input_shape[2]];
+
+    let s = bench("literal upload (images+labels)", 5, 100, || {
+        std::hint::black_box(literal_f32(&images, &img_dims).unwrap());
+        std::hint::black_box(literal_i32(&labels, &[batch]).unwrap());
+    });
+    println!("{}", s.row());
+    report.push(s.clone());
+    let upload = s.median_s;
+
+    // full train step through the coordinator (includes upload + download)
+    let s = bench_budgeted("train step end-to-end (batch 64)", 3, 10.0, 200, || {
+        let mut opts = symog::coordinator::TrainOptions::paper(1);
+        opts.steps_per_epoch = Some(1);
+        opts.seed = 1;
+        trainer.run_epoch(&train, &opts, 0.01, 1.0).unwrap();
+    });
+    println!("{}  ({:.1} imgs/s)", s.row(), s.throughput(batch));
+    let step = s.median_s;
+    report.push(s);
+
+    // execute-only: pre-built literals, direct run()
+    let deltas_lit = literal_f32(&trainer.deltas, &[man.deltas_len()])?;
+    let img_lit = literal_f32(&images, &img_dims)?;
+    let lab_lit = literal_i32(&labels, &[batch])?;
+    let lr_lit = literal_scalar_f32(0.01);
+    let lam_lit = literal_scalar_f32(1.0);
+    // stable state snapshot for pure-execute timing
+    let ck = trainer.to_checkpoint()?;
+    let t2 = Trainer::from_checkpoint(&art, &ck, false)?;
+    let params: Vec<xla::Literal> = (0..man.params.len())
+        .map(|i| literal_f32(&t2.param_host(i).unwrap(), &man.params[i].shape).unwrap())
+        .collect();
+    let zeros: Vec<xla::Literal> = man
+        .params
+        .iter()
+        .map(|p| literal_f32(&vec![0.0; p.numel()], &p.shape).unwrap())
+        .collect();
+    let state: Vec<xla::Literal> = man
+        .state
+        .iter()
+        .map(|st| {
+            let t = ck.find(&st.name).unwrap();
+            literal_f32(&t.data, &st.shape).unwrap()
+        })
+        .collect();
+    let s = bench_budgeted("execute only (train exe)", 3, 10.0, 200, || {
+        let mut args: Vec<&xla::Literal> = vec![&img_lit, &lab_lit];
+        args.extend(params.iter());
+        args.extend(zeros.iter());
+        args.extend(state.iter());
+        args.push(&deltas_lit);
+        args.push(&lr_lit);
+        args.push(&lam_lit);
+        std::hint::black_box(run(&art.train, &args).unwrap());
+    });
+    println!("{}", s.row());
+    let exec = s.median_s;
+    report.push(s);
+    println!(
+        "coordinator overhead: step {} vs execute {} -> {:.1}% outside execute (target <10%)",
+        fmt_time(step),
+        fmt_time(exec),
+        (step - exec) / step * 100.0,
+    );
+    println!("(upload share: {:.1}%)", upload / step * 100.0);
+
+    // eval throughput
+    let s = bench_budgeted("evalq full test set (512 imgs)", 1, 15.0, 50, || {
+        std::hint::black_box(trainer.evaluate(&test, true).unwrap());
+    });
+    println!("{}  ({:.0} imgs/s)", s.row(), s.throughput(test.len()));
+    report.push(s);
+
+    // integer engine throughput
+    let model = IntModel::build(man, &ck)?;
+    let s = bench_budgeted("integer engine 64 imgs", 1, 15.0, 50, || {
+        std::hint::black_box(
+            model
+                .accuracy(&test.images[..64 * test.image_elems()], &test.labels[..64], 64)
+                .unwrap(),
+        );
+    });
+    println!("{}  ({:.0} imgs/s)", s.row(), s.throughput(64));
+    report.push(s);
+    Ok(())
+}

@@ -1,0 +1,163 @@
+//! Regenerates the paper's **Table 1**: quantized error rates for
+//! {synth-MNIST x LeNet5, synth-CIFAR10 x {VGG7, DenseNet},
+//!  synth-CIFAR100 x {VGG11, VGG16}} under SYMOG and the comparator
+//! methods (BC, TWN, BR) plus the FP32 baseline.
+//!
+//! Every method follows the paper's protocol: FP32 pretraining, then the
+//! quantized method initialized from the pretrained weights. The absolute
+//! numbers differ from the paper (synthetic data, width-scaled models —
+//! DESIGN.md §Substitutions); the comparison that must reproduce is the
+//! ORDERING: SYMOG ~ FP32 baseline, SYMOG < TWN/BR < BC.
+//!
+//!   SYMOG_BENCH_BUDGET=smoke|small|full cargo bench --bench table1
+
+use anyhow::Result;
+use symog::bench::Budget;
+use symog::config::Experiment;
+use symog::data::Preset;
+use symog::driver::{self, artifacts_root};
+use symog::report::{render_table1, Table1Row};
+use symog::runtime::Runtime;
+
+struct Block {
+    dataset: Preset,
+    model: &'static str,
+    artifact_model: &'static str, // tag fragment: "<model>-<method>-<dataset>-<w>"
+    suffix: &'static str,
+    methods: &'static [&'static str],
+    augment: bool,
+}
+
+const BLOCKS: &[Block] = &[
+    Block {
+        dataset: Preset::SynthMnist,
+        model: "LeNet5",
+        artifact_model: "lenet5",
+        suffix: "synth-mnist-w1-b2",
+        methods: &["symog", "bc", "twn", "br"],
+        augment: false,
+    },
+    Block {
+        dataset: Preset::SynthCifar10,
+        model: "VGG7 (0.25x)",
+        artifact_model: "vgg7",
+        suffix: "synth-cifar10-w0.25-b2",
+        methods: &["symog", "twn"],
+        augment: true,
+    },
+    Block {
+        // depth-40 variant: the L=76 graph compiles too slowly on CPU XLA
+        // for the bench loop; same architecture family (DESIGN.md)
+        dataset: Preset::SynthCifar10,
+        model: "DenseNet-40 (0.5x)",
+        artifact_model: "densenet40",
+        suffix: "synth-cifar10-w0.5-b2",
+        methods: &["symog"],
+        augment: true,
+    },
+    Block {
+        dataset: Preset::SynthCifar100,
+        model: "VGG11 (0.25x)",
+        artifact_model: "vgg11",
+        suffix: "synth-cifar100-w0.25-b2",
+        methods: &["symog", "br"],
+        augment: true,
+    },
+    Block {
+        dataset: Preset::SynthCifar100,
+        model: "VGG16 (0.25x)",
+        artifact_model: "vgg16",
+        suffix: "synth-cifar100-w0.25-b2",
+        methods: &["symog"],
+        augment: true,
+    },
+];
+
+fn main() -> Result<()> {
+    let budget = Budget::from_env();
+    let (epochs, train_n, test_n, steps) = budget.training_scale();
+    // optional comma-separated dataset filter, e.g.
+    // SYMOG_BENCH_BLOCKS=synth-cifar100 to re-run one block
+    let filter = std::env::var("SYMOG_BENCH_BLOCKS").unwrap_or_default();
+    println!("== Table 1 regeneration ({budget:?}: {epochs} epochs, {train_n} train) ==\n");
+    let rt = Runtime::cpu()?;
+    let root = artifacts_root();
+    let mut rows: Vec<Table1Row> = Vec::new();
+
+    for block in BLOCKS {
+        if !filter.is_empty() && !filter.split(',').any(|f| f == block.dataset.name()) {
+            continue;
+        }
+        println!("--- {} on {} ---", block.model, block.dataset.name());
+        let (train, test) = block.dataset.load(train_n, test_n, 0);
+        let mk = |method: &str, lambda_kind: &str| Experiment {
+            name: format!("{}-{}", block.artifact_model, method),
+            artifact: format!("{}-{}-{}", block.artifact_model, method, block.suffix),
+            dataset: block.dataset,
+            train_n,
+            test_n,
+            epochs,
+            lambda_kind: lambda_kind.into(),
+            augment: block.augment,
+            steps_per_epoch: steps,
+            verbose: false,
+            ..Default::default()
+        };
+        // FP32 pretrain/baseline
+        let baseline = mk("baseline", "off");
+        let base_art = driver::load_artifact(&rt, &baseline, &root)?;
+        let params = base_art.manifest.num_params();
+        let base = driver::run_experiment(&base_art, &baseline, &train, &test)?;
+        println!("  baseline (fp32): {:.2}%", base.best_f_error * 100.0);
+
+        // each quantized method, initialized from the pretrained weights
+        let tmp = std::env::temp_dir().join(format!("symog_t1_{}.ckpt", block.artifact_model));
+        base.final_ckpt.write(&tmp)?;
+        for &method in block.methods {
+            let lambda_kind = match method {
+                "symog" | "br" => "exp",
+                _ => "off",
+            };
+            let mut exp = mk(method, lambda_kind);
+            exp.init_from = Some(tmp.clone());
+            let art = match driver::load_artifact(&rt, &exp, &root) {
+                Ok(a) => a,
+                Err(e) => {
+                    println!("  {method}: skipped ({e:#})");
+                    continue;
+                }
+            };
+            let res = driver::run_experiment(&art, &exp, &train, &test)?;
+            println!("  {method}: {:.2}%", res.best_q_error * 100.0);
+            rows.push(Table1Row {
+                dataset: block.dataset.name().into(),
+                method: method.to_uppercase(),
+                model: block.model.into(),
+                params,
+                bits: if method == "bc" { "1" } else { "2" }.into(),
+                fixed_point: method == "symog" || method == "bc",
+                epochs,
+                error: res.best_q_error,
+            });
+        }
+        rows.push(Table1Row {
+            dataset: block.dataset.name().into(),
+            method: "Baseline".into(),
+            model: block.model.into(),
+            params,
+            bits: "32".into(),
+            fixed_point: false,
+            epochs,
+            error: base.best_f_error,
+        });
+        std::fs::remove_file(&tmp).ok();
+        println!();
+    }
+
+    let rendered = render_table1(&rows);
+    println!("{rendered}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/table1.md", &rendered)?;
+    println!("-> results/table1.md");
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Benchmark harness (criterion is not vendored; this provides the same
+//! warmup/measure/report loop with median + p95 statistics).
+//!
+//! Budget control: `SYMOG_BENCH_BUDGET` in {"smoke", "small", "full"}
+//! scales the experiment benches so CI smoke runs finish in minutes while
+//! `full` regenerates the paper-scale sweep.
+
+use std::time::Instant;
+
+/// Benchmark budget preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Budget {
+    Smoke,
+    Small,
+    Full,
+}
+
+impl Budget {
+    pub fn from_env() -> Budget {
+        match std::env::var("SYMOG_BENCH_BUDGET").as_deref() {
+            Ok("full") => Budget::Full,
+            Ok("small") => Budget::Small,
+            Ok("smoke") => Budget::Smoke,
+            _ => Budget::Small,
+        }
+    }
+
+    /// (epochs, train_n, test_n, steps_per_epoch cap)
+    ///
+    /// `Small` deliberately leaves steps uncapped: the exponential lambda
+    /// schedule is *per epoch*, so capping steps compresses the ramp
+    /// relative to task progress and over-regularizes (observed on the
+    /// synth-cifar100 block — see EXPERIMENTS.md §T1).
+    pub fn training_scale(self) -> (u32, usize, usize, Option<usize>) {
+        match self {
+            Budget::Smoke => (2, 512, 128, Some(4)),
+            Budget::Small => (12, 2048, 512, None),
+            Budget::Full => (25, 8192, 1024, None),
+        }
+    }
+}
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl Stats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>6} iters  mean {:>10}  median {:>10}  p95 {:>10}  min {:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.min_s),
+        )
+    }
+
+    /// ops/sec at `n` ops per iteration.
+    pub fn throughput(&self, n: usize) -> f64 {
+        n as f64 / self.median_s
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Measure `f` with `warmup` unrecorded runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, times)
+}
+
+/// Like `bench` but with a time budget: stops after `budget_s` seconds or
+/// `max_iters`, whichever first (always >= 1 measured iteration).
+pub fn bench_budgeted<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget_s: f64,
+    max_iters: usize,
+    mut f: F,
+) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < max_iters
+        && (times.is_empty() || start.elapsed().as_secs_f64() < budget_s)
+    {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, times)
+}
+
+fn stats_from(name: &str, mut times: Vec<f64>) -> Stats {
+    times.sort_by(|a, b| a.total_cmp(b));
+    let n = times.len();
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: times.iter().sum::<f64>() / n as f64,
+        median_s: times[n / 2],
+        p95_s: times[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_s: times[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_iters() {
+        let s = bench("noop", 1, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s);
+    }
+
+    #[test]
+    fn budgeted_respects_max() {
+        let s = bench_budgeted("noop", 0, 10.0, 5, || {});
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-5).ends_with("µs"));
+        assert!(fmt_time(2e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+
+    #[test]
+    fn budget_presets() {
+        assert_eq!(Budget::Smoke.training_scale().0, 2);
+        assert!(Budget::Full.training_scale().3.is_none());
+    }
+}

@@ -1,0 +1,20 @@
+// Probe: does PJRT untuple multi-output roots into result[0][k]?
+use anyhow::Result;
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/multi_nt.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]);
+    let y = xla::Literal::vec1(&[10f32, 20., 30., 40.]);
+    let out = exe.execute::<xla::Literal>(&[x, y])?;
+    println!("replicas={} outputs_per_replica={}", out.len(), out[0].len());
+    for (i, b) in out[0].iter().enumerate() {
+        let lit = b.to_literal_sync()?;
+        println!("out[{}] shape={:?}", i, lit.shape()?);
+    }
+    // chain: feed out buffers back via execute_b
+    let out2 = exe.execute_b(&[&out[0][0], &out[0][1]])?;
+    let l = out2[0][0].to_literal_sync()?;
+    println!("chained out0 = {:?}", l.to_vec::<f32>()?);
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Hand-rolled CLI argument parser (clap is not vendored).
+//!
+//! Grammar: `symog <subcommand> [--flag value | --switch] ...`
+//! Every flag is `--kebab-case`; switches take no value. Unknown flags are
+//! hard errors so typos never silently change an experiment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// flags consumed via accessors — unknown-flag detection
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `switch_names` lists the valueless flags.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument {a:?}");
+            };
+            if switch_names.contains(&name) {
+                args.switches.push(name.to_string());
+            } else {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("flag --{name} requires a value"))?;
+                args.flags.insert(name.to_string(), val.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, switch_names)
+    }
+
+    fn mark(&self, name: &str) {
+        self.seen.borrow_mut().push(name.to_string());
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        self.mark(name);
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        self.mark(name);
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Call after all accessors: errors on any flag nobody consumed.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.contains(k) {
+                bail!("unknown flag --{k} for subcommand {:?}", self.subcommand);
+            }
+        }
+        for s in &self.switches {
+            if !seen.contains(s) {
+                bail!("unknown switch --{s} for subcommand {:?}", self.subcommand);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["train", "--epochs", "10", "--verbose", "--lr0", "0.01"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.usize_or("epochs", 0).unwrap(), 10);
+        assert_eq!(a.f32_or("lr0", 0.0).unwrap(), 0.01);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected_at_finish() {
+        let a = Args::parse(&sv(&["train", "--oops", "1"]), &[]).unwrap();
+        a.usize_or("epochs", 0).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["train", "--epochs"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["x"]), &[]).unwrap();
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn positional_after_flags_rejected() {
+        assert!(Args::parse(&sv(&["t", "--a", "1", "stray"]), &[]).is_err());
+    }
+}

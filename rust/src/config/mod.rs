@@ -1,0 +1,247 @@
+//! Experiment configuration: TOML presets + programmatic construction.
+//!
+//! An `Experiment` fully determines one training run: which artifact to
+//! load, which synthetic dataset to generate at what size, the schedules,
+//! and the probes. `configs/*.toml` ship the presets used by the benches
+//! and examples; the CLI can override any field.
+
+mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use toml::Toml;
+
+use crate::coordinator::{LambdaSchedule, LrSchedule, TrainOptions};
+use crate::data::{AugmentConfig, Preset};
+
+/// One fully-specified training run.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    /// artifact directory (relative to artifacts root unless absolute)
+    pub artifact: String,
+    pub dataset: Preset,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub epochs: u32,
+    pub lr0: f32,
+    pub lr_end: f32,
+    /// lambda schedule kind: "exp" (paper), "linear", "const", "off"
+    pub lambda_kind: String,
+    pub lambda0: f32,
+    /// growth exponent: alpha = growth / epochs for "exp" (paper uses 9)
+    pub lambda_growth: f32,
+    pub augment: bool,
+    pub seed: u64,
+    pub steps_per_epoch: Option<usize>,
+    pub track_modes: bool,
+    pub hist_epochs: Vec<u32>,
+    pub hist_layers: Vec<usize>,
+    /// initialize from this checkpoint instead of the artifact's init.ckpt
+    pub init_from: Option<PathBuf>,
+    /// re-solve per-layer step sizes from the initial weights
+    pub resolve_deltas: bool,
+    pub verbose: bool,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            name: "unnamed".into(),
+            artifact: "smoke".into(),
+            dataset: Preset::SynthMnist,
+            train_n: 2048,
+            test_n: 512,
+            epochs: 10,
+            lr0: 0.01,
+            lr_end: 0.001,
+            lambda_kind: "exp".into(),
+            lambda0: 10.0,
+            lambda_growth: 9.0,
+            augment: false,
+            seed: 0,
+            steps_per_epoch: None,
+            track_modes: false,
+            hist_epochs: Vec::new(),
+            hist_layers: Vec::new(),
+            init_from: None,
+            resolve_deltas: true,
+            verbose: true,
+        }
+    }
+}
+
+impl Experiment {
+    /// Parse a TOML preset file.
+    pub fn from_toml_file(path: &Path) -> Result<Experiment> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Experiment::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> Result<Experiment> {
+        let t = Toml::parse(src)?;
+        let d = Experiment::default();
+        let dataset_name = t.str_or("data", "dataset", "synth-mnist");
+        let dataset = Preset::parse(&dataset_name)
+            .with_context(|| format!("unknown dataset {dataset_name:?}"))?;
+        Ok(Experiment {
+            name: t.str_or("", "name", &d.name),
+            artifact: t.str_or("", "artifact", &d.artifact),
+            dataset,
+            train_n: t.usize_or("data", "train_n", d.train_n),
+            test_n: t.usize_or("data", "test_n", d.test_n),
+            epochs: t.usize_or("train", "epochs", d.epochs as usize) as u32,
+            lr0: t.f64_or("train", "lr0", d.lr0 as f64) as f32,
+            lr_end: t.f64_or("train", "lr_end", d.lr_end as f64) as f32,
+            lambda_kind: t.str_or("train", "lambda_kind", &d.lambda_kind),
+            lambda0: t.f64_or("train", "lambda0", d.lambda0 as f64) as f32,
+            lambda_growth: t.f64_or("train", "lambda_growth", d.lambda_growth as f64) as f32,
+            augment: t.bool_or("data", "augment", d.augment),
+            seed: t.usize_or("", "seed", d.seed as usize) as u64,
+            steps_per_epoch: match t.usize_or("train", "steps_per_epoch", 0) {
+                0 => None,
+                n => Some(n),
+            },
+            track_modes: t.bool_or("probe", "track_modes", d.track_modes),
+            hist_epochs: t
+                .get("probe", "hist_epochs")
+                .and_then(|j| j.usize_vec().ok())
+                .map(|v| v.into_iter().map(|x| x as u32).collect())
+                .unwrap_or_default(),
+            hist_layers: t
+                .get("probe", "hist_layers")
+                .and_then(|j| j.usize_vec().ok())
+                .unwrap_or_default(),
+            init_from: {
+                let s = t.str_or("", "init_from", "");
+                (!s.is_empty()).then(|| PathBuf::from(s))
+            },
+            resolve_deltas: t.bool_or("", "resolve_deltas", d.resolve_deltas),
+            verbose: t.bool_or("", "verbose", d.verbose),
+        })
+    }
+
+    /// Resolve the artifact directory against an artifacts root.
+    pub fn artifact_dir(&self, root: &Path) -> PathBuf {
+        let p = Path::new(&self.artifact);
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            root.join(p)
+        }
+    }
+
+    pub fn lambda_schedule(&self) -> LambdaSchedule {
+        match self.lambda_kind.as_str() {
+            "exp" => LambdaSchedule::Exponential {
+                lambda0: self.lambda0,
+                alpha: self.lambda_growth / self.epochs.max(1) as f32,
+            },
+            "linear" => LambdaSchedule::Linear {
+                lambda0: self.lambda0,
+                growth: self.lambda_growth.exp(), // match exp's endpoint
+                epochs: self.epochs,
+            },
+            "const" => LambdaSchedule::Constant { lambda0: self.lambda0 },
+            _ => LambdaSchedule::Off,
+        }
+    }
+
+    /// Materialize `TrainOptions` for the coordinator.
+    pub fn train_options(&self) -> TrainOptions {
+        TrainOptions {
+            epochs: self.epochs,
+            lr: LrSchedule { eta0: self.lr0, eta_e: self.lr_end, epochs: self.epochs },
+            lambda: self.lambda_schedule(),
+            seed: self.seed,
+            augment: if self.augment { AugmentConfig::cifar() } else { AugmentConfig::none() },
+            steps_per_epoch: self.steps_per_epoch,
+            track_modes: self.track_modes,
+            hist_epochs: self.hist_epochs.clone(),
+            hist_layers: self.hist_layers.clone(),
+            hist_bins: 61,
+            verbose: self.verbose,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "vgg7-cifar10"
+artifact = "vgg7-symog-synth-cifar10-w0.25-b2"
+seed = 3
+
+[data]
+dataset = "synth-cifar10"
+train_n = 4096
+test_n = 1024
+augment = true
+
+[train]
+epochs = 30
+lr0 = 0.01
+lr_end = 0.001
+lambda_kind = "exp"
+lambda0 = 10
+lambda_growth = 9
+
+[probe]
+track_modes = true
+hist_epochs = [0, 10, 30]
+hist_layers = [0, 3, 6]
+"#;
+
+    #[test]
+    fn full_preset_parses() {
+        let e = Experiment::from_toml(SAMPLE).unwrap();
+        assert_eq!(e.name, "vgg7-cifar10");
+        assert_eq!(e.dataset, Preset::SynthCifar10);
+        assert!(e.augment);
+        assert_eq!(e.epochs, 30);
+        assert_eq!(e.hist_layers, vec![0, 3, 6]);
+        assert_eq!(e.seed, 3);
+        let opts = e.train_options();
+        assert_eq!(opts.epochs, 30);
+        assert!(opts.track_modes);
+        // paper schedule: lambda grows e^9 over the run
+        let s = e.lambda_schedule();
+        assert!((s.at(30) / s.at(0) - (9f32).exp()).abs() / (9f32).exp() < 1e-3);
+    }
+
+    #[test]
+    fn defaults_fill_gaps() {
+        let e = Experiment::from_toml("name = \"x\"").unwrap();
+        assert_eq!(e.epochs, 10);
+        assert_eq!(e.dataset, Preset::SynthMnist);
+        assert!(e.resolve_deltas);
+        assert!(e.init_from.is_none());
+    }
+
+    #[test]
+    fn lambda_kinds() {
+        for (kind, expect0) in [("exp", 10.0f32), ("const", 10.0), ("off", 0.0)] {
+            let src = format!("[train]\nlambda_kind = \"{kind}\"\nlambda0 = 10\n");
+            let e = Experiment::from_toml(&src).unwrap();
+            assert_eq!(e.lambda_schedule().at(0), expect0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        assert!(Experiment::from_toml("[data]\ndataset = \"imagenet\"").is_err());
+    }
+
+    #[test]
+    fn artifact_dir_resolution() {
+        let e = Experiment { artifact: "foo".into(), ..Default::default() };
+        assert_eq!(e.artifact_dir(Path::new("/a")), PathBuf::from("/a/foo"));
+        let e2 = Experiment { artifact: "/abs/foo".into(), ..Default::default() };
+        assert_eq!(e2.artifact_dir(Path::new("/a")), PathBuf::from("/abs/foo"));
+    }
+}

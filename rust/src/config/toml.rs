@@ -1,0 +1,223 @@
+//! Minimal TOML-subset parser for experiment configs.
+//!
+//! Supported grammar (all configs/*.toml stay within it):
+//!   [section] and [section.sub] headers
+//!   key = "string" | 123 | 1.5 | true | false | [1, 2, "x"]
+//!   # comments, blank lines
+//!
+//! Values surface as `util::json::Json` so downstream code shares one
+//! dynamic-value type.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A parsed TOML document: section path -> (key -> value). Root keys live
+/// under the "" section.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, Json>>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", ln + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", ln + 1);
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+            } else if let Some(eq) = find_eq(line) {
+                let key = line[..eq].trim();
+                let val = line[eq + 1..].trim();
+                if key.is_empty() {
+                    bail!("line {}: empty key", ln + 1);
+                }
+                let parsed = parse_value(val)
+                    .with_context(|| format!("line {}: bad value {val:?}", ln + 1))?;
+                doc.sections.get_mut(&current).unwrap().insert(key.to_string(), parsed);
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`", ln + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BTreeMap<String, Json>> {
+        self.sections.get(name)
+    }
+
+    /// Look up `key` in `section`, falling back to the root section.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Json> {
+        self.sections
+            .get(section)
+            .and_then(|s| s.get(key))
+            .or_else(|| self.sections.get("").and_then(|s| s.get(key)))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|j| j.str().ok())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|j| j.num().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|j| j.usize().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|j| j.boolean().ok()).unwrap_or(default)
+    }
+}
+
+/// Strip a # comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the first `=` outside of strings.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value(v: &str) -> Result<Json> {
+    if v.starts_with('"') {
+        // reuse the JSON string parser
+        return Json::parse(v);
+    }
+    if v == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if v.starts_with('[') {
+        let inner = v
+            .strip_prefix('[')
+            .and_then(|s| s.strip_suffix(']'))
+            .context("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    Ok(Json::Num(v.parse::<f64>().map_err(|e| anyhow::anyhow!("{e}"))?))
+}
+
+/// Split on commas outside strings (arrays of scalars only — no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment preset
+name = "lenet-mnist"
+epochs = 25
+
+[train]
+lr0 = 0.01          # start
+lr_end = 0.001
+lambda0 = 10
+clip = true
+hist_epochs = [0, 10, 25]
+
+[data]
+dataset = "synth-mnist"
+train_n = 2048
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        assert_eq!(t.str_or("", "name", "?"), "lenet-mnist");
+        assert_eq!(t.usize_or("", "epochs", 0), 25);
+        assert_eq!(t.f64_or("train", "lr0", 0.0), 0.01);
+        assert!(t.bool_or("train", "clip", false));
+        assert_eq!(t.str_or("data", "dataset", "?"), "synth-mnist");
+        let he = t.get("train", "hist_epochs").unwrap().usize_vec().unwrap();
+        assert_eq!(he, vec![0, 10, 25]);
+    }
+
+    #[test]
+    fn root_fallback() {
+        let t = Toml::parse("x = 5\n[a]\ny = 6\n").unwrap();
+        assert_eq!(t.usize_or("a", "x", 0), 5); // falls back to root
+        assert_eq!(t.usize_or("a", "y", 0), 6);
+        assert_eq!(t.usize_or("", "y", 0), 0); // no reverse fallback
+    }
+
+    #[test]
+    fn comments_in_strings() {
+        let t = Toml::parse(r##"s = "a # not comment" # real comment"##).unwrap();
+        assert_eq!(t.str_or("", "s", ""), "a # not comment");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Toml::parse("just words").is_err());
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("k = ").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let t = Toml::parse("xs = []").unwrap();
+        assert_eq!(t.get("", "xs").unwrap().arr().unwrap().len(), 0);
+    }
+}

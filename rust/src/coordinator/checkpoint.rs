@@ -1,0 +1,251 @@
+//! Checkpoint I/O — binary format shared with python/compile/ckpt.py.
+//!
+//! Layout (little-endian): magic "SYMGCKP1", u32 meta_len + JSON meta,
+//! u32 n_tensors, then per tensor: u32 name_len + name, u8 kind, u8 ndim,
+//! u32 dims[ndim], f32 data. Kind codes must match ckpt.KINDS.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"SYMGCKP1";
+
+/// Tensor kind codes (lockstep with ckpt.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Weight = 0,
+    Bias = 1,
+    Gamma = 2,
+    Beta = 3,
+    State = 4,
+    Momentum = 5,
+    Deltas = 6,
+}
+
+impl Kind {
+    pub fn from_u8(v: u8) -> Result<Kind> {
+        Ok(match v {
+            0 => Kind::Weight,
+            1 => Kind::Bias,
+            2 => Kind::Gamma,
+            3 => Kind::Beta,
+            4 => Kind::State,
+            5 => Kind::Momentum,
+            6 => Kind::Deltas,
+            _ => bail!("unknown tensor kind {v}"),
+        })
+    }
+
+    pub fn from_name(name: &str) -> Result<Kind> {
+        Ok(match name {
+            "weight" => Kind::Weight,
+            "bias" => Kind::Bias,
+            "gamma" => Kind::Gamma,
+            "beta" => Kind::Beta,
+            "state" => Kind::State,
+            "momentum" => Kind::Momentum,
+            "deltas" => Kind::Deltas,
+            _ => bail!("unknown tensor kind {name:?}"),
+        })
+    }
+}
+
+/// One named tensor in a checkpoint.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub kind: Kind,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A checkpoint: JSON meta + ordered tensor list.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub meta: BTreeMap<String, Json>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn read(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: bad checkpoint magic", path.display());
+        }
+        let meta_len = read_u32(&mut f)? as usize;
+        let mut meta_buf = vec![0u8; meta_len];
+        f.read_exact(&mut meta_buf)?;
+        let meta = match Json::parse(std::str::from_utf8(&meta_buf)?)? {
+            Json::Obj(m) => m,
+            _ => bail!("checkpoint meta is not an object"),
+        };
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            f.read_exact(&mut name_buf)?;
+            let mut kb = [0u8; 2];
+            f.read_exact(&mut kb)?;
+            let kind = Kind::from_u8(kb[0])?;
+            let ndim = kb[1] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut f)? as usize);
+            }
+            let numel: usize = dims.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; numel * 4];
+            f.read_exact(&mut raw)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push(Tensor {
+                name: String::from_utf8(name_buf)?,
+                kind,
+                dims,
+                data,
+            });
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        let meta = Json::Obj(self.meta.clone()).to_string();
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(meta.as_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            let numel: usize = t.dims.iter().product::<usize>().max(1);
+            anyhow::ensure!(
+                t.data.len() == numel,
+                "{}: data len {} != dims {:?}",
+                t.name,
+                t.data.len(),
+                t.dims
+            );
+            f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            f.write_all(t.name.as_bytes())?;
+            f.write_all(&[t.kind as u8, t.dims.len() as u8])?;
+            for &d in &t.dims {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|j| j.str().ok())
+    }
+
+    pub fn meta_i64(&self, key: &str) -> Option<i64> {
+        self.meta.get(key).and_then(|j| j.int().ok())
+    }
+
+    pub fn set_meta(&mut self, key: &str, val: Json) {
+        self.meta.insert(key.to_string(), val);
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut meta = BTreeMap::new();
+        meta.insert("model".into(), Json::Str("mlp".into()));
+        meta.insert("epoch".into(), Json::Num(3.0));
+        Checkpoint {
+            meta,
+            tensors: vec![
+                Tensor {
+                    name: "a.w".into(),
+                    kind: Kind::Weight,
+                    dims: vec![2, 3],
+                    data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                },
+                Tensor {
+                    name: "__deltas__".into(),
+                    kind: Kind::Deltas,
+                    dims: vec![1],
+                    data: vec![0.5],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("symog_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let ck = sample();
+        ck.write(&path).unwrap();
+        let ck2 = Checkpoint::read(&path).unwrap();
+        assert_eq!(ck2.meta_str("model"), Some("mlp"));
+        assert_eq!(ck2.meta_i64("epoch"), Some(3));
+        assert_eq!(ck2.tensors.len(), 2);
+        assert_eq!(ck2.tensors[0].data, ck.tensors[0].data);
+        assert_eq!(ck2.tensors[0].kind, Kind::Weight);
+        assert_eq!(ck2.tensors[1].dims, vec![1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("symog_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTMAGIC00000000").unwrap();
+        assert!(Checkpoint::read(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reads_python_written_ckpt() {
+        // aot.py writes init.ckpt for the smoke artifact compiled in CI;
+        // if present, verify cross-language compatibility.
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/smoke/init.ckpt");
+        if p.exists() {
+            let ck = Checkpoint::read(&p).unwrap();
+            assert!(ck.find("__deltas__").is_some());
+            assert!(ck.tensors.iter().any(|t| t.kind == Kind::Weight));
+        }
+    }
+
+    #[test]
+    fn kind_codes_stable() {
+        assert_eq!(Kind::Weight as u8, 0);
+        assert_eq!(Kind::Deltas as u8, 6);
+        assert_eq!(Kind::from_u8(5).unwrap(), Kind::Momentum);
+        assert!(Kind::from_u8(7).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Weight-distribution probe — the measurement behind Figures 1 and 3.
+//!
+//! Fixed-bin histograms of layer weights, recorded at selected epochs, plus
+//! per-mode occupancy (the discrete version used by Figure 3's "three
+//! separated Gaussian modes" narrative) and an ASCII sparkline renderer so
+//! runs are inspectable straight from the terminal.
+
+use crate::fixedpoint::{clip_bound, mode_indices};
+
+/// A single histogram snapshot.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u32>,
+}
+
+impl Histogram {
+    /// Histogram `bins` equal-width bins over [lo, hi]; out-of-range values
+    /// clamp into the edge bins (they are clipped weights anyway).
+    pub fn compute(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Histogram {
+        assert!(bins >= 1 && hi > lo);
+        let mut counts = vec![0u32; bins];
+        let scale = bins as f32 / (hi - lo);
+        for &x in xs {
+            let b = (((x - lo) * scale) as isize).clamp(0, bins as isize - 1) as usize;
+            counts[b] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+
+    /// Default domain for a SYMOG layer: +-1.5 * clip bound.
+    pub fn for_layer(w: &[f32], delta: f32, n_bits: u32, bins: usize) -> Histogram {
+        let b = 1.5 * clip_bound(n_bits, delta).max(1e-6);
+        Histogram::compute(w, -b, b, bins)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f32> {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        (0..self.counts.len())
+            .map(|i| self.lo + (i as f32 + 0.5) * w)
+            .collect()
+    }
+
+    /// Terminal sparkline (unicode block elements).
+    pub fn sparkline(&self) -> String {
+        const BLOCKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1) as f32;
+        self.counts
+            .iter()
+            .map(|&c| BLOCKS[((c as f32 / max) * 7.0).round() as usize])
+            .collect()
+    }
+
+    /// CSV row: lo,hi,count0,count1,...
+    pub fn csv_row(&self) -> String {
+        let mut s = format!("{},{}", self.lo, self.hi);
+        for c in &self.counts {
+            s.push_str(&format!(",{c}"));
+        }
+        s
+    }
+}
+
+/// Per-mode occupancy (2^N - 1 symmetric modes).
+pub fn mode_occupancy(w: &[f32], delta: f32, n_bits: u32) -> Vec<u32> {
+    let qmax = (1i32 << (n_bits - 1)) - 1;
+    let mut counts = vec![0u32; (2 * qmax + 1) as usize];
+    for m in mode_indices(w, delta, n_bits) {
+        counts[(m as i32 + qmax) as usize] += 1;
+    }
+    counts
+}
+
+/// Multi-epoch histogram series for one layer (Figure 3's panel).
+#[derive(Default)]
+pub struct HistogramSeries {
+    pub epochs: Vec<u32>,
+    pub hists: Vec<Histogram>,
+}
+
+impl HistogramSeries {
+    pub fn push(&mut self, epoch: u32, hist: Histogram) {
+        self.epochs.push(epoch);
+        self.hists.push(hist);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("epoch,lo,hi,counts...\n");
+        for (e, h) in self.epochs.iter().zip(&self.hists) {
+            out.push_str(&format!("{e},{}\n", h.csv_row()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counts_and_total() {
+        let xs = [-1.0f32, -0.5, 0.0, 0.5, 1.0];
+        let h = Histogram::compute(&xs, -1.0, 1.0, 4);
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.counts.iter().sum::<u32>(), 5);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let xs = [-99.0f32, 99.0];
+        let h = Histogram::compute(&xs, -1.0, 1.0, 10);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[9], 1);
+    }
+
+    #[test]
+    fn trimodal_weights_have_three_peaks() {
+        // SYMOG-trained-like distribution: tight Gaussians at {-D, 0, D}
+        let mut rng = Rng::new(0);
+        let delta = 0.5f32;
+        let xs: Vec<f32> = (0..6000)
+            .map(|i| [-delta, 0.0, delta][i % 3] + 0.02 * rng.normal())
+            .collect();
+        let h = Histogram::for_layer(&xs, delta, 2, 33);
+        // find local maxima
+        let peaks = (1..32)
+            .filter(|&i| {
+                h.counts[i] > h.counts[i - 1] && h.counts[i] > h.counts[i + 1]
+                    && h.counts[i] > 100
+            })
+            .count();
+        assert_eq!(peaks, 3, "{:?}", h.counts);
+    }
+
+    #[test]
+    fn mode_occupancy_sums() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f32> = (0..999).map(|_| rng.normal()).collect();
+        let occ = mode_occupancy(&xs, 0.5, 2);
+        assert_eq!(occ.len(), 3);
+        assert_eq!(occ.iter().sum::<u32>() as usize, xs.len());
+    }
+
+    #[test]
+    fn sparkline_has_bin_count_chars() {
+        let h = Histogram::compute(&[0.0, 0.1, 0.2], 0.0, 1.0, 8);
+        assert_eq!(h.sparkline().chars().count(), 8);
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s = HistogramSeries::default();
+        s.push(0, Histogram::compute(&[0.0], -1.0, 1.0, 2));
+        s.push(5, Histogram::compute(&[0.5], -1.0, 1.0, 2));
+        let csv = s.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(2).unwrap().starts_with("5,"));
+    }
+}

@@ -1,0 +1,160 @@
+//! Training metrics: per-epoch records, CSV/JSONL serialization, summaries.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// One epoch's measurements.
+#[derive(Clone, Debug, Default)]
+pub struct EpochLog {
+    pub epoch: u32,
+    pub lr: f32,
+    pub lambda: f32,
+    pub train_loss: f32,
+    pub train_acc: f32,
+    pub test_loss: f32,
+    pub test_acc: f32,
+    /// accuracy with hard-quantized weights (the paper's reported metric)
+    pub testq_loss: f32,
+    pub testq_acc: f32,
+    /// mean mode-switch rate across layers (Fig 4 aggregate)
+    pub switch_rate: f32,
+    pub seconds: f64,
+}
+
+impl EpochLog {
+    pub fn quantized_error(&self) -> f32 {
+        1.0 - self.testq_acc
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("epoch".into(), Json::Num(self.epoch as f64));
+        m.insert("lr".into(), Json::Num(self.lr as f64));
+        m.insert("lambda".into(), Json::Num(self.lambda as f64));
+        m.insert("train_loss".into(), Json::Num(self.train_loss as f64));
+        m.insert("train_acc".into(), Json::Num(self.train_acc as f64));
+        m.insert("test_loss".into(), Json::Num(self.test_loss as f64));
+        m.insert("test_acc".into(), Json::Num(self.test_acc as f64));
+        m.insert("testq_loss".into(), Json::Num(self.testq_loss as f64));
+        m.insert("testq_acc".into(), Json::Num(self.testq_acc as f64));
+        m.insert("switch_rate".into(), Json::Num(self.switch_rate as f64));
+        m.insert("seconds".into(), Json::Num(self.seconds));
+        Json::Obj(m)
+    }
+}
+
+/// A whole run's log.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub tag: String,
+    pub epochs: Vec<EpochLog>,
+}
+
+impl RunLog {
+    pub fn new(tag: &str) -> Self {
+        RunLog { tag: tag.to_string(), epochs: Vec::new() }
+    }
+
+    pub fn push(&mut self, log: EpochLog) {
+        self.epochs.push(log);
+    }
+
+    pub fn last(&self) -> Option<&EpochLog> {
+        self.epochs.last()
+    }
+
+    /// Best (lowest) quantized test error over the run — Table 1's metric.
+    pub fn best_quantized_error(&self) -> f32 {
+        self.epochs
+            .iter()
+            .map(|e| e.quantized_error())
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    /// Best float test error (the FP32-baseline metric).
+    pub fn best_float_error(&self) -> f32 {
+        self.epochs
+            .iter()
+            .map(|e| 1.0 - e.test_acc)
+            .fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "epoch,lr,lambda,train_loss,train_acc,test_loss,test_acc,testq_loss,testq_acc,switch_rate,seconds\n",
+        );
+        for e in &self.epochs {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{}\n",
+                e.epoch, e.lr, e.lambda, e.train_loss, e.train_acc, e.test_loss,
+                e.test_acc, e.testq_loss, e.testq_acc, e.switch_rate, e.seconds
+            ));
+        }
+        s
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for e in &self.epochs {
+            s.push_str(&e.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log(epoch: u32, testq_acc: f32) -> EpochLog {
+        EpochLog { epoch, testq_acc, test_acc: testq_acc + 0.01, ..Default::default() }
+    }
+
+    #[test]
+    fn best_error_tracks_minimum() {
+        let mut run = RunLog::new("t");
+        run.push(log(0, 0.50));
+        run.push(log(1, 0.80));
+        run.push(log(2, 0.75));
+        assert!((run.best_quantized_error() - 0.2).abs() < 1e-6);
+        assert!((run.best_float_error() - 0.19).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_has_header_plus_rows() {
+        let mut run = RunLog::new("t");
+        run.push(log(0, 0.5));
+        let csv = run.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("epoch,lr,lambda"));
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let mut run = RunLog::new("t");
+        run.push(log(3, 0.9));
+        let line = run.to_jsonl();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("epoch").unwrap().int().unwrap(), 3);
+    }
+
+    #[test]
+    fn empty_run() {
+        let run = RunLog::new("e");
+        assert!(run.best_quantized_error().is_infinite());
+        assert!(run.last().is_none());
+    }
+}

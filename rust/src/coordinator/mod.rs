@@ -1,0 +1,22 @@
+//! The L3 coordinator: Algorithm 1 as a Rust training orchestrator.
+//!
+//! * `trainer`    — epoch/batch loop over the fused AOT train step
+//! * `schedule`   — lr ramp + exponential lambda (section 3.3)
+//! * `tracker`    — mode-switch rates (Figure 4)
+//! * `histogram`  — weight-distribution probes (Figures 1 and 3)
+//! * `checkpoint` — binary checkpoints shared with the Python side
+//! * `metrics`    — per-epoch logs, CSV/JSONL
+
+pub mod checkpoint;
+pub mod histogram;
+pub mod metrics;
+pub mod schedule;
+pub mod tracker;
+pub mod trainer;
+
+pub use checkpoint::{Checkpoint, Kind, Tensor};
+pub use histogram::{mode_occupancy, Histogram, HistogramSeries};
+pub use metrics::{EpochLog, RunLog};
+pub use schedule::{LambdaSchedule, LrSchedule};
+pub use tracker::ModeTracker;
+pub use trainer::{TrainOptions, TrainOutcome, Trainer};

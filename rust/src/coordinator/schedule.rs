@@ -1,0 +1,119 @@
+//! Learning-rate and regularization-parameter schedules (section 3.3).
+//!
+//! The paper prescribes a linear learning-rate ramp `eta_0 -> eta_E` and an
+//! exponentially growing regularization parameter
+//! `lambda(e) = lambda_0 * exp(alpha_E * e)` with the recommended setting
+//! `[eta_0, eta_E] = [0.01, 0.001]`, `lambda_0 = 10`, `alpha_E = 9 / E`
+//! (Algorithm 1, lines 7-8). Linear and constant lambda variants exist for
+//! the A2 ablation.
+
+/// Linear learning-rate schedule eta(e) = eta0 - (eta0 - etaE) e / E.
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub eta0: f32,
+    pub eta_e: f32,
+    pub epochs: u32,
+}
+
+impl LrSchedule {
+    /// Paper-recommended domain [0.01, 0.001].
+    pub fn paper(epochs: u32) -> Self {
+        LrSchedule { eta0: 0.01, eta_e: 0.001, epochs }
+    }
+
+    pub fn at(&self, epoch: u32) -> f32 {
+        let e = epoch.min(self.epochs) as f32;
+        self.eta0 - (self.eta0 - self.eta_e) * e / self.epochs.max(1) as f32
+    }
+}
+
+/// Regularization-parameter schedule family.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaSchedule {
+    /// Paper: lambda0 * exp(alpha * e); alpha defaults to 9/E so that
+    /// lambda grows by e^9 (~8100x) over the run.
+    Exponential { lambda0: f32, alpha: f32 },
+    /// Ablation: linear ramp lambda0 -> lambda0 * growth over E epochs.
+    Linear { lambda0: f32, growth: f32, epochs: u32 },
+    /// Ablation: constant lambda.
+    Constant { lambda0: f32 },
+    /// Methods without a regularizer (baseline / bc / twn) or BR's
+    /// relaxation coefficient reusing the exponential ramp.
+    Off,
+}
+
+impl LambdaSchedule {
+    /// Paper-recommended: lambda0 = 10, alpha = 9/E.
+    pub fn paper(epochs: u32) -> Self {
+        LambdaSchedule::Exponential { lambda0: 10.0, alpha: 9.0 / epochs.max(1) as f32 }
+    }
+
+    pub fn at(&self, epoch: u32) -> f32 {
+        match *self {
+            LambdaSchedule::Exponential { lambda0, alpha } => {
+                lambda0 * (alpha * epoch as f32).exp()
+            }
+            LambdaSchedule::Linear { lambda0, growth, epochs } => {
+                let frac = epoch as f32 / epochs.max(1) as f32;
+                lambda0 * (1.0 + (growth - 1.0) * frac)
+            }
+            LambdaSchedule::Constant { lambda0 } => lambda0,
+            LambdaSchedule::Off => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_endpoints_match_paper() {
+        let s = LrSchedule::paper(100);
+        assert!((s.at(0) - 0.01).abs() < 1e-8);
+        assert!((s.at(100) - 0.001).abs() < 1e-8);
+        assert!((s.at(50) - 0.0055).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lr_is_monotone_decreasing() {
+        let s = LrSchedule::paper(40);
+        for e in 0..40 {
+            assert!(s.at(e) > s.at(e + 1));
+        }
+    }
+
+    #[test]
+    fn lr_clamps_past_end() {
+        let s = LrSchedule::paper(10);
+        assert_eq!(s.at(25), s.at(10));
+    }
+
+    #[test]
+    fn lambda_exponential_growth_matches_paper() {
+        // lambda(E) / lambda(0) = e^9 with alpha = 9/E
+        let s = LambdaSchedule::paper(100);
+        let ratio = s.at(100) / s.at(0);
+        assert!((ratio - (9f32).exp()).abs() / (9f32).exp() < 1e-4, "ratio {ratio}");
+        assert_eq!(s.at(0), 10.0);
+    }
+
+    #[test]
+    fn lambda_exponential_is_monotone() {
+        let s = LambdaSchedule::paper(50);
+        for e in 0..50 {
+            assert!(s.at(e + 1) > s.at(e));
+        }
+    }
+
+    #[test]
+    fn lambda_variants() {
+        let lin = LambdaSchedule::Linear { lambda0: 2.0, growth: 10.0, epochs: 10 };
+        assert_eq!(lin.at(0), 2.0);
+        assert!((lin.at(10) - 20.0).abs() < 1e-5);
+        let c = LambdaSchedule::Constant { lambda0: 5.0 };
+        assert_eq!(c.at(0), 5.0);
+        assert_eq!(c.at(99), 5.0);
+        assert_eq!(LambdaSchedule::Off.at(3), 0.0);
+    }
+}

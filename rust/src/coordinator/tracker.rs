@@ -1,0 +1,135 @@
+//! Mode-switch tracker — the measurement behind Figure 4.
+//!
+//! After each epoch the tracker reassigns every quantized weight to its
+//! nearest fixed-point mode (`clip(round(w/delta))`) and reports, per layer,
+//! the fraction of weights whose assignment changed since the previous
+//! epoch ("the percentage of weights that change their fixed-point prior").
+
+use crate::fixedpoint::mode_indices;
+
+/// Per-layer mode assignments + switch statistics.
+pub struct ModeTracker {
+    n_bits: u32,
+    prev: Vec<Vec<i8>>, // one assignment vector per quantized layer
+    /// switch_rates[epoch][layer] = fraction changed at that epoch
+    pub switch_rates: Vec<Vec<f32>>,
+}
+
+impl ModeTracker {
+    pub fn new(n_layers: usize, n_bits: u32) -> Self {
+        ModeTracker { n_bits, prev: vec![Vec::new(); n_layers], switch_rates: Vec::new() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.prev.len()
+    }
+
+    /// Record one epoch: `layers` yields (weights, delta) per quantized
+    /// layer, in stable order. Returns the per-layer switch fractions
+    /// (first call establishes the baseline and returns zeros).
+    pub fn record<'a>(
+        &mut self,
+        layers: impl Iterator<Item = (&'a [f32], f32)>,
+    ) -> Vec<f32> {
+        let mut rates = Vec::with_capacity(self.prev.len());
+        for (li, (w, delta)) in layers.enumerate() {
+            let modes = mode_indices(w, delta, self.n_bits);
+            let rate = if self.prev[li].is_empty() {
+                0.0
+            } else {
+                debug_assert_eq!(self.prev[li].len(), modes.len());
+                let changed = self.prev[li]
+                    .iter()
+                    .zip(&modes)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                changed as f32 / modes.len() as f32
+            };
+            self.prev[li] = modes;
+            rates.push(rate);
+        }
+        self.switch_rates.push(rates.clone());
+        rates
+    }
+
+    /// Mean switch rate across layers for the most recent epoch.
+    pub fn last_mean(&self) -> f32 {
+        self.switch_rates
+            .last()
+            .map(|r| crate::util::mean(r))
+            .unwrap_or(0.0)
+    }
+
+    /// CSV dump: epoch, layer0, layer1, ...
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("epoch");
+        for i in 0..self.prev.len() {
+            out.push_str(&format!(",layer{i}"));
+        }
+        out.push('\n');
+        for (e, rates) in self.switch_rates.iter().enumerate() {
+            out.push_str(&format!("{e}"));
+            for r in rates {
+                out.push_str(&format!(",{r:.6}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_epoch_is_baseline() {
+        let mut t = ModeTracker::new(1, 2);
+        let w = vec![0.6f32, -0.6, 0.1];
+        let rates = t.record([(w.as_slice(), 1.0f32)].into_iter());
+        assert_eq!(rates, vec![0.0]);
+    }
+
+    #[test]
+    fn detects_switches() {
+        let mut t = ModeTracker::new(1, 2);
+        let w0 = vec![0.6f32, -0.6, 0.1, 0.1]; // modes [1, -1, 0, 0]
+        t.record([(w0.as_slice(), 1.0f32)].into_iter());
+        let w1 = vec![0.6f32, 0.6, 0.1, 0.6]; // modes [1, 1, 0, 1]
+        let rates = t.record([(w1.as_slice(), 1.0f32)].into_iter());
+        assert_eq!(rates, vec![0.5]); // 2 of 4 changed
+    }
+
+    #[test]
+    fn stable_weights_zero_rate() {
+        let mut t = ModeTracker::new(2, 2);
+        let a = vec![0.9f32; 10];
+        let b = vec![-0.9f32; 4];
+        for _ in 0..3 {
+            t.record([(a.as_slice(), 1.0f32), (b.as_slice(), 1.0f32)].into_iter());
+        }
+        assert_eq!(t.switch_rates[2], vec![0.0, 0.0]);
+        assert_eq!(t.last_mean(), 0.0);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut t = ModeTracker::new(2, 2);
+        let a = vec![0.1f32];
+        t.record([(a.as_slice(), 1.0f32), (a.as_slice(), 1.0f32)].into_iter());
+        let csv = t.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "epoch,layer0,layer1");
+        assert_eq!(lines.len(), 2);
+    }
+
+    #[test]
+    fn delta_changes_are_switches() {
+        // same weights, different delta => different modes => switches
+        let mut t = ModeTracker::new(1, 2);
+        let w = vec![0.3f32; 8];
+        t.record([(w.as_slice(), 1.0f32)].into_iter()); // mode 0
+        let rates = t.record([(w.as_slice(), 0.25f32)].into_iter()); // mode 1
+        assert_eq!(rates, vec![1.0]);
+    }
+}

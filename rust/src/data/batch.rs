@@ -1,0 +1,154 @@
+//! Deterministic shuffled batch iteration with fixed-size batches.
+//!
+//! The AOT train executable is compiled for a static batch size, so the
+//! final short batch of an epoch wraps around to the epoch's start
+//! (standard practice for static-shape runtimes).
+
+use super::{augment_batch, AugmentConfig, Dataset};
+use crate::util::rng::Rng;
+
+/// One assembled batch, ready to upload.
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+/// Epoch iterator: yields `ceil(n / batch)` batches per epoch, reshuffling
+/// with a per-epoch seed derived from (base seed, epoch).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    batch: usize,
+    perm: Vec<u32>,
+    cursor: usize,
+    augment: AugmentConfig,
+    rng: Rng,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(
+        data: &'a Dataset,
+        batch: usize,
+        seed: u64,
+        epoch: u64,
+        augment: AugmentConfig,
+    ) -> Self {
+        assert!(batch > 0 && !data.is_empty());
+        let mut shuffle_rng = Rng::new(seed ^ epoch.wrapping_mul(0x5851F42D4C957F2D));
+        let perm = shuffle_rng.permutation(data.len());
+        BatchIter { data, batch, perm, cursor: 0, augment, rng: shuffle_rng }
+    }
+
+    /// Number of batches this epoch.
+    pub fn num_batches(&self) -> usize {
+        self.data.len().div_ceil(self.batch)
+    }
+
+    /// Assemble the next batch into reusable buffers; returns false at epoch
+    /// end. Buffers are resized as needed (no per-step allocation once warm).
+    pub fn next_into(&mut self, images: &mut Vec<f32>, labels: &mut Vec<i32>) -> bool {
+        if self.cursor >= self.data.len() {
+            return false;
+        }
+        let e = self.data.image_elems();
+        images.clear();
+        images.reserve(self.batch * e);
+        labels.clear();
+        for k in 0..self.batch {
+            // wrap around for the final short batch
+            let idx = self.perm[(self.cursor + k) % self.data.len()] as usize;
+            images.extend_from_slice(self.data.image(idx));
+            labels.push(self.data.labels[idx]);
+        }
+        self.cursor += self.batch;
+        augment_batch(images, self.data.shape, &self.augment, &mut self.rng);
+        true
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        if self.next_into(&mut images, &mut labels) {
+            Some(Batch { images, labels })
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Preset;
+
+    #[test]
+    fn covers_every_example_once() {
+        let (train, _) = Preset::SynthMnist.load(100, 10, 0);
+        let batches: Vec<Batch> =
+            BatchIter::new(&train, 10, 42, 0, AugmentConfig::none()).collect();
+        assert_eq!(batches.len(), 10);
+        let mut label_counts = vec![0usize; 10];
+        for b in &batches {
+            assert_eq!(b.labels.len(), 10);
+            assert_eq!(b.images.len(), 10 * 28 * 28);
+            for &l in &b.labels {
+                label_counts[l as usize] += 1;
+            }
+        }
+        // 100 examples, each exactly once
+        let train_counts = {
+            let mut c = vec![0usize; 10];
+            for &l in &train.labels {
+                c[l as usize] += 1;
+            }
+            c
+        };
+        assert_eq!(label_counts, train_counts);
+    }
+
+    #[test]
+    fn short_batch_wraps() {
+        let (train, _) = Preset::SynthMnist.load(25, 5, 0);
+        let batches: Vec<Batch> =
+            BatchIter::new(&train, 10, 1, 0, AugmentConfig::none()).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[2].labels.len(), 10); // padded to full size by wrap
+    }
+
+    #[test]
+    fn epochs_shuffle_differently() {
+        let (train, _) = Preset::SynthMnist.load(64, 8, 0);
+        let b0: Vec<i32> = BatchIter::new(&train, 64, 7, 0, AugmentConfig::none())
+            .next()
+            .unwrap()
+            .labels;
+        let b1: Vec<i32> = BatchIter::new(&train, 64, 7, 1, AugmentConfig::none())
+            .next()
+            .unwrap()
+            .labels;
+        assert_ne!(b0, b1);
+        // same epoch: identical
+        let b0b: Vec<i32> = BatchIter::new(&train, 64, 7, 0, AugmentConfig::none())
+            .next()
+            .unwrap()
+            .labels;
+        assert_eq!(b0, b0b);
+    }
+
+    #[test]
+    fn next_into_reuses_buffers() {
+        let (train, _) = Preset::SynthMnist.load(32, 4, 0);
+        let mut it = BatchIter::new(&train, 8, 1, 0, AugmentConfig::none());
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        let mut n = 0;
+        while it.next_into(&mut images, &mut labels) {
+            assert_eq!(labels.len(), 8);
+            n += 1;
+        }
+        assert_eq!(n, 4);
+    }
+}

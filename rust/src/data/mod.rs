@@ -1,0 +1,174 @@
+//! Data pipeline: synthetic dataset generators, normalization, augmentation,
+//! and deterministic shuffled batch iteration.
+//!
+//! The paper evaluates on MNIST / CIFAR-10 / CIFAR-100, which are not
+//! available in this offline environment. `synthetic.rs` builds procedural
+//! class-conditional image distributions with the same shapes, sizes and
+//! normalization pipeline, so every training / quantization code path is
+//! exercised identically — see DESIGN.md §Substitutions.
+
+mod augment;
+mod batch;
+mod synthetic;
+
+pub use augment::{augment_batch, AugmentConfig};
+pub use batch::{BatchIter, Batch};
+pub use synthetic::{synth_dataset, SynthSpec};
+
+/// An in-memory image-classification dataset, NHWC f32 + i32 labels.
+#[derive(Clone)]
+pub struct Dataset {
+    /// Flattened images, `n * h * w * c` values, already normalized.
+    pub images: Vec<f32>,
+    /// Class ids, length `n`.
+    pub labels: Vec<i32>,
+    pub shape: [usize; 3], // H, W, C
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.shape[0] * self.shape[1] * self.shape[2]
+    }
+
+    /// Borrow image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let e = self.image_elems();
+        &self.images[i * e..(i + 1) * e]
+    }
+
+    /// Per-dataset mean/std over all pixels (used to normalize in-place).
+    pub fn normalize(&mut self) -> (f32, f32) {
+        let mean = crate::util::mean(&self.images);
+        let std = crate::util::std_dev(&self.images).max(1e-6);
+        for v in &mut self.images {
+            *v = (*v - mean) / std;
+        }
+        (mean, std)
+    }
+
+    /// Split off the last `n` examples as a held-out set.
+    pub fn split_off(&mut self, n: usize) -> Dataset {
+        assert!(n <= self.len());
+        let keep = self.len() - n;
+        let e = self.image_elems();
+        let images = self.images.split_off(keep * e);
+        let labels = self.labels.split_off(keep);
+        Dataset { images, labels, shape: self.shape, classes: self.classes }
+    }
+}
+
+/// Named dataset presets matching the paper's benchmarks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preset {
+    SynthMnist,
+    SynthCifar10,
+    SynthCifar100,
+}
+
+impl Preset {
+    pub fn parse(name: &str) -> Option<Preset> {
+        match name {
+            "synth-mnist" => Some(Preset::SynthMnist),
+            "synth-cifar10" => Some(Preset::SynthCifar10),
+            "synth-cifar100" => Some(Preset::SynthCifar100),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Preset::SynthMnist => "synth-mnist",
+            Preset::SynthCifar10 => "synth-cifar10",
+            Preset::SynthCifar100 => "synth-cifar100",
+        }
+    }
+
+    pub fn spec(self) -> SynthSpec {
+        match self {
+            Preset::SynthMnist => SynthSpec {
+                shape: [28, 28, 1],
+                classes: 10,
+                coarse_classes: 10,
+                noise: 0.45,
+                max_shift: 2,
+                blob_scale: 5.0,
+            },
+            Preset::SynthCifar10 => SynthSpec {
+                shape: [32, 32, 3],
+                classes: 10,
+                coarse_classes: 10,
+                noise: 0.55,
+                max_shift: 3,
+                blob_scale: 6.0,
+            },
+            Preset::SynthCifar100 => SynthSpec {
+                shape: [32, 32, 3],
+                classes: 100,
+                coarse_classes: 10,
+                noise: 0.5,
+                max_shift: 3,
+                blob_scale: 6.0,
+            },
+        }
+    }
+
+    /// Generate a normalized (train, test) pair.
+    pub fn load(self, train_n: usize, test_n: usize, seed: u64) -> (Dataset, Dataset) {
+        let mut train = synth_dataset(&self.spec(), train_n + test_n, seed);
+        train.normalize();
+        let test = train.split_off(test_n);
+        (train, test)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_roundtrip() {
+        for p in [Preset::SynthMnist, Preset::SynthCifar10, Preset::SynthCifar100] {
+            assert_eq!(Preset::parse(p.name()), Some(p));
+        }
+        assert_eq!(Preset::parse("mnist"), None);
+    }
+
+    #[test]
+    fn load_shapes() {
+        let (train, test) = Preset::SynthMnist.load(128, 32, 0);
+        assert_eq!(train.len(), 128);
+        assert_eq!(test.len(), 32);
+        assert_eq!(train.shape, [28, 28, 1]);
+        assert_eq!(train.images.len(), 128 * 28 * 28);
+        assert!(test.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let (train, _) = Preset::SynthCifar10.load(256, 16, 1);
+        let m = crate::util::mean(&train.images);
+        // mean/std were computed before the split; tolerate the tail effect
+        assert!(m.abs() < 0.1, "mean {m}");
+        let s = crate::util::std_dev(&train.images);
+        assert!((s - 1.0).abs() < 0.1, "std {s}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (a, _) = Preset::SynthMnist.load(64, 8, 7);
+        let (b, _) = Preset::SynthMnist.load(64, 8, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let (c, _) = Preset::SynthMnist.load(64, 8, 8);
+        assert_ne!(a.images, c.images);
+    }
+}

@@ -1,0 +1,91 @@
+//! High-level experiment driver shared by the CLI, examples and benches.
+//!
+//! Encapsulates the full pipeline of the paper's protocol:
+//!   1. (optionally) pretrain a float baseline,
+//!   2. initialize the quantized run from it (solving the step sizes),
+//!   3. train with the method's schedule,
+//!   4. report float + quantized error.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::Experiment;
+use crate::coordinator::{Checkpoint, TrainOutcome, Trainer};
+use crate::data::Dataset;
+use crate::runtime::{Artifact, Runtime};
+
+/// Default artifacts root: $SYMOG_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("SYMOG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Everything `run_experiment` hands back.
+pub struct RunResult {
+    pub outcome: TrainOutcome,
+    pub final_ckpt: Checkpoint,
+    /// best quantized test error over the run (Table 1 metric)
+    pub best_q_error: f32,
+    pub best_f_error: f32,
+}
+
+/// Load the experiment's artifact.
+pub fn load_artifact(rt: &Runtime, exp: &Experiment, root: &Path) -> Result<Artifact> {
+    let dir = exp.artifact_dir(root);
+    rt.load_artifact(&dir)
+        .with_context(|| format!("loading artifact {} (run `make artifacts`?)", dir.display()))
+}
+
+/// Run one experiment end to end on the given data.
+pub fn run_experiment(
+    artifact: &Artifact,
+    exp: &Experiment,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<RunResult> {
+    let mut trainer = match &exp.init_from {
+        Some(path) => {
+            let ck = Checkpoint::read(path)?;
+            Trainer::from_checkpoint(artifact, &ck, exp.resolve_deltas)?
+        }
+        None => Trainer::from_init(artifact)?,
+    };
+    let opts = exp.train_options();
+    let outcome = trainer.train(train, test, &opts)?;
+    let final_ckpt = trainer.to_checkpoint()?;
+    let best_q_error = outcome.log.best_quantized_error();
+    let best_f_error = outcome.log.best_float_error();
+    Ok(RunResult { outcome, final_ckpt, best_q_error, best_f_error })
+}
+
+/// The paper's two-phase protocol: pretrain the float baseline artifact,
+/// then run the quantized method initialized from the pretrained weights.
+/// Returns (baseline result, method result).
+pub fn pretrain_then_run(
+    rt: &Runtime,
+    baseline_exp: &Experiment,
+    method_exp: &Experiment,
+    root: &Path,
+    train: &Dataset,
+    test: &Dataset,
+) -> Result<(RunResult, RunResult)> {
+    let base_art = load_artifact(rt, baseline_exp, root)?;
+    let base = run_experiment(&base_art, baseline_exp, train, test)?;
+
+    // hand the pretrained weights to the method run via a temp checkpoint
+    let tmp = std::env::temp_dir().join(format!(
+        "symog_pretrain_{}_{}.ckpt",
+        baseline_exp.name,
+        std::process::id()
+    ));
+    base.final_ckpt.write(&tmp)?;
+    let mut mexp = method_exp.clone();
+    mexp.init_from = Some(tmp.clone());
+    mexp.resolve_deltas = true; // Alg. 1 lines 2-5 on the pretrained weights
+    let meth_art = load_artifact(rt, &mexp, root)?;
+    let out = run_experiment(&meth_art, &mexp, train, test);
+    std::fs::remove_file(&tmp).ok();
+    Ok((base, out?))
+}

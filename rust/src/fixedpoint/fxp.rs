@@ -1,0 +1,161 @@
+//! `Fxp`: a signed fixed-point scalar (mantissa * 2^-frac_bits).
+//!
+//! This is the number type of the integer inference engine. All arithmetic
+//! is integer adds / multiplies / shifts — the paper's section 3.1 claim
+//! that the constrained quantizer enables pure fixed-point hardware is
+//! demonstrated by running a whole forward pass on these.
+
+use anyhow::{bail, Result};
+
+/// Signed fixed-point value: `mantissa * 2^-frac`. The mantissa is i32; the
+/// engine's accumulators widen to i64 before rescaling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fxp {
+    pub mantissa: i32,
+    pub frac: i32, // binary point position f: value = m * 2^-f
+}
+
+impl Fxp {
+    pub const ZERO: Fxp = Fxp { mantissa: 0, frac: 0 };
+
+    /// Encode `x` with `frac` fractional bits (round half away from zero).
+    pub fn from_f32(x: f32, frac: i32) -> Result<Fxp> {
+        let scaled = (x as f64) * (2f64.powi(frac));
+        let m = (scaled.abs() + 0.5).floor().copysign(scaled);
+        if m.abs() > i32::MAX as f64 {
+            bail!("fixed-point overflow encoding {x} with frac={frac}");
+        }
+        Ok(Fxp { mantissa: m as i32, frac })
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.mantissa as f32 * (2f32).powi(-self.frac)
+    }
+
+    /// Exact product: mantissas multiply, binary points add. Integer-only.
+    pub fn mul(self, other: Fxp) -> Fxp {
+        Fxp {
+            mantissa: (self.mantissa as i64 * other.mantissa as i64)
+                .clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+            frac: self.frac + other.frac,
+        }
+    }
+
+    /// Sum after aligning binary points (shift the coarser operand up).
+    pub fn add(self, other: Fxp) -> Fxp {
+        let frac = self.frac.max(other.frac);
+        let a = (self.mantissa as i64) << (frac - self.frac);
+        let b = (other.mantissa as i64) << (frac - other.frac);
+        Fxp {
+            mantissa: (a + b).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+            frac,
+        }
+    }
+
+    /// Rescale to `frac` fractional bits with round-half-away-from-zero —
+    /// a pure shift (+ rounding addend) in hardware.
+    pub fn rescale(self, frac: i32) -> Fxp {
+        if frac >= self.frac {
+            return Fxp {
+                mantissa: (self.mantissa as i64)
+                    .checked_shl((frac - self.frac) as u32)
+                    .map(|v| v.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+                    .unwrap_or(if self.mantissa >= 0 { i32::MAX } else { i32::MIN }),
+                frac,
+            };
+        }
+        let shift = self.frac - frac;
+        Fxp { mantissa: round_shift(self.mantissa as i64, shift) as i32, frac }
+    }
+}
+
+/// `v / 2^shift` with round-half-away-from-zero — the requantization
+/// primitive of the integer engine (works on i64 accumulators).
+#[inline]
+pub fn round_shift(v: i64, shift: i32) -> i64 {
+    if shift <= 0 {
+        return v << (-shift);
+    }
+    let half = 1i64 << (shift - 1);
+    if v >= 0 {
+        (v + half) >> shift
+    } else {
+        -((-v + half) >> shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_on_grid() {
+        for f in -3..10 {
+            let delta = (2.0f32).powi(-f);
+            for m in -5..=5 {
+                let x = m as f32 * delta;
+                let e = Fxp::from_f32(x, f).unwrap();
+                assert_eq!(e.mantissa, m);
+                assert_eq!(e.to_f32(), x);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_error_half_ulp() {
+        forall(64, |rng: &mut Rng| {
+            let frac = rng.below(16) as i32;
+            let x = rng.normal() * 4.0;
+            let e = Fxp::from_f32(x, frac).unwrap();
+            let ulp = (2.0f32).powi(-frac);
+            assert!((e.to_f32() - x).abs() <= ulp / 2.0 + 1e-6, "x={x} frac={frac}");
+        });
+    }
+
+    #[test]
+    fn mul_is_exact() {
+        let a = Fxp::from_f32(1.25, 2).unwrap(); // m=5, f=2
+        let b = Fxp::from_f32(-0.5, 1).unwrap(); // m=-1, f=1
+        let c = a.mul(b);
+        assert_eq!(c.to_f32(), -0.625);
+        assert_eq!(c.frac, 3);
+    }
+
+    #[test]
+    fn add_aligns_points() {
+        let a = Fxp::from_f32(1.5, 1).unwrap();
+        let b = Fxp::from_f32(0.25, 2).unwrap();
+        assert_eq!(a.add(b).to_f32(), 1.75);
+        assert_eq!(b.add(a).to_f32(), 1.75);
+    }
+
+    #[test]
+    fn rescale_rounds_away() {
+        let x = Fxp { mantissa: 3, frac: 1 }; // 1.5
+        assert_eq!(x.rescale(0).mantissa, 2); // 1.5 -> 2
+        let y = Fxp { mantissa: -3, frac: 1 }; // -1.5
+        assert_eq!(y.rescale(0).mantissa, -2);
+        let z = Fxp { mantissa: 5, frac: 2 }; // 1.25
+        assert_eq!(z.rescale(1).to_f32(), 1.5); // 1.25 -> 1.5 (half away)
+    }
+
+    #[test]
+    fn round_shift_matches_float() {
+        forall(128, |rng: &mut Rng| {
+            let v = (rng.next_u64() as i64) >> 34; // ~30-bit values
+            let s = 1 + rng.below(8) as i32;
+            let want = {
+                let f = v as f64 / (1i64 << s) as f64;
+                (f.abs() + 0.5).floor().copysign(f) as i64
+            };
+            assert_eq!(round_shift(v, s), want, "v={v} s={s}");
+        });
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        assert!(Fxp::from_f32(1e9, 20).is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Fixed-point substrate: the paper's quantizer, the step-size solver, and
+//! a fixed-point scalar type used by the integer inference engine.
+//!
+//! The quantizer (Eq. 1) must match `python/compile/kernels/ref.py`
+//! bit-for-bit — rounding is half-away-from-zero so Q is odd, and the
+//! integer range is symmetric: `[-(2^{N-1}-1), 2^{N-1}-1]` (section 3.1).
+
+mod fxp;
+mod quantizer;
+mod solver;
+
+pub use fxp::{round_shift as fxp_round_shift, Fxp};
+pub use quantizer::{clip_bound, mode_index, mode_indices, quant_error, quantize, quantize_slice, Quantizer};
+pub use solver::{optimal_delta, optimal_delta_refined};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fig2_transfer_curve() {
+        // Figure 2: the 2-bit quantizer with delta = 1 has ternary plateaus.
+        let q = Quantizer::new(2, 1.0);
+        for i in 0..=400 {
+            let x = -2.0 + i as f32 * 0.01;
+            let y = q.apply(x);
+            // round-half-away-from-zero: +-0.5 land on the outer modes
+            if x <= -0.5 {
+                assert_eq!(y, -1.0, "x={x}");
+            } else if x < 0.5 {
+                assert_eq!(y, 0.0, "x={x}");
+            } else {
+                assert_eq!(y, 1.0, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_solver_beats_neighbours() {
+        // optimality of the brute-force argmin over f: no neighbouring
+        // exponent does better (property over random weight samples)
+        forall(32, |rng: &mut Rng| {
+            let n = 16 + rng.below(500);
+            let sigma = rng.range_f32(0.01, 2.0);
+            let w: Vec<f32> = (0..n).map(|_| rng.normal() * sigma).collect();
+            let (delta, f) = optimal_delta(&w, 2);
+            let err = quant_error(&w, delta, 2);
+            for nf in [f - 1, f + 1] {
+                let nd = (2.0f32).powi(-nf);
+                assert!(
+                    quant_error(&w, nd, 2) + 1e-9 >= err,
+                    "f={f} beaten by {nf}"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,177 @@
+//! The symmetric uniform N-bit quantizer Q_N(x; delta) of Eq. 1.
+
+/// Round half away from zero (keeps the quantizer odd: Q(-x) = -Q(x)).
+#[inline]
+pub(crate) fn round_away(x: f32) -> f32 {
+    (x.abs() + 0.5).floor().copysign(x)
+}
+
+/// Largest mantissa magnitude for an N-bit symmetric code: 2^{N-1} - 1.
+#[inline]
+pub fn qmax(n_bits: u32) -> i32 {
+    (1i32 << (n_bits - 1)) - 1
+}
+
+/// The clipping bound of section 3.4: delta * (2^{N-1} - 1).
+#[inline]
+pub fn clip_bound(n_bits: u32, delta: f32) -> f32 {
+    delta * qmax(n_bits) as f32
+}
+
+/// Q_N(x; delta): scale, round, clip, rescale (Eq. 1).
+#[inline]
+pub fn quantize(x: f32, delta: f32, n_bits: u32) -> f32 {
+    let q = qmax(n_bits) as f32;
+    round_away(x / delta).clamp(-q, q) * delta
+}
+
+/// Quantize a slice into `out`.
+pub fn quantize_slice(xs: &[f32], delta: f32, n_bits: u32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let q = qmax(n_bits) as f32;
+    let inv = 1.0 / delta;
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = round_away(x * inv).clamp(-q, q) * delta;
+    }
+}
+
+/// The signed mode index clip(round(x/delta)) in [-qmax, qmax] — the
+/// "fixed-point annotation" whose epoch-to-epoch changes Figure 4 plots.
+#[inline]
+pub fn mode_index(x: f32, delta: f32, n_bits: u32) -> i8 {
+    let q = qmax(n_bits) as f32;
+    round_away(x / delta).clamp(-q, q) as i8
+}
+
+/// Mode indices for a whole tensor.
+pub fn mode_indices(xs: &[f32], delta: f32, n_bits: u32) -> Vec<i8> {
+    xs.iter().map(|&x| mode_index(x, delta, n_bits)).collect()
+}
+
+/// Sum of squared quantization error ||x - Q(x)||^2 (the R term, Eq. 3,
+/// before the 1/M normalization).
+pub fn quant_error(xs: &[f32], delta: f32, n_bits: u32) -> f64 {
+    xs.iter()
+        .map(|&x| {
+            let e = (x - quantize(x, delta, n_bits)) as f64;
+            e * e
+        })
+        .sum()
+}
+
+/// A bound quantizer: N bits + step size, convenient for per-layer use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    pub n_bits: u32,
+    pub delta: f32,
+}
+
+impl Quantizer {
+    pub fn new(n_bits: u32, delta: f32) -> Self {
+        assert!(n_bits >= 2, "need at least 2 bits for a symmetric code");
+        assert!(delta > 0.0);
+        Quantizer { n_bits, delta }
+    }
+
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        quantize(x, self.delta, self.n_bits)
+    }
+
+    #[inline]
+    pub fn mode(&self, x: f32) -> i8 {
+        mode_index(x, self.delta, self.n_bits)
+    }
+
+    pub fn clip_bound(&self) -> f32 {
+        clip_bound(self.n_bits, self.delta)
+    }
+
+    /// Number of codebook entries: 2^N - 1 (symmetric, zero included).
+    pub fn levels(&self) -> usize {
+        (1usize << self.n_bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_values_2bit() {
+        // delta = 1: codebook {-1, 0, 1}; 0.5 rounds away from zero
+        for (x, want) in [
+            (0.0, 0.0),
+            (0.4, 0.0),
+            (0.5, 1.0),
+            (-0.5, -1.0),
+            (1.7, 1.0),
+            (99.0, 1.0),
+            (-99.0, -1.0),
+        ] {
+            assert_eq!(quantize(x, 1.0, 2), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn known_values_3bit() {
+        // delta = 0.5, qmax = 3: codebook {-1.5 ... 1.5} step 0.5
+        assert_eq!(quantize(0.6, 0.5, 3), 0.5);
+        assert_eq!(quantize(0.76, 0.5, 3), 1.0);
+        assert_eq!(quantize(5.0, 0.5, 3), 1.5);
+        assert_eq!(quantize(-0.24, 0.5, 3), 0.0);
+    }
+
+    #[test]
+    fn prop_idempotent_odd_bounded() {
+        forall(64, |rng: &mut Rng| {
+            let n_bits = 2 + rng.below(6) as u32;
+            let f = rng.below(9) as i32 - 4;
+            let delta = (2.0f32).powi(-f);
+            let x = rng.normal() * rng.range_f32(0.01, 4.0);
+            let q = quantize(x, delta, n_bits);
+            // idempotent
+            assert_eq!(quantize(q, delta, n_bits), q);
+            // odd
+            assert_eq!(quantize(-x, delta, n_bits), -q);
+            // bounded
+            assert!(q.abs() <= clip_bound(n_bits, delta) + 1e-6);
+            // codebook membership: q / delta is an integer
+            let m = q / delta;
+            assert!((m - m.round()).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn prop_error_bounded_inside_domain() {
+        forall(64, |rng: &mut Rng| {
+            let delta = 0.25;
+            let x = rng.range_f32(-0.25, 0.25); // inside clip range for 2 bits
+            assert!((x - quantize(x, delta, 2)).abs() <= delta / 2.0 + 1e-6);
+        });
+    }
+
+    #[test]
+    fn mode_index_matches_quantizer() {
+        forall(64, |rng: &mut Rng| {
+            let x = rng.normal();
+            let m = mode_index(x, 0.5, 2);
+            assert_eq!(m as f32 * 0.5, quantize(x, 0.5, 2));
+        });
+    }
+
+    #[test]
+    fn quantizer_levels() {
+        assert_eq!(Quantizer::new(2, 1.0).levels(), 3);
+        assert_eq!(Quantizer::new(3, 1.0).levels(), 7);
+        assert_eq!(Quantizer::new(8, 1.0).levels(), 255);
+    }
+
+    #[test]
+    #[should_panic]
+    fn one_bit_rejected() {
+        Quantizer::new(1, 1.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Pure fixed-point inference engine.
+//!
+//! Section 3.1's motivation — "a multiplication by a power of two is
+//! equivalent to moving the decimal point … which significantly accelerates
+//! computations on fixed-point hardware" — is demonstrated here for real:
+//! the engine executes a whole forward pass with integer arithmetic only:
+//!
+//! * weights: i8 mantissas m (|m| <= 2^{N-1}-1) with a per-layer power-of-two
+//!   step size delta = 2^-f — for N=2 the mantissas are ternary {-1,0,1}, so
+//!   every "multiplication" in a conv/dense is an add, a subtract, or a skip;
+//! * activations: i32 mantissas with a shared per-tensor exponent; layer
+//!   outputs are rescaled by *bit shifts* (round-half-away, matching Q_N);
+//! * batch-norm: folded to a fixed-point affine (16-bit mantissa multiply +
+//!   shift) — our extension toward the paper's "pure fixed-point models"
+//!   future-work item, documented in DESIGN.md;
+//! * pooling / ReLU / concat: integer comparisons and adds.
+//!
+//! The engine reconstructs the network from the artifact manifest's layer
+//! graph and a trained checkpoint, and its accuracy is validated against
+//! the float `evalq` executable in the integration tests.
+
+mod cost;
+mod engine;
+mod ops;
+
+pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};
+pub use engine::{IntModel, QTensor};

@@ -1,0 +1,658 @@
+//! Integer tensor ops for the fixed-point engine.
+//!
+//! All activations are `QTensor`s: i32 mantissas + a shared exponent
+//! (`frac`), value = mantissa * 2^-frac, laid out NHWC like the float model.
+
+use crate::fixedpoint::fxp_round_shift;
+
+/// Integer activation tensor: value = data[i] * 2^-frac.
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub data: Vec<i32>,
+    pub frac: i32,
+    /// NHWC dims; dense activations use [n, 1, 1, features]
+    pub dims: [usize; 4],
+}
+
+impl QTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Encode a float tensor: choose the largest frac with max |mantissa|
+    /// <= 2^{bits-1}-1 (8-bit activations by default). Integer hardware
+    /// derives this from a leading-zero count of the running max.
+    pub fn from_f32(x: &[f32], dims: [usize; 4], bits: u32) -> QTensor {
+        let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        // delta = 2^-frac such that amax/delta <= qmax
+        let frac = (qmax / amax).log2().floor() as i32;
+        let scale = (2f64).powi(frac);
+        let data = x
+            .iter()
+            .map(|&v| {
+                let s = v as f64 * scale;
+                (s.abs() + 0.5).floor().copysign(s) as i32
+            })
+            .collect();
+        QTensor { data, frac, dims }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        let s = (2f32).powi(-self.frac);
+        self.data.iter().map(|&m| m as f32 * s).collect()
+    }
+
+    /// Requantize mantissas down to `bits` dynamic range (shift right until
+    /// max |mantissa| fits). Pure integer: max-abs + shift.
+    pub fn requantize(&mut self, bits: u32) -> i32 {
+        let qmax = (1i64 << (bits - 1)) - 1;
+        let amax = self.data.iter().fold(0i64, |m, &v| m.max((v as i64).abs()));
+        let mut shift = 0;
+        while (amax >> shift) > qmax {
+            shift += 1;
+        }
+        if shift > 0 {
+            for v in &mut self.data {
+                *v = fxp_round_shift(*v as i64, shift) as i32;
+            }
+            self.frac -= shift;
+        }
+        shift
+    }
+}
+
+/// Quantized weight tensor: i8 mantissas + power-of-two step 2^-frac.
+#[derive(Clone, Debug)]
+pub struct QWeight {
+    pub mantissa: Vec<i8>,
+    /// mantissas pre-widened to i32 — lets the conv/dense inner loops
+    /// auto-vectorize (i8 -> i32 conversion inside the loop defeats SIMD)
+    pub mantissa_i32: Vec<i32>,
+    pub frac: i32,
+    /// conv: HWIO dims; dense: [in, out, 1, 1]
+    pub dims: [usize; 4],
+}
+
+impl QWeight {
+    /// Encode trained float weights with the layer's delta = 2^-frac; every
+    /// weight must already sit within the N-bit code range (SYMOG-trained
+    /// weights do — they were clipped during training).
+    pub fn encode(w: &[f32], dims: [usize; 4], delta: f32, n_bits: u32) -> QWeight {
+        let frac = (-delta.log2()).round() as i32;
+        let qmax = ((1i32 << (n_bits - 1)) - 1) as f32;
+        let mantissa: Vec<i8> = w
+            .iter()
+            .map(|&x| {
+                let s = x / delta;
+                ((s.abs() + 0.5).floor().copysign(s)).clamp(-qmax, qmax) as i8
+            })
+            .collect();
+        let mantissa_i32 = mantissa.iter().map(|&m| m as i32).collect();
+        QWeight { mantissa, mantissa_i32, frac, dims }
+    }
+
+    /// Are all mantissas in {-1, 0, 1}? (True for 2-bit SYMOG — multiplies
+    /// degenerate to add/sub/skip.)
+    pub fn is_ternary(&self) -> bool {
+        self.mantissa.iter().all(|&m| (-1..=1).contains(&m))
+    }
+}
+
+/// Fixed-point affine (folded batch-norm): y = (a*x + b), a/b as 16-bit
+/// mantissas with shared exponents.
+#[derive(Clone, Debug)]
+pub struct QAffine {
+    pub a_mant: Vec<i32>,
+    pub a_frac: i32,
+    pub b_mant: Vec<i64>,
+    pub b_frac: i32,
+}
+
+impl QAffine {
+    /// Fold BN params (gamma, beta, mean, var) into fixed point.
+    pub fn fold_bn(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], eps: f32) -> QAffine {
+        let a: Vec<f32> = gamma
+            .iter()
+            .zip(var)
+            .map(|(&g, &v)| g / (v + eps).sqrt())
+            .collect();
+        let b: Vec<f32> = beta
+            .iter()
+            .zip(&a)
+            .zip(mean)
+            .map(|((&bt, &ai), &m)| bt - ai * m)
+            .collect();
+        let amax = a.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let a_frac = ((32767.0 / amax).log2().floor() as i32).min(24);
+        let bmax = b.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+        let b_frac = ((32767.0 / bmax).log2().floor() as i32).min(24);
+        QAffine {
+            a_mant: a.iter().map(|&v| enc32(v, a_frac)).collect(),
+            a_frac,
+            b_mant: b.iter().map(|&v| enc32(v, b_frac) as i64).collect(),
+            b_frac,
+        }
+    }
+}
+
+fn enc32(v: f32, frac: i32) -> i32 {
+    let s = v as f64 * (2f64).powi(frac);
+    (s.abs() + 0.5).floor().copysign(s) as i32
+}
+
+// ---------------------------------------------------------------------------
+// layer kernels (all integer)
+
+/// Integer conv2d, NHWC x HWIO -> NHWC, i64 accumulators.
+/// `pad_same` selects SAME (TF-style) vs VALID padding.
+pub fn conv2d(x: &QTensor, w: &QWeight, stride: usize, pad_same: bool, counts: &mut super::OpCounts) -> QTensor {
+    let [n, h, wd, cin] = x.dims;
+    let [kh, kw, wcin, cout] = w.dims;
+    assert_eq!(cin, wcin, "conv channel mismatch");
+    let (oh, ow, pad_h, pad_w) = if pad_same {
+        let oh = h.div_ceil(stride);
+        let ow = wd.div_ceil(stride);
+        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pw = ((ow - 1) * stride + kw).saturating_sub(wd);
+        (oh, ow, ph / 2, pw / 2)
+    } else {
+        ((h - kh) / stride + 1, (wd - kw) / stride + 1, 0, 0)
+    };
+    // i32 accumulation is safe: activations are requantized to <= 16 bits
+    // between layers and weight mantissas are <= 2^{N-1}-1 <= 127, so the
+    // accumulator bound is K * 2^15 * 127 < 2^31 for every K < 2^9 at 8-bit
+    // weights and K < 2^16 ternary — far above any layer in the zoo.
+    let mut acc = vec![0i32; n * oh * ow * cout];
+    let ternary = w.is_ternary();
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let out_off = ((b * oh + oy) * ow + ox) * cout;
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_w as isize;
+                        if ix < 0 || ix >= wd as isize {
+                            continue;
+                        }
+                        let in_off = ((b * h + iy as usize) * wd + ix as usize) * cin;
+                        let w_off = (ky * kw + kx) * cin * cout;
+                        let acc_row = &mut acc[out_off..out_off + cout];
+                        for ic in 0..cin {
+                            let xv = x.data[in_off + ic];
+                            if xv == 0 {
+                                continue;
+                            }
+                            let w_row =
+                                &w.mantissa_i32[w_off + ic * cout..w_off + (ic + 1) * cout];
+                            // branchless: xv * m vectorizes; on real ternary
+                            // hardware this is an add/sub/skip (the cost
+                            // model accounts it as such)
+                            for (a, &m) in acc_row.iter_mut().zip(w_row) {
+                                *a += xv * m;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // op accounting: one MAC per (output position x kernel elem x cin x cout)
+    let macs = (n * oh * ow * cout * kh * kw * cin) as u64;
+    counts.acc_adds += macs;
+    if !ternary {
+        counts.int_mults += macs;
+    }
+    let mut out = QTensor {
+        data: acc,
+        frac: x.frac + w.frac,
+        dims: [n, oh, ow, cout],
+    };
+    let shift = out.requantize(16);
+    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
+    out
+}
+
+/// Integer dense: [n, f_in] x [f_in, f_out].
+pub fn dense(x: &QTensor, w: &QWeight, counts: &mut super::OpCounts) -> QTensor {
+    let n = x.dims[0];
+    let f_in = x.numel() / n;
+    let [wi, wo, _, _] = w.dims;
+    assert_eq!(f_in, wi, "dense shape mismatch");
+    let ternary = w.is_ternary();
+    // i32 accumulation: see the bound argument in conv2d
+    let mut acc = vec![0i32; n * wo];
+    for b in 0..n {
+        let out_row = &mut acc[b * wo..(b + 1) * wo];
+        for i in 0..f_in {
+            let xv = x.data[b * f_in + i];
+            if xv == 0 {
+                continue;
+            }
+            let w_row = &w.mantissa_i32[i * wo..(i + 1) * wo];
+            for (a, &m) in out_row.iter_mut().zip(w_row) {
+                *a += xv * m;
+            }
+        }
+    }
+    let macs = (n * f_in * wo) as u64;
+    counts.acc_adds += macs;
+    if !ternary {
+        counts.int_mults += macs;
+    }
+    let mut out = QTensor {
+        data: acc,
+        frac: x.frac + w.frac,
+        dims: [n, 1, 1, wo],
+    };
+    let shift = out.requantize(16);
+    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
+    out
+}
+
+/// Add a per-feature bias (stored as fixed point at the activation's frac).
+pub fn add_bias(x: &mut QTensor, bias: &[f32], counts: &mut super::OpCounts) {
+    let c = x.dims[3];
+    assert_eq!(bias.len(), c);
+    let enc: Vec<i64> = bias.iter().map(|&b| enc32(b, x.frac) as i64).collect();
+    for (i, v) in x.data.iter_mut().enumerate() {
+        *v = (*v as i64 + enc[i % c]).clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+    }
+    counts.acc_adds += x.numel() as u64;
+}
+
+/// Apply a folded-BN fixed-point affine per channel.
+pub fn affine(x: &mut QTensor, a: &QAffine, counts: &mut super::OpCounts) {
+    let c = x.dims[3];
+    assert_eq!(a.a_mant.len(), c);
+    // y = (a_m * x_m) * 2^-(a_frac + x_frac) + b_m * 2^-b_frac.
+    // align b to the product's exponent
+    let prod_frac = a.a_frac + x.frac;
+    for (i, v) in x.data.iter_mut().enumerate() {
+        let ch = i % c;
+        let prod = *v as i64 * a.a_mant[ch] as i64;
+        let b_aligned = shift_to(a.b_mant[ch], a.b_frac, prod_frac);
+        *v = (prod + b_aligned).clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+    }
+    x.frac = prod_frac;
+    counts.int_mults += x.numel() as u64;
+    counts.acc_adds += x.numel() as u64;
+    let shift = x.requantize(16);
+    counts.shifts += if shift > 0 { x.numel() as u64 } else { 0 };
+}
+
+fn shift_to(m: i64, from_frac: i32, to_frac: i32) -> i64 {
+    if to_frac >= from_frac {
+        m << (to_frac - from_frac)
+    } else {
+        fxp_round_shift(m, from_frac - to_frac)
+    }
+}
+
+/// Integer ReLU.
+pub fn relu(x: &mut QTensor, counts: &mut super::OpCounts) {
+    for v in &mut x.data {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+    counts.compares += x.numel() as u64;
+}
+
+/// Integer max-pool (VALID, square window).
+pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCounts) -> QTensor {
+    let [n, h, w, c] = x.dims;
+    let (oh, ow) = (h / stride, w / stride);
+    let mut out = vec![i32::MIN; n * oh * ow * c];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..k.min(h - oy * stride) {
+                    for kx in 0..k.min(w - ox * stride) {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let src = ((b * h + iy) * w + ix) * c;
+                        let dst = ((b * oh + oy) * ow + ox) * c;
+                        for ch in 0..c {
+                            let v = x.data[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    counts.compares += (n * oh * ow * c * k * k) as u64;
+    QTensor { data: out, frac: x.frac, dims: [n, oh, ow, c] }
+}
+
+/// Integer average pool: sum + shift (k power of two) or reciprocal multiply.
+pub fn avgpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCounts) -> QTensor {
+    let [n, h, w, c] = x.dims;
+    let (oh, ow) = (h / stride, w / stride);
+    let mut out = vec![0i64; n * oh * ow * c];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..k.min(h - oy * stride) {
+                    for kx in 0..k.min(w - ox * stride) {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let src = ((b * h + iy) * w + ix) * c;
+                        let dst = ((b * oh + oy) * ow + ox) * c;
+                        for ch in 0..c {
+                            out[dst + ch] += x.data[src + ch] as i64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    counts.acc_adds += (n * oh * ow * c * k * k) as u64;
+    let area = (k * k) as u32;
+    let div = divide_out(&out, area, counts);
+    QTensor { data: div, frac: x.frac, dims: [n, oh, ow, c] }
+}
+
+/// Global average pool -> [n, 1, 1, c].
+pub fn global_avgpool(x: &QTensor, counts: &mut super::OpCounts) -> QTensor {
+    let [n, h, w, c] = x.dims;
+    let mut out = vec![0i64; n * c];
+    for b in 0..n {
+        for i in 0..h * w {
+            let src = (b * h * w + i) * c;
+            for ch in 0..c {
+                out[b * c + ch] += x.data[src + ch] as i64;
+            }
+        }
+    }
+    counts.acc_adds += (n * h * w * c) as u64;
+    let div = divide_out(&out, (h * w) as u32, counts);
+    QTensor { data: div, frac: x.frac, dims: [n, 1, 1, c] }
+}
+
+/// Divide accumulators by `area`: pure shift when power of two, else a
+/// fixed-point reciprocal multiply + shift (still integer-only).
+fn divide_out(acc: &[i64], area: u32, counts: &mut super::OpCounts) -> Vec<i32> {
+    if area.is_power_of_two() {
+        let s = area.trailing_zeros() as i32;
+        counts.shifts += acc.len() as u64;
+        acc.iter().map(|&v| fxp_round_shift(v, s) as i32).collect()
+    } else {
+        // reciprocal in Q16: round(2^16 / area)
+        let recip = ((1u64 << 16) + (area as u64 / 2)) / area as u64;
+        counts.int_mults += acc.len() as u64;
+        counts.shifts += acc.len() as u64;
+        acc.iter()
+            .map(|&v| fxp_round_shift(v * recip as i64, 16) as i32)
+            .collect()
+    }
+}
+
+/// Channel-concat two NHWC tensors (aligning exponents by shifting the
+/// finer one down — integer shift only).
+pub fn concat(a: &QTensor, b: &QTensor, counts: &mut super::OpCounts) -> QTensor {
+    assert_eq!(a.dims[0], b.dims[0]);
+    assert_eq!(a.dims[1], b.dims[1]);
+    assert_eq!(a.dims[2], b.dims[2]);
+    let frac = a.frac.min(b.frac);
+    let fix = |t: &QTensor, v: i32| -> i32 {
+        if t.frac == frac {
+            v
+        } else {
+            fxp_round_shift(v as i64, t.frac - frac) as i32
+        }
+    };
+    let [n, h, w, ca] = a.dims;
+    let cb = b.dims[3];
+    let mut out = Vec::with_capacity(n * h * w * (ca + cb));
+    for i in 0..n * h * w {
+        out.extend(a.data[i * ca..(i + 1) * ca].iter().map(|&v| fix(a, v)));
+        out.extend(b.data[i * cb..(i + 1) * cb].iter().map(|&v| fix(b, v)));
+    }
+    if a.frac != b.frac {
+        counts.shifts += out.len() as u64;
+    }
+    QTensor { data: out, frac, dims: [n, h, w, ca + cb] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::OpCounts;
+
+    fn qt(vals: &[f32], dims: [usize; 4]) -> QTensor {
+        QTensor::from_f32(vals, dims, 8)
+    }
+
+    #[test]
+    fn qtensor_roundtrip_precision() {
+        let x = [0.5f32, -0.25, 0.125, 1.0];
+        let q = qt(&x, [1, 2, 2, 1]);
+        let back = q.to_f32();
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1.0 / 127.0, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ternary_conv_matches_float() {
+        // 1x3x3x1 input, 2x2 ternary kernel, stride 1 VALID
+        let x = [1.0f32, 2., 3., 4., 5., 6., 7., 8., 9.];
+        let w = [1.0f32, 0., -1., 1.]; // HWIO 2x2x1x1
+        let qx = qt(&x, [1, 3, 3, 1]);
+        let qw = QWeight::encode(&w, [2, 2, 1, 1], 1.0, 2);
+        assert!(qw.is_ternary());
+        let mut c = OpCounts::default();
+        let out = conv2d(&qx, &qw, 1, false, &mut c);
+        assert_eq!(out.dims, [1, 2, 2, 1]);
+        let f = out.to_f32();
+        // float conv: x00*1 + x01*0 + x10*(-1) + x11*1
+        let expect = [1. - 4. + 5., 2. - 5. + 6., 4. - 7. + 8., 5. - 8. + 9.];
+        for (g, e) in f.iter().zip(&expect) {
+            assert!((g - e).abs() < 0.1, "{g} vs {e}");
+        }
+        assert_eq!(c.int_mults, 0, "ternary conv must not multiply");
+        assert!(c.acc_adds > 0);
+    }
+
+    #[test]
+    fn same_padding_shape() {
+        let x = vec![1.0f32; 8 * 8];
+        let w = vec![1.0f32; 3 * 3];
+        let qx = qt(&x, [1, 8, 8, 1]);
+        let qw = QWeight::encode(&w, [3, 3, 1, 1], 1.0, 2);
+        let mut c = OpCounts::default();
+        let out = conv2d(&qx, &qw, 1, true, &mut c);
+        assert_eq!(out.dims, [1, 8, 8, 1]);
+        // interior pixel: 9 contributions of 1.0
+        let f = out.to_f32();
+        assert!((f[3 * 8 + 3] - 9.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn dense_matches_float() {
+        let x = [0.5f32, -1.0, 2.0];
+        let w = [1.0f32, -1., 0., 1., 1., 0.]; // [3 in, 2 out]
+        let qx = qt(&x, [1, 1, 1, 3]);
+        let qw = QWeight::encode(&w, [3, 2, 1, 1], 1.0, 2);
+        let mut c = OpCounts::default();
+        let out = dense(&qx, &qw, &mut c);
+        let f = out.to_f32();
+        // out0 = 0.5*1 + (-1)*0 + 2*1 = 2.5 ; out1 = 0.5*(-1) + (-1)*1 + 0 = -1.5
+        assert!((f[0] - 2.5).abs() < 0.1, "{f:?}");
+        assert!((f[1] + 1.5).abs() < 0.1, "{f:?}");
+    }
+
+    #[test]
+    fn relu_and_maxpool() {
+        let mut q = qt(&[-1.0, 2.0, -3.0, 4.0], [1, 2, 2, 1]);
+        let mut c = OpCounts::default();
+        relu(&mut q, &mut c);
+        let f = q.to_f32();
+        assert!(f[0] == 0.0 && f[2] == 0.0);
+        let p = maxpool(&q, 2, 2, &mut c);
+        assert_eq!(p.dims, [1, 1, 1, 1]);
+        assert!((p.to_f32()[0] - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn avgpool_power_of_two_is_shift() {
+        let q = qt(&[1.0, 2.0, 3.0, 4.0], [1, 2, 2, 1]);
+        let mut c = OpCounts::default();
+        let p = avgpool(&q, 2, 2, &mut c);
+        assert!((p.to_f32()[0] - 2.5).abs() < 0.1);
+        assert_eq!(c.int_mults, 0); // power-of-two divide: shift only
+    }
+
+    #[test]
+    fn global_avgpool_non_power_of_two() {
+        let q = qt(&[1.0; 9], [1, 3, 3, 1]);
+        let mut c = OpCounts::default();
+        let p = global_avgpool(&q, &mut c);
+        assert!((p.to_f32()[0] - 1.0).abs() < 0.05);
+        assert!(c.int_mults > 0); // reciprocal multiply path
+    }
+
+    #[test]
+    fn bn_fold_matches_float() {
+        let gamma = [2.0f32];
+        let beta = [1.0f32];
+        let mean = [0.5f32];
+        let var = [4.0f32];
+        let a = QAffine::fold_bn(&gamma, &beta, &mean, &var, 1e-5);
+        let mut q = qt(&[1.5f32, -0.5], [1, 1, 2, 1]);
+        let mut c = OpCounts::default();
+        affine(&mut q, &a, &mut c);
+        let f = q.to_f32();
+        // y = 2*(x-0.5)/2 + 1 = x + 0.5
+        assert!((f[0] - 2.0).abs() < 0.02, "{f:?}");
+        assert!((f[1] - 0.0).abs() < 0.02, "{f:?}");
+    }
+
+    #[test]
+    fn concat_aligns_exponents() {
+        let a = QTensor { data: vec![4], frac: 2, dims: [1, 1, 1, 1] }; // 1.0
+        let b = QTensor { data: vec![16], frac: 4, dims: [1, 1, 1, 1] }; // 1.0
+        let mut c = OpCounts::default();
+        let out = concat(&a, &b, &mut c);
+        assert_eq!(out.frac, 2);
+        let f = out.to_f32();
+        assert_eq!(f, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn bias_add() {
+        let mut q = qt(&[1.0, 2.0], [1, 1, 1, 2]);
+        let mut c = OpCounts::default();
+        add_bias(&mut q, &[0.5, -0.5], &mut c);
+        let f = q.to_f32();
+        assert!((f[0] - 1.5).abs() < 0.02 && (f[1] - 1.5).abs() < 0.02);
+    }
+
+    /// Naive float conv reference (VALID or SAME), NHWC x HWIO.
+    fn conv_f32_ref(
+        x: &[f32],
+        xd: [usize; 4],
+        w: &[f32],
+        wd: [usize; 4],
+        stride: usize,
+        pad_same: bool,
+    ) -> (Vec<f32>, [usize; 4]) {
+        let [n, h, wid, cin] = xd;
+        let [kh, kw, _, cout] = wd;
+        let (oh, ow, ph, pw) = if pad_same {
+            let oh = h.div_ceil(stride);
+            let ow = wid.div_ceil(stride);
+            (oh, ow,
+             (((oh - 1) * stride + kh).saturating_sub(h)) / 2,
+             (((ow - 1) * stride + kw).saturating_sub(wid)) / 2)
+        } else {
+            ((h - kh) / stride + 1, (wid - kw) / stride + 1, 0, 0)
+        };
+        let mut out = vec![0f32; n * oh * ow * cout];
+        for b in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as isize - ph as isize;
+                            let ix = (ox * stride + kx) as isize - pw as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wid as isize {
+                                continue;
+                            }
+                            for ic in 0..cin {
+                                let xv = x[((b * h + iy as usize) * wid + ix as usize) * cin + ic];
+                                for oc in 0..cout {
+                                    out[((b * oh + oy) * ow + ox) * cout + oc] +=
+                                        xv * w[((ky * kw + kx) * cin + ic) * cout + oc];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (out, [n, oh, ow, cout])
+    }
+
+    #[test]
+    fn prop_conv_matches_float_reference() {
+        crate::testing::forall(12, |rng: &mut crate::util::rng::Rng| {
+            let (h, wid) = (3 + rng.below(8), 3 + rng.below(8));
+            let cin = 1 + rng.below(4);
+            let cout = 1 + rng.below(4);
+            let k = [1, 3].into_iter().nth(rng.below(2)).unwrap().min(h).min(wid);
+            let stride = 1 + rng.below(2);
+            let pad_same = rng.bool(0.5);
+            let x: Vec<f32> = (0..h * wid * cin).map(|_| rng.normal()).collect();
+            // ternary weights on an exact grid: integer conv is then exact
+            // up to activation-input quantization
+            let w: Vec<f32> = (0..k * k * cin * cout)
+                .map(|_| [-1.0f32, 0.0, 1.0][rng.below(3)])
+                .collect();
+            let qx = QTensor::from_f32(&x, [1, h, wid, cin], 8);
+            let qw = QWeight::encode(&w, [k, k, cin, cout], 1.0, 2);
+            let mut c = crate::inference::OpCounts::default();
+            let got = conv2d(&qx, &qw, stride, pad_same, &mut c);
+            // reference on the *quantized* input so rounding cancels out
+            let (want, wd2) =
+                conv_f32_ref(&qx.to_f32(), [1, h, wid, cin], &w, [k, k, cin, cout], stride, pad_same);
+            assert_eq!(got.dims, wd2);
+            let gf = got.to_f32();
+            for (g, e) in gf.iter().zip(&want) {
+                assert!(
+                    (g - e).abs() <= 2e-2 * e.abs().max(1.0),
+                    "{g} vs {e} (h={h} w={wid} k={k} s={stride} same={pad_same})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_dense_matches_float_reference() {
+        crate::testing::forall(16, |rng: &mut crate::util::rng::Rng| {
+            let fi = 1 + rng.below(64);
+            let fo = 1 + rng.below(16);
+            let x: Vec<f32> = (0..fi).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..fi * fo)
+                .map(|_| [-1.0f32, 0.0, 1.0][rng.below(3)])
+                .collect();
+            let qx = QTensor::from_f32(&x, [1, 1, 1, fi], 8);
+            let qw = QWeight::encode(&w, [fi, fo, 1, 1], 1.0, 2);
+            let mut c = crate::inference::OpCounts::default();
+            let got = dense(&qx, &qw, &mut c).to_f32();
+            let xq = qx.to_f32();
+            for o in 0..fo {
+                let want: f32 = (0..fi).map(|i| xq[i] * w[i * fo + o]).sum();
+                assert!((got[o] - want).abs() <= 2e-2 * want.abs().max(1.0));
+            }
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! SYMOG: symmetric mixture-of-Gaussian-modes fixed-point quantization.
+//!
+//! Full-stack reproduction of Enderich et al., Neurocomputing 2020:
+//! a Rust training coordinator driving AOT-compiled JAX/Pallas compute
+//! (HLO via PJRT), plus a pure integer fixed-point inference engine.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod coordinator;
+pub mod data;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod driver;
+pub mod fixedpoint;
+pub mod inference;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod testing;
+pub mod util;

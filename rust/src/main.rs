@@ -1,0 +1,419 @@
+//! `symog` — the SYMOG training/evaluation coordinator CLI.
+//!
+//! Subcommands:
+//!   train        run one experiment (TOML config and/or flags)
+//!   eval         evaluate a checkpoint (float / quantized)
+//!   quantize     post-training-quantize a checkpoint (naive PTQ)
+//!   stats        per-layer quantization statistics of a checkpoint
+//!   infer        run the pure integer inference engine + cost report
+//!   fig2         print the 2-bit quantizer transfer curve (paper Fig. 2)
+//!   list         list compiled artifacts
+//!
+//! Benches (`cargo bench`) regenerate Table 1 / Fig 3 / Fig 4; see
+//! DESIGN.md's per-experiment index.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use symog::cli::Args;
+use symog::config::Experiment;
+use symog::coordinator::Checkpoint;
+use symog::data::Preset;
+use symog::driver::{self, artifacts_root};
+use symog::inference::IntModel;
+use symog::report::Table;
+use symog::runtime::Runtime;
+
+const SWITCHES: &[&str] = &[
+    "quantized", "no-clip", "no-resolve-deltas", "quiet", "track-modes", "augment",
+];
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(SWITCHES)?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "quantize" => cmd_quantize(&args),
+        "pack" => cmd_pack(&args),
+        "stats" => cmd_stats(&args),
+        "infer" => cmd_infer(&args),
+        "fig2" => cmd_fig2(&args),
+        "ablate-bits" => cmd_ablate_bits(&args),
+        "ablate-lambda" => cmd_ablate_lambda(&args),
+        "list" => cmd_list(&args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; run `symog help`"),
+    }
+}
+
+const HELP: &str = "\
+symog — SYMOG fixed-point quantization coordinator
+
+USAGE: symog <subcommand> [flags]
+
+  train     --artifact TAG | --config FILE  [--epochs N --lr0 F --lr-end F
+            --lambda0 F --lambda-kind exp|linear|const|off --train-n N
+            --test-n N --seed N --steps-per-epoch N --init-from CKPT
+            --save CKPT --metrics CSV --track-modes --augment --quiet]
+  eval      --artifact TAG --ckpt FILE [--quantized] [--test-n N --seed N]
+  quantize  --artifact TAG --ckpt FILE --out FILE
+  pack      --artifact TAG --ckpt FILE --out FILE.fxpm   (2-bit packed model)
+  stats     --artifact TAG --ckpt FILE
+  infer     --artifact TAG --ckpt FILE [--test-n N --seed N --batch N]
+  fig2      [--delta F --bits N]
+  ablate-bits    [--epochs N --train-n N --test-n N --seed N]   (A1)
+  ablate-lambda  [--epochs N --train-n N --test-n N --seed N]   (A2)
+  list      [--root DIR]
+
+Artifacts are searched under $SYMOG_ARTIFACTS (default ./artifacts).
+";
+
+/// Build an Experiment from --config and/or flag overrides.
+fn experiment_from_args(args: &Args) -> Result<Experiment> {
+    let mut exp = match args.str_opt("config") {
+        Some(path) => Experiment::from_toml_file(Path::new(&path))?,
+        None => Experiment::default(),
+    };
+    if let Some(a) = args.str_opt("artifact") {
+        exp.artifact = a;
+    }
+    exp.epochs = args.usize_or("epochs", exp.epochs as usize)? as u32;
+    exp.lr0 = args.f32_or("lr0", exp.lr0)?;
+    exp.lr_end = args.f32_or("lr-end", exp.lr_end)?;
+    exp.lambda0 = args.f32_or("lambda0", exp.lambda0)?;
+    exp.lambda_kind = args.str_or("lambda-kind", &exp.lambda_kind);
+    exp.lambda_growth = args.f32_or("lambda-growth", exp.lambda_growth)?;
+    exp.train_n = args.usize_or("train-n", exp.train_n)?;
+    exp.test_n = args.usize_or("test-n", exp.test_n)?;
+    exp.seed = args.usize_or("seed", exp.seed as usize)? as u64;
+    if let Some(s) = args.str_opt("dataset") {
+        exp.dataset = Preset::parse(&s).with_context(|| format!("unknown dataset {s}"))?;
+    }
+    match args.usize_or("steps-per-epoch", exp.steps_per_epoch.unwrap_or(0))? {
+        0 => {}
+        n => exp.steps_per_epoch = Some(n),
+    }
+    if let Some(p) = args.str_opt("init-from") {
+        exp.init_from = Some(PathBuf::from(p));
+    }
+    if args.switch("no-resolve-deltas") {
+        exp.resolve_deltas = false;
+    }
+    if args.switch("track-modes") {
+        exp.track_modes = true;
+    }
+    if args.switch("augment") {
+        exp.augment = true;
+    }
+    if args.switch("quiet") {
+        exp.verbose = false;
+    }
+    Ok(exp)
+}
+
+fn load_manifest_artifact(args: &Args, rt: &Runtime) -> Result<symog::runtime::Artifact> {
+    let tag = args
+        .str_opt("artifact")
+        .context("--artifact TAG is required")?;
+    let dir = artifacts_root().join(tag);
+    rt.load_artifact(&dir)
+        .with_context(|| format!("loading {} (run `make artifacts`?)", dir.display()))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let exp = experiment_from_args(args)?;
+    let save = args.str_opt("save");
+    let metrics = args.str_opt("metrics");
+    args.finish()?;
+
+    let rt = Runtime::cpu()?;
+    let artifact = driver::load_artifact(&rt, &exp, &artifacts_root())?;
+    let man = &artifact.manifest;
+    println!(
+        "artifact {} — model {} method {} ({} params, {} quant layers, N={} bits)",
+        man.tag, man.model, man.method, symog::report::human_count(man.num_params()),
+        man.n_quant, man.n_bits
+    );
+    let (train, test) = exp.dataset.load(exp.train_n, exp.test_n, exp.seed);
+    println!(
+        "dataset {} — {} train / {} test, {} classes",
+        exp.dataset.name(), train.len(), test.len(), train.classes
+    );
+    let result = driver::run_experiment(&artifact, &exp, &train, &test)?;
+    let last = result.outcome.log.last().context("no epochs ran")?;
+    println!(
+        "done: best quantized error {:.2}%  (float {:.2}%)  final testq acc {:.3}",
+        result.best_q_error * 100.0,
+        result.best_f_error * 100.0,
+        last.testq_acc
+    );
+    if let Some(path) = save {
+        result.final_ckpt.write(Path::new(&path))?;
+        println!("checkpoint -> {path}");
+    }
+    if let Some(path) = metrics {
+        result.outcome.log.save_csv(Path::new(&path))?;
+        println!("metrics -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ckpt_path = args.str_opt("ckpt").context("--ckpt FILE required")?;
+    let quantized = args.switch("quantized");
+    let test_n = args.usize_or("test-n", 1024)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let rt = Runtime::cpu()?;
+    let artifact = load_manifest_artifact(args, &rt)?;
+    args.finish()?;
+
+    let ck = Checkpoint::read(Path::new(&ckpt_path))?;
+    let trainer = symog::coordinator::Trainer::from_checkpoint(&artifact, &ck, false)?;
+    let preset = Preset::parse(&artifact.manifest.dataset).context("unknown dataset")?;
+    let (_, test) = preset.load(64, test_n, seed);
+    let (loss, acc) = trainer.evaluate(&test, quantized)?;
+    println!(
+        "{} eval: loss {loss:.4}  acc {acc:.4}  error {:.2}%",
+        if quantized { "quantized" } else { "float" },
+        (1.0 - acc) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let ckpt_path = args.str_opt("ckpt").context("--ckpt FILE required")?;
+    let out = args.str_opt("out").context("--out FILE required")?;
+    let rt = Runtime::cpu()?;
+    let artifact = load_manifest_artifact(args, &rt)?;
+    args.finish()?;
+    let ck = Checkpoint::read(Path::new(&ckpt_path))?;
+    let qck = symog::quant::quantize_ckpt(&artifact.manifest, &ck)?;
+    qck.write(Path::new(&out))?;
+    println!("quantized checkpoint -> {out}");
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let ckpt_path = args.str_opt("ckpt").context("--ckpt FILE required")?;
+    let out = args.str_opt("out").context("--out FILE required")?;
+    let tag = args.str_opt("artifact").context("--artifact TAG required")?;
+    args.finish()?;
+    let dir = artifacts_root().join(&tag);
+    let man = symog::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    let man_json = std::fs::read_to_string(dir.join("manifest.json"))?;
+    let ck = Checkpoint::read(Path::new(&ckpt_path))?;
+    symog::quant::packed::write_packed(&man, &man_json, &ck, Path::new(&out))?;
+    let packed_size = std::fs::metadata(&out)?.len();
+    let float_size = std::fs::metadata(&ckpt_path)?.len();
+    println!(
+        "packed model -> {out} ({} KiB, {:.1}x smaller than the checkpoint)",
+        packed_size / 1024,
+        float_size as f64 / packed_size as f64
+    );
+    // verify: load back and confirm it predicts
+    let (man2, ck2) = symog::quant::packed::read_packed(Path::new(&out))?;
+    let model = IntModel::build(&man2, &ck2)?;
+    println!("verified: integer model loads, {} quantized params", model.quant_params);
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let ckpt_path = args.str_opt("ckpt").context("--ckpt FILE required")?;
+    let rt = Runtime::cpu()?;
+    let artifact = load_manifest_artifact(args, &rt)?;
+    args.finish()?;
+    let ck = Checkpoint::read(Path::new(&ckpt_path))?;
+    let stats = symog::quant::layer_stats(&artifact.manifest, &ck)?;
+    let mut t = Table::new(["layer", "numel", "delta", "std", "mse", "occupancy"]);
+    for s in stats {
+        t.row([
+            s.name.clone(),
+            s.numel.to_string(),
+            format!("{}", s.delta),
+            format!("{:.4}", s.std),
+            format!("{:.2e}", s.mse),
+            s.occupancy.iter().map(|o| format!("{:.2}", o)).collect::<Vec<_>>().join("/"),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let ckpt_path = args.str_opt("ckpt").context("--ckpt FILE required")?;
+    let test_n = args.usize_or("test-n", 256)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let batch = args.usize_or("batch", 32)?;
+    let rt = Runtime::cpu()?;
+    let artifact = load_manifest_artifact(args, &rt)?;
+    args.finish()?;
+
+    let ck = Checkpoint::read(Path::new(&ckpt_path))?;
+    let model = IntModel::build(&artifact.manifest, &ck)?;
+    println!(
+        "integer model: {} quantized params, ternary = {}",
+        model.quant_params, model.all_ternary
+    );
+    let preset = Preset::parse(&artifact.manifest.dataset).context("unknown dataset")?;
+    let (_, test) = preset.load(64, test_n, seed);
+    let t0 = std::time::Instant::now();
+    let acc = model.accuracy(&test.images, &test.labels, batch)?;
+    let dt = t0.elapsed();
+    // compare against the float evalq path
+    let trainer = symog::coordinator::Trainer::from_checkpoint(&artifact, &ck, false)?;
+    let (_, acc_q) = trainer.evaluate(&test, true)?;
+    println!(
+        "integer-engine acc {acc:.4} vs evalq {acc_q:.4} (gap {:+.4}) — {} images in {:.2}s",
+        acc - acc_q, test.len(), dt.as_secs_f64()
+    );
+    let report = model.cost_report(1)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let delta = args.f32_or("delta", 1.0)?;
+    let bits = args.usize_or("bits", 2)? as u32;
+    args.finish()?;
+    let q = symog::fixedpoint::Quantizer::new(bits, delta);
+    println!("Q_{bits}(x; Δ={delta}) transfer curve (paper Figure 2):");
+    let b = q.clip_bound() * 2.0;
+    for i in 0..=20 {
+        let x = -b + (2.0 * b) * i as f32 / 20.0;
+        let y = q.apply(x);
+        let pos = ((y / q.clip_bound() + 1.0) * 15.0) as usize;
+        println!("  x={x:+.3}  Q(x)={y:+.3}  {}*", " ".repeat(pos.min(40)));
+    }
+    Ok(())
+}
+
+/// A1 ablation: SYMOG at N in {2, 3, 4, 8} bits on LeNet-5.
+fn cmd_ablate_bits(args: &Args) -> Result<()> {
+    let epochs = args.usize_or("epochs", 8)? as u32;
+    let train_n = args.usize_or("train-n", 2048)?;
+    let test_n = args.usize_or("test-n", 512)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    args.finish()?;
+    let rt = Runtime::cpu()?;
+    let (train, test) = Preset::SynthMnist.load(train_n, test_n, seed);
+    let mut t = Table::new(["bits", "codebook", "best q-error", "float error"]);
+    for (bits, tag) in [
+        (2u32, "lenet5-symog-synth-mnist-w1-b2"),
+        (3, "lenet5-symog-synth-mnist-w1-b3"),
+        (4, "lenet5-symog-synth-mnist-w1-b4"),
+        (8, "lenet5-symog-synth-mnist-w1-b8"),
+    ] {
+        let exp = Experiment {
+            name: format!("ablate-b{bits}"),
+            artifact: tag.into(),
+            dataset: Preset::SynthMnist,
+            train_n,
+            test_n,
+            epochs,
+            seed,
+            verbose: false,
+            ..Default::default()
+        };
+        let art = match driver::load_artifact(&rt, &exp, &artifacts_root()) {
+            Ok(a) => a,
+            Err(e) => {
+                println!("b{bits}: skipped ({e:#})");
+                continue;
+            }
+        };
+        let res = driver::run_experiment(&art, &exp, &train, &test)?;
+        println!("N={bits}: q-error {:.2}%", res.best_q_error * 100.0);
+        t.row([
+            bits.to_string(),
+            format!("{} levels", (1usize << bits) - 1),
+            format!("{:.2}%", res.best_q_error * 100.0),
+            format!("{:.2}%", res.best_f_error * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// A2 ablation: exponential (paper) vs linear vs constant lambda schedule.
+fn cmd_ablate_lambda(args: &Args) -> Result<()> {
+    let epochs = args.usize_or("epochs", 8)? as u32;
+    let train_n = args.usize_or("train-n", 2048)?;
+    let test_n = args.usize_or("test-n", 512)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    args.finish()?;
+    let rt = Runtime::cpu()?;
+    let (train, test) = Preset::SynthMnist.load(train_n, test_n, seed);
+    let exp0 = Experiment {
+        name: "ablate-lambda".into(),
+        artifact: "lenet5-symog-synth-mnist-w1-b2".into(),
+        dataset: Preset::SynthMnist,
+        train_n,
+        test_n,
+        epochs,
+        seed,
+        verbose: false,
+        ..Default::default()
+    };
+    let art = driver::load_artifact(&rt, &exp0, &artifacts_root())?;
+    let mut t = Table::new(["schedule", "lambda(0)", "lambda(E)", "best q-error"]);
+    for kind in ["exp", "linear", "const"] {
+        let exp = Experiment { lambda_kind: kind.into(), ..exp0.clone() };
+        let sched = exp.lambda_schedule();
+        let res = driver::run_experiment(&art, &exp, &train, &test)?;
+        println!("{kind}: q-error {:.2}%", res.best_q_error * 100.0);
+        t.row([
+            kind.to_string(),
+            format!("{:.1}", sched.at(0)),
+            format!("{:.1}", sched.at(epochs)),
+            format!("{:.2}%", res.best_q_error * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let root = args
+        .str_opt("root")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_root);
+    args.finish()?;
+    let mut t = Table::new(["tag", "model", "method", "dataset", "batch", "bits", "params"]);
+    let mut found = 0;
+    if root.exists() {
+        let mut entries: Vec<_> = std::fs::read_dir(&root)?.filter_map(|e| e.ok()).collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let mpath = e.path().join("manifest.json");
+            if let Ok(man) = symog::runtime::Manifest::load(&mpath) {
+                t.row([
+                    man.tag.clone(),
+                    man.model.clone(),
+                    man.method.clone(),
+                    man.dataset.clone(),
+                    man.batch.to_string(),
+                    man.n_bits.to_string(),
+                    symog::report::human_count(man.num_params()),
+                ]);
+                found += 1;
+            }
+        }
+    }
+    if found == 0 {
+        println!("no artifacts under {} — run `make artifacts`", root.display());
+    } else {
+        print!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! Quantization toolbox: post-training quantization, per-layer analysis,
+//! and bit-packing (the storage story behind the paper's model-size claims).
+
+pub mod packed;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Checkpoint, Kind};
+use crate::fixedpoint::{self, mode_indices, quantize_slice};
+use crate::runtime::Manifest;
+
+/// Naive post-training quantization (section 2.1's strawman): solve the
+/// per-layer step size on the given checkpoint's weights and replace them
+/// with Q_N(w). Returns a new checkpoint with updated __deltas__.
+pub fn quantize_ckpt(man: &Manifest, ckpt: &Checkpoint) -> Result<Checkpoint> {
+    let mut out = ckpt.clone();
+    let mut deltas = vec![1.0f32; man.deltas_len()];
+    for p in &man.params {
+        if !p.is_quantized() {
+            continue;
+        }
+        let qidx = p.qidx.unwrap();
+        let t = out
+            .tensors
+            .iter_mut()
+            .find(|t| t.name == p.name)
+            .with_context(|| format!("missing {}", p.name))?;
+        let (delta, _) = fixedpoint::optimal_delta_refined(&t.data, man.n_bits);
+        deltas[qidx] = delta;
+        let src = t.data.clone();
+        quantize_slice(&src, delta, man.n_bits, &mut t.data);
+    }
+    match out.tensors.iter_mut().find(|t| t.name == "__deltas__") {
+        Some(t) => {
+            t.dims = vec![deltas.len()];
+            t.data = deltas;
+        }
+        None => out.tensors.push(crate::coordinator::Tensor {
+            name: "__deltas__".into(),
+            kind: Kind::Deltas,
+            dims: vec![deltas.len()],
+            data: deltas,
+        }),
+    }
+    Ok(out)
+}
+
+/// Per-layer quantization statistics (the numbers behind Fig 1's narrative).
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub name: String,
+    pub numel: usize,
+    pub delta: f32,
+    pub std: f32,
+    /// mean squared quantization error (1/M)||w - Q(w)||^2
+    pub mse: f64,
+    /// fraction of weights per mode, centered (len 2^N - 1)
+    pub occupancy: Vec<f32>,
+}
+
+/// Analyze every quantized layer of a checkpoint.
+pub fn layer_stats(man: &Manifest, ckpt: &Checkpoint) -> Result<Vec<LayerStats>> {
+    let deltas = &ckpt.find("__deltas__").context("no __deltas__")?.data;
+    let mut out = Vec::new();
+    for p in &man.params {
+        let Some(qidx) = p.qidx else { continue };
+        let t = ckpt.find(&p.name).with_context(|| format!("missing {}", p.name))?;
+        let delta = deltas[qidx];
+        let mse = fixedpoint::quant_error(&t.data, delta, man.n_bits) / t.data.len() as f64;
+        let modes = mode_indices(&t.data, delta, man.n_bits);
+        let qmax = (1i32 << (man.n_bits - 1)) - 1;
+        let mut occ = vec![0f32; (2 * qmax + 1) as usize];
+        for m in modes {
+            occ[(m as i32 + qmax) as usize] += 1.0;
+        }
+        for o in &mut occ {
+            *o /= t.data.len() as f32;
+        }
+        out.push(LayerStats {
+            name: p.name.clone(),
+            numel: t.data.len(),
+            delta,
+            std: crate::util::std_dev(&t.data),
+            mse,
+            occupancy: occ,
+        });
+    }
+    Ok(out)
+}
+
+/// Pack 2-bit weight mantissas (-1/0/1 -> 2-bit codes) into bytes: the
+/// 16x storage reduction the paper's fixed-point format enables.
+pub fn pack_ternary(mantissas: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; mantissas.len().div_ceil(4)];
+    for (i, &m) in mantissas.iter().enumerate() {
+        debug_assert!((-1..=1).contains(&m));
+        let code = (m + 1) as u8; // -1,0,1 -> 0,1,2
+        out[i / 4] |= code << ((i % 4) * 2);
+    }
+    out
+}
+
+/// Inverse of `pack_ternary`.
+pub fn unpack_ternary(packed: &[u8], n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| (((packed[i / 4] >> ((i % 4) * 2)) & 0b11) as i8) - 1)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_pack_roundtrip() {
+        forall(32, |rng: &mut Rng| {
+            let n = 1 + rng.below(1000);
+            let m: Vec<i8> = (0..n).map(|_| rng.below(3) as i8 - 1).collect();
+            let packed = pack_ternary(&m);
+            assert_eq!(packed.len(), n.div_ceil(4));
+            assert_eq!(unpack_ternary(&packed, n), m);
+        });
+    }
+
+    #[test]
+    fn pack_is_quarter_size() {
+        let m = vec![0i8; 1000];
+        assert_eq!(pack_ternary(&m).len(), 250);
+    }
+}

@@ -1,0 +1,237 @@
+//! `.fxpm` — packed fixed-point model format for deployment.
+//!
+//! This materializes the paper's model-size claim: 2-bit SYMOG weights are
+//! stored as packed 2-bit codes (4 weights/byte) plus one power-of-two
+//! exponent per layer; float-kept auxiliaries (bias/BN) stay f32. The
+//! integer inference engine loads this file directly — no float weight
+//! tensor ever exists at inference time.
+//!
+//! Layout (little-endian):
+//!   magic  8 bytes  b"SYMGFXP1"
+//!   u32    manifest_len, manifest JSON (the artifact manifest, embedded)
+//!   u32    n_quant; per quantized tensor (qidx order):
+//!          u32 numel, i32 frac, packed codes ceil(numel * n_bits / 8)
+//!   u32    n_aux; per aux tensor:
+//!          u32 name_len + name, u8 ndim, u32 dims[], f32 data
+//!
+//! For n_bits = 2 the code is (mantissa + 1) in 2 bits; for wider codes the
+//! mantissa is stored sign-magnitude in n_bits bits.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Checkpoint, Kind, Tensor};
+use crate::runtime::Manifest;
+
+const MAGIC: &[u8; 8] = b"SYMGFXP1";
+
+/// Pack signed mantissas (|m| <= 2^{n_bits-1}-1) into n_bits-wide codes.
+pub fn pack_codes(mantissas: &[i8], n_bits: u32) -> Vec<u8> {
+    let qmax = (1i16 << (n_bits - 1)) - 1;
+    let nb = n_bits as usize;
+    let mut out = vec![0u8; (mantissas.len() * nb).div_ceil(8)];
+    for (i, &m) in mantissas.iter().enumerate() {
+        debug_assert!((m as i16).abs() <= qmax);
+        let code = (m as i16 + qmax) as u16; // bias to unsigned
+        let bit = i * nb;
+        // codes never straddle more than 2 bytes for n_bits <= 8
+        out[bit / 8] |= (code << (bit % 8)) as u8;
+        if bit % 8 + nb > 8 {
+            out[bit / 8 + 1] |= (code >> (8 - bit % 8)) as u8;
+        }
+    }
+    out
+}
+
+/// Inverse of `pack_codes`.
+pub fn unpack_codes(packed: &[u8], n: usize, n_bits: u32) -> Vec<i8> {
+    let qmax = (1i16 << (n_bits - 1)) - 1;
+    let nb = n_bits as usize;
+    let mask = (1u16 << nb) - 1;
+    (0..n)
+        .map(|i| {
+            let bit = i * nb;
+            let mut v = (packed[bit / 8] >> (bit % 8)) as u16;
+            if bit % 8 + nb > 8 {
+                v |= (packed[bit / 8 + 1] as u16) << (8 - bit % 8);
+            }
+            ((v & mask) as i16 - qmax) as i8
+        })
+        .collect()
+}
+
+/// Write a packed model from a trained checkpoint (weights are quantized
+/// with the checkpoint's deltas during packing).
+pub fn write_packed(man: &Manifest, man_json: &str, ckpt: &Checkpoint, path: &Path) -> Result<()> {
+    let deltas = &ckpt.find("__deltas__").context("no __deltas__")?.data;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(man_json.len() as u32).to_le_bytes())?;
+    f.write_all(man_json.as_bytes())?;
+    // quantized tensors in qidx order
+    let mut quant: Vec<(&crate::runtime::ParamMeta, usize)> = man
+        .params
+        .iter()
+        .filter_map(|p| p.qidx.map(|q| (p, q)))
+        .collect();
+    quant.sort_by_key(|(_, q)| *q);
+    f.write_all(&(quant.len() as u32).to_le_bytes())?;
+    let qmax = ((1i32 << (man.n_bits - 1)) - 1) as f32;
+    for (p, qidx) in &quant {
+        let t = ckpt.find(&p.name).with_context(|| format!("missing {}", p.name))?;
+        let delta = deltas[*qidx];
+        let frac = (-delta.log2()).round() as i32;
+        let mantissas: Vec<i8> = t
+            .data
+            .iter()
+            .map(|&w| {
+                let s = w / delta;
+                (s.abs() + 0.5).floor().copysign(s).clamp(-qmax, qmax) as i8
+            })
+            .collect();
+        f.write_all(&(t.data.len() as u32).to_le_bytes())?;
+        f.write_all(&frac.to_le_bytes())?;
+        f.write_all(&pack_codes(&mantissas, man.n_bits))?;
+    }
+    // aux tensors: everything non-quantized the engine needs
+    let aux: Vec<&Tensor> = ckpt
+        .tensors
+        .iter()
+        .filter(|t| {
+            t.name != "__deltas__"
+                && !t.name.ends_with("#m")
+                && !man
+                    .params
+                    .iter()
+                    .any(|p| p.qidx.is_some() && p.name == t.name)
+        })
+        .collect();
+    f.write_all(&(aux.len() as u32).to_le_bytes())?;
+    for t in aux {
+        f.write_all(&(t.name.len() as u32).to_le_bytes())?;
+        f.write_all(t.name.as_bytes())?;
+        f.write_all(&[t.dims.len() as u8])?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a packed model back into (manifest, checkpoint-with-quantized-
+/// weights) — ready for `IntModel::build`.
+pub fn read_packed(path: &Path) -> Result<(Manifest, Checkpoint)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a .fxpm file", path.display());
+    }
+    let mlen = read_u32(&mut f)? as usize;
+    let mut mbuf = vec![0u8; mlen];
+    f.read_exact(&mut mbuf)?;
+    let man = Manifest::parse(std::str::from_utf8(&mbuf)?)?;
+
+    let mut ck = Checkpoint::default();
+    let n_quant = read_u32(&mut f)? as usize;
+    let mut quant: Vec<(&crate::runtime::ParamMeta, usize)> = man
+        .params
+        .iter()
+        .filter_map(|p| p.qidx.map(|q| (p, q)))
+        .collect();
+    quant.sort_by_key(|(_, q)| *q);
+    anyhow::ensure!(quant.len() == n_quant, "quant tensor count mismatch");
+    let mut deltas = vec![1.0f32; man.deltas_len()];
+    for (p, qidx) in &quant {
+        let numel = read_u32(&mut f)? as usize;
+        anyhow::ensure!(numel == p.numel(), "{}: numel mismatch", p.name);
+        let mut fb = [0u8; 4];
+        f.read_exact(&mut fb)?;
+        let frac = i32::from_le_bytes(fb);
+        let delta = (2.0f32).powi(-frac);
+        deltas[*qidx] = delta;
+        let mut packed = vec![0u8; (numel * man.n_bits as usize).div_ceil(8)];
+        f.read_exact(&mut packed)?;
+        let data = unpack_codes(&packed, numel, man.n_bits)
+            .into_iter()
+            .map(|m| m as f32 * delta)
+            .collect();
+        ck.tensors.push(Tensor {
+            name: p.name.clone(),
+            kind: Kind::Weight,
+            dims: p.shape.clone(),
+            data,
+        });
+    }
+    let n_aux = read_u32(&mut f)? as usize;
+    for _ in 0..n_aux {
+        let nlen = read_u32(&mut f)? as usize;
+        let mut nb = vec![0u8; nlen];
+        f.read_exact(&mut nb)?;
+        let mut db = [0u8; 1];
+        f.read_exact(&mut db)?;
+        let ndim = db[0] as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut f)? as usize);
+        }
+        let numel: usize = dims.iter().product::<usize>().max(1);
+        let mut raw = vec![0u8; numel * 4];
+        f.read_exact(&mut raw)?;
+        ck.tensors.push(Tensor {
+            name: String::from_utf8(nb)?,
+            kind: Kind::State,
+            dims,
+            data: raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        });
+    }
+    ck.tensors.push(Tensor {
+        name: "__deltas__".into(),
+        kind: Kind::Deltas,
+        dims: vec![deltas.len()],
+        data: deltas,
+    });
+    Ok((man, ck))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_codes_roundtrip_all_widths() {
+        forall(48, |rng: &mut Rng| {
+            let n_bits = 2 + rng.below(7) as u32;
+            let qmax = (1i16 << (n_bits - 1)) - 1;
+            let n = 1 + rng.below(500);
+            let m: Vec<i8> = (0..n)
+                .map(|_| (rng.below(2 * qmax as usize + 1) as i16 - qmax) as i8)
+                .collect();
+            let packed = pack_codes(&m, n_bits);
+            assert_eq!(packed.len(), (n * n_bits as usize).div_ceil(8));
+            assert_eq!(unpack_codes(&packed, n, n_bits), m);
+        });
+    }
+
+    #[test]
+    fn two_bit_density() {
+        let m = vec![1i8; 4000];
+        assert_eq!(pack_codes(&m, 2).len(), 1000);
+    }
+}

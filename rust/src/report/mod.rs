@@ -1,0 +1,141 @@
+//! Report rendering: markdown tables matching the paper's layout.
+
+pub mod plot;
+
+/// A simple aligned markdown table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(headers: I) -> Table {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// One Table-1-style result row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub dataset: String,
+    pub method: String,
+    pub model: String,
+    pub params: usize,
+    pub bits: String,
+    pub fixed_point: bool,
+    pub epochs: u32,
+    pub error: f32,
+}
+
+/// Render rows in the paper's Table 1 format.
+pub fn render_table1(rows: &[Table1Row]) -> String {
+    let mut t = Table::new([
+        "Data set", "Method", "Model", "Param.", "Bits", "Fixed-Point", "Epochs", "Error",
+    ]);
+    for r in rows {
+        t.row([
+            r.dataset.clone(),
+            r.method.clone(),
+            r.model.clone(),
+            human_count(r.params),
+            r.bits.clone(),
+            if r.fixed_point { "yes" } else { "no" }.into(),
+            r.epochs.to_string(),
+            format!("{:.2}%", r.error * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+/// 62582 -> "62.6k", 12_300_000 -> "12.3M"
+pub fn human_count(n: usize) -> String {
+    if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}k", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(["a", "long header"]);
+        t.row(["xxxxxxx", "y"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[1].starts_with("|---"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new(["a", "b"]).row(["only one"]);
+    }
+
+    #[test]
+    fn human_counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(62_582), "62.6k");
+        assert_eq!(human_count(12_300_000), "12.3M");
+    }
+
+    #[test]
+    fn table1_render() {
+        let rows = vec![Table1Row {
+            dataset: "synth-mnist".into(),
+            method: "SYMOG".into(),
+            model: "lenet5".into(),
+            params: 62582,
+            bits: "2".into(),
+            fixed_point: true,
+            epochs: 25,
+            error: 0.0063,
+        }];
+        let s = render_table1(&rows);
+        assert!(s.contains("0.63%"));
+        assert!(s.contains("yes"));
+    }
+}

@@ -1,0 +1,339 @@
+//! Self-contained SVG plot writer — regenerates the paper's figures as
+//! actual graphics (no plotting library is vendored).
+//!
+//! Two chart types cover everything the paper shows:
+//! * `LineChart`  — Figure 4's switch-rate-vs-epoch curves
+//! * `HistogramGrid` — Figure 1/3's weight-distribution panels
+
+use std::fmt::Write as _;
+
+/// Map a data point into pixel space.
+#[derive(Clone, Copy, Debug)]
+struct Frame {
+    x0: f32,
+    x1: f32,
+    y0: f32,
+    y1: f32,
+    // pixel box
+    px: f32,
+    py: f32,
+    pw: f32,
+    ph: f32,
+}
+
+impl Frame {
+    fn x(&self, v: f32) -> f32 {
+        self.px + (v - self.x0) / (self.x1 - self.x0).max(1e-9) * self.pw
+    }
+
+    fn y(&self, v: f32) -> f32 {
+        // SVG y grows downward
+        self.py + self.ph - (v - self.y0) / (self.y1 - self.y0).max(1e-9) * self.ph
+    }
+}
+
+const GRID: &str = "#ddd";
+const AXIS: &str = "#333";
+const BAR: &str = "#4878a8";
+
+const PALETTE: &[&str] = &[
+    "#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b", "#e377c2",
+];
+
+/// A multi-series line chart.
+pub struct LineChart {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<(String, Vec<(f32, f32)>)>,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl LineChart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> LineChart {
+        LineChart {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            series: Vec::new(),
+            width: 720,
+            height: 420,
+        }
+    }
+
+    pub fn series(&mut self, name: &str, points: Vec<(f32, f32)>) -> &mut Self {
+        self.series.push((name.into(), points));
+        self
+    }
+
+    pub fn to_svg(&self) -> String {
+        let (w, h) = (self.width as f32, self.height as f32);
+        let frame = {
+            let pts: Vec<(f32, f32)> =
+                self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+            let (mut x0, mut x1) = min_max(pts.iter().map(|p| p.0));
+            let (mut y0, mut y1) = min_max(pts.iter().map(|p| p.1));
+            if x0 == x1 {
+                x1 += 1.0;
+            }
+            if y0 == y1 {
+                y1 += 1.0;
+            }
+            // pad the y range 5%
+            let pad = (y1 - y0) * 0.05;
+            y0 -= pad;
+            y1 += pad;
+            let _ = (&mut x0, &mut y0);
+            Frame { x0, x1, y0, y1, px: 64.0, py: 40.0, pw: w - 96.0, ph: h - 104.0 }
+        };
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="sans-serif">"#
+        );
+        let _ = write!(s, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="24" text-anchor="middle" font-size="15">{}</text>"#,
+            w / 2.0,
+            esc(&self.title)
+        );
+        // axes + gridlines + tick labels
+        for k in 0..=4 {
+            let fy = frame.y0 + (frame.y1 - frame.y0) * k as f32 / 4.0;
+            let y = frame.y(fy);
+            let _ = write!(
+                s,
+                r#"<line x1="{}" y1="{y}" x2="{}" y2="{y}" stroke="{GRID}"/>"#,
+                frame.px,
+                frame.px + frame.pw
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" text-anchor="end" font-size="11">{}</text>"#,
+                frame.px - 6.0,
+                y + 4.0,
+                fmt_tick(fy)
+            );
+            let fx = frame.x0 + (frame.x1 - frame.x0) * k as f32 / 4.0;
+            let x = frame.x(fx);
+            let _ = write!(
+                s,
+                r#"<text x="{x}" y="{}" text-anchor="middle" font-size="11">{}</text>"#,
+                frame.py + frame.ph + 16.0,
+                fmt_tick(fx)
+            );
+        }
+        let _ = write!(
+            s,
+            r#"<rect x="{}" y="{}" width="{}" height="{}" fill="none" stroke="{AXIS}"/>"#,
+            frame.px, frame.py, frame.pw, frame.ph
+        );
+        // axis labels
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="{}" text-anchor="middle" font-size="12">{}</text>"#,
+            frame.px + frame.pw / 2.0,
+            h - 8.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            s,
+            r#"<text x="14" y="{}" text-anchor="middle" font-size="12" transform="rotate(-90 14 {})">{}</text>"#,
+            frame.py + frame.ph / 2.0,
+            frame.py + frame.ph / 2.0,
+            esc(&self.y_label)
+        );
+        // series
+        for (i, (name, pts)) in self.series.iter().enumerate() {
+            let color = PALETTE[i % PALETTE.len()];
+            let path: Vec<String> = pts
+                .iter()
+                .map(|&(x, y)| format!("{:.1},{:.1}", frame.x(x), frame.y(y)))
+                .collect();
+            let _ = write!(
+                s,
+                r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="1.8"/>"#,
+                path.join(" ")
+            );
+            // legend
+            let ly = frame.py + 14.0 + i as f32 * 16.0;
+            let lx = frame.px + frame.pw - 150.0;
+            let _ = write!(
+                s,
+                r#"<line x1="{lx}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="2"/>"#,
+                lx + 22.0
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" font-size="11">{}</text>"#,
+                lx + 28.0,
+                ly + 4.0,
+                esc(name)
+            );
+        }
+        s.push_str("</svg>");
+        s
+    }
+}
+
+/// A grid of histogram panels (one row per epoch) — Figure 3's layout.
+pub struct HistogramGrid {
+    pub title: String,
+    /// (label, bin lo, bin hi, counts)
+    pub panels: Vec<(String, f32, f32, Vec<u32>)>,
+    pub width: u32,
+    pub panel_height: u32,
+}
+
+impl HistogramGrid {
+    pub fn new(title: &str) -> HistogramGrid {
+        HistogramGrid { title: title.into(), panels: Vec::new(), width: 560, panel_height: 96 }
+    }
+
+    pub fn panel(&mut self, label: &str, lo: f32, hi: f32, counts: &[u32]) -> &mut Self {
+        self.panels.push((label.into(), lo, hi, counts.to_vec()));
+        self
+    }
+
+    pub fn to_svg(&self) -> String {
+        let w = self.width as f32;
+        let ph = self.panel_height as f32;
+        let h = 40.0 + self.panels.len() as f32 * (ph + 28.0);
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" font-family="sans-serif">"#
+        );
+        let _ = write!(s, r#"<rect width="{w}" height="{h}" fill="white"/>"#);
+        let _ = write!(
+            s,
+            r#"<text x="{}" y="22" text-anchor="middle" font-size="14">{}</text>"#,
+            w / 2.0,
+            esc(&self.title)
+        );
+        for (pi, (label, lo, hi, counts)) in self.panels.iter().enumerate() {
+            let top = 36.0 + pi as f32 * (ph + 28.0);
+            let px = 50.0;
+            let pw = w - 80.0;
+            let max = counts.iter().copied().max().unwrap_or(1).max(1) as f32;
+            let bw = pw / counts.len() as f32;
+            for (bi, &c) in counts.iter().enumerate() {
+                let bh = c as f32 / max * ph;
+                let _ = write!(
+                    s,
+                    r#"<rect x="{:.1}" y="{:.1}" width="{:.2}" height="{:.1}" fill="{BAR}"/>"#,
+                    px + bi as f32 * bw,
+                    top + ph - bh,
+                    bw.max(0.5),
+                    bh
+                );
+            }
+            let _ = write!(
+                s,
+                r#"<rect x="{px}" y="{top}" width="{pw}" height="{ph}" fill="none" stroke="{AXIS}"/>"#
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" font-size="11">{}</text>"#,
+                px,
+                top + ph + 14.0,
+                fmt_tick(*lo)
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" text-anchor="end" font-size="11">{}</text>"#,
+                px + pw,
+                top + ph + 14.0,
+                fmt_tick(*hi)
+            );
+            let _ = write!(
+                s,
+                r#"<text x="{}" y="{}" font-size="12">{}</text>"#,
+                px + pw + 6.0,
+                top + ph / 2.0,
+                esc(label)
+            );
+        }
+        s.push_str("</svg>");
+        s
+    }
+}
+
+fn min_max(vals: impl Iterator<Item = f32>) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for v in vals {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() {
+        (0.0, 1.0)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn fmt_tick(v: f32) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_valid_svg() {
+        let mut c = LineChart::new("Fig 4", "epoch", "switch %");
+        c.series("layer 1", vec![(0.0, 10.0), (1.0, 22.0), (2.0, 8.0)]);
+        c.series("layer 7", vec![(0.0, 5.0), (1.0, 12.0), (2.0, 3.0)]);
+        let svg = c.to_svg();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<polyline").count(), 2);
+        assert!(svg.contains("layer 7"));
+    }
+
+    #[test]
+    fn histogram_grid_panels() {
+        let mut g = HistogramGrid::new("Fig 3 — layer 1");
+        g.panel("epoch 0", -1.0, 1.0, &[1, 5, 9, 5, 1]);
+        g.panel("epoch 80", -1.0, 1.0, &[9, 1, 9, 1, 9]);
+        let svg = g.to_svg();
+        assert!(svg.contains("epoch 80"));
+        // 10 bars + 2 frames + 1 background
+        assert_eq!(svg.matches("<rect").count(), 13);
+    }
+
+    #[test]
+    fn escapes_labels() {
+        let mut c = LineChart::new("a<b&c", "x", "y");
+        c.series("s", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let svg = c.to_svg();
+        assert!(svg.contains("a&lt;b&amp;c"));
+        assert!(!svg.contains("a<b"));
+    }
+
+    #[test]
+    fn degenerate_ranges_handled() {
+        let mut c = LineChart::new("flat", "x", "y");
+        c.series("s", vec![(0.0, 5.0), (1.0, 5.0)]);
+        let svg = c.to_svg();
+        assert!(svg.contains("polyline"));
+        // no NaNs leaked into coordinates
+        assert!(!svg.contains("NaN"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Artifact: one compiled configuration (manifest + train/eval/evalq).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{Manifest, Runtime};
+
+/// A loaded artifact directory. Executables are compiled eagerly at load.
+pub struct Artifact {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub train: xla::PjRtLoadedExecutable,
+    pub eval: xla::PjRtLoadedExecutable,
+    pub evalq: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Artifact> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest in {}", dir.display()))?;
+        let train = rt.load_hlo(&dir.join("train.hlo.txt"))?;
+        let eval = rt.load_hlo(&dir.join("eval.hlo.txt"))?;
+        let evalq = rt.load_hlo(&dir.join("evalq.hlo.txt"))?;
+        Ok(Artifact { dir: dir.to_path_buf(), manifest, train, eval, evalq })
+    }
+
+    /// Path of the init checkpoint written by aot.py.
+    pub fn init_ckpt(&self) -> PathBuf {
+        self.dir.join("init.ckpt")
+    }
+}

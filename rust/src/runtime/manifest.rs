@@ -1,0 +1,219 @@
+//! Manifest: the flat calling convention + layer graph emitted by aot.py.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Metadata for one trainable tensor.
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "weight" | "bias" | "gamma" | "beta"
+    pub kind: String,
+    /// index into the deltas vector for quantized weights
+    pub qidx: Option<usize>,
+    pub fan_in: usize,
+}
+
+impl ParamMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.kind == "weight"
+    }
+}
+
+/// Metadata for one non-trainable tensor (BN running stats).
+#[derive(Clone, Debug)]
+pub struct StateMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: f32,
+}
+
+impl StateMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One layer of the model graph (consumed by the integer inference engine).
+/// Kept as raw JSON plus typed accessors — layer dicts are heterogeneous.
+#[derive(Clone, Debug)]
+pub struct LayerDesc(pub Json);
+
+impl LayerDesc {
+    pub fn ty(&self) -> &str {
+        self.0.get("type").and_then(|j| j.str()).unwrap_or("?")
+    }
+
+    pub fn usize_field(&self, key: &str) -> Option<usize> {
+        self.0.opt(key).and_then(|j| j.usize().ok())
+    }
+
+    pub fn str_field(&self, key: &str) -> Option<&str> {
+        self.0.opt(key).and_then(|j| j.str().ok())
+    }
+
+    /// Param index fields ("w", "b", "gamma", "beta") — absent or null -> None.
+    pub fn param_idx(&self, key: &str) -> Option<usize> {
+        match self.0.opt(key) {
+            Some(j) if !j.is_null() => j.usize().ok(),
+            _ => None,
+        }
+    }
+}
+
+/// The parsed manifest of one compiled configuration.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub tag: String,
+    pub model: String,
+    pub method: String,
+    pub dataset: String,
+    pub width_mult: f64,
+    pub batch: usize,
+    pub n_bits: u32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub clip: bool,
+    pub input_shape: [usize; 3],
+    pub num_classes: usize,
+    pub n_quant: usize,
+    pub params: Vec<ParamMeta>,
+    pub state: Vec<StateMeta>,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).context("parsing manifest JSON")?;
+        let params = j
+            .get("params")?
+            .arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamMeta {
+                    name: p.get("name")?.str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    kind: p.get("kind")?.str()?.to_string(),
+                    qidx: match p.get("qidx")? {
+                        Json::Null => None,
+                        q => Some(q.usize()?),
+                    },
+                    fan_in: p.get("fan_in")?.usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let state = j
+            .get("state")?
+            .arr()?
+            .iter()
+            .map(|s| {
+                Ok(StateMeta {
+                    name: s.get("name")?.str()?.to_string(),
+                    shape: s.get("shape")?.usize_vec()?,
+                    init: s.get("init")?.num()? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = j
+            .get("layers")?
+            .arr()?
+            .iter()
+            .map(|l| LayerDesc(l.clone()))
+            .collect();
+        let ishape = j.get("input_shape")?.usize_vec()?;
+        anyhow::ensure!(ishape.len() == 3, "input_shape must be HWC");
+        Ok(Manifest {
+            tag: j.get("tag")?.str()?.to_string(),
+            model: j.get("model")?.str()?.to_string(),
+            method: j.get("method")?.str()?.to_string(),
+            dataset: j.get("dataset")?.str()?.to_string(),
+            width_mult: j.get("width_mult")?.num()?,
+            batch: j.get("batch")?.usize()?,
+            n_bits: j.get("n_bits")?.usize()? as u32,
+            momentum: j.get("momentum")?.num()? as f32,
+            weight_decay: j.get("weight_decay")?.num()? as f32,
+            clip: j.get("clip")?.boolean()?,
+            input_shape: [ishape[0], ishape[1], ishape[2]],
+            num_classes: j.get("num_classes")?.usize()?,
+            n_quant: j.get("n_quant")?.usize()?,
+            params,
+            state,
+            layers,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&src)
+    }
+
+    /// Total trainable parameters.
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Length of the deltas vector ((max(n_quant, 1),) in aot.py).
+    pub fn deltas_len(&self) -> usize {
+        self.n_quant.max(1)
+    }
+
+    /// Number of inputs of the train executable.
+    pub fn train_arity(&self) -> usize {
+        2 + 2 * self.params.len() + self.state.len() + 3
+    }
+
+    /// Number of outputs of the train executable.
+    pub fn train_outputs(&self) -> usize {
+        2 + 2 * self.params.len() + self.state.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "tag":"t","model":"mlp","method":"symog","dataset":"synth-mnist",
+      "width_mult":1.0,"batch":8,"n_bits":2,"momentum":0.9,
+      "weight_decay":0.0,"clip":true,"use_pallas":true,
+      "input_shape":[28,28,1],"num_classes":10,"n_quant":2,
+      "params":[
+        {"name":"l1.dense.w","shape":[784,16],"kind":"weight","qidx":0,"fan_in":784},
+        {"name":"l1.dense.b","shape":[16],"kind":"bias","qidx":null,"fan_in":0},
+        {"name":"l2.dense.w","shape":[16,10],"kind":"weight","qidx":1,"fan_in":16}
+      ],
+      "state":[{"name":"bn.m","shape":[16],"init":0.0}],
+      "layers":[{"type":"flatten"},{"type":"dense","out_f":16,"w":0,"b":1,"use_bias":true}],
+      "artifacts":{"train":"train.hlo.txt"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "mlp");
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].qidx, Some(0));
+        assert_eq!(m.params[1].qidx, None);
+        assert_eq!(m.num_params(), 784 * 16 + 16 + 160);
+        assert_eq!(m.train_arity(), 2 + 6 + 1 + 3);
+        assert_eq!(m.train_outputs(), 2 + 6 + 1);
+        assert_eq!(m.input_shape, [28, 28, 1]);
+        assert_eq!(m.layers[1].ty(), "dense");
+        assert_eq!(m.layers[1].param_idx("w"), Some(0));
+        assert_eq!(m.layers[0].param_idx("w"), None);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"tag":"x"}"#).is_err());
+    }
+}

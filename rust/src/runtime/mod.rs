@@ -1,0 +1,77 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them on PJRT.
+//!
+//! This wraps the `xla` crate's PJRT CPU client. One `Artifact` bundles the
+//! three executables of a compiled configuration (train / eval / evalq) with
+//! its manifest. Interchange is HLO *text* — see aot.py for why.
+
+mod artifact;
+mod manifest;
+mod tensor;
+
+pub use artifact::Artifact;
+pub use manifest::{LayerDesc, Manifest, ParamMeta, StateMeta};
+pub use tensor::{literal_f32, literal_i32, literal_scalar_f32, to_f32_vec};
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client + executable loader. Create once, share everywhere.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this image).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Load a full artifact directory (manifest + 3 executables).
+    pub fn load_artifact(&self, dir: &Path) -> Result<Artifact> {
+        Artifact::load(self, dir)
+    }
+}
+
+/// Execute with literal inputs and untuple the single tuple output into a
+/// flat literal vector (aot.py lowers with return_tuple=True).
+pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[L],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe.execute(args).context("PJRT execute")?;
+    let lit = out[0][0].to_literal_sync().context("download result")?;
+    lit.to_tuple().context("untuple result")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_hlo_is_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! Literal <-> host-buffer helpers.
+
+use anyhow::{Context, Result};
+
+/// Build an f32 literal of the given dimensions from a host slice.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "data len {} != prod(dims {:?})", data.len(), dims);
+    let lit = xla::Literal::vec1(data);
+    if dims.is_empty() {
+        // () scalar: reshape the 1-element vector
+        return lit.reshape(&[]).context("reshape to scalar");
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).context("reshape literal")
+}
+
+/// Build an i32 literal (labels) of the given dimensions.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product::<usize>().max(1);
+    anyhow::ensure!(data.len() == n, "data len {} != prod(dims {:?})", data.len(), dims);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).context("reshape literal")
+}
+
+/// f32 scalar literal.
+pub fn literal_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Download an f32 literal to a host vector.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to_vec<f32>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = literal_scalar_f32(3.5);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![3.5]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn labels_i32() {
+        let lit = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+    }
+}

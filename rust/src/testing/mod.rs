@@ -1,0 +1,88 @@
+//! Property-testing helpers (proptest is not vendored; this is a focused
+//! replacement: seeded random-case generation with failure reporting).
+
+use crate::util::rng::Rng;
+
+/// Run `body` for `cases` independently seeded RNGs. On panic, the failing
+/// seed is reported so the case replays deterministically with
+/// `forall_seed(seed, body)`.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, body: F) {
+    // base seed can be pinned via SYMOG_PROP_SEED for replay
+    let base = std::env::var("SYMOG_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            eprintln!("property failed: case {case}, replay with SYMOG_PROP_SEED and forall_seed({seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn forall_seed<F: FnOnce(&mut Rng)>(seed: u64, body: F) {
+    let mut rng = Rng::new(seed);
+    body(&mut rng);
+}
+
+/// Assert two f32 slices agree within `atol` element-wise.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= atol || (g.is_nan() && w.is_nan()),
+            "index {i}: got {g}, want {w} (atol {atol})"
+        );
+    }
+}
+
+/// Relative+absolute tolerance comparison (numpy allclose semantics).
+#[track_caller]
+pub fn assert_allclose_rel(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!((g - w).abs() <= tol, "index {i}: got {g}, want {w} (tol {tol})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        forall(10, |_| {
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(5, |rng| {
+            assert!(rng.f32() < 0.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn allclose_passes_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 0.0);
+        assert_allclose_rel(&[100.1], &[100.0], 1e-2, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 0.5);
+    }
+}

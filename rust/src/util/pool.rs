@@ -1,0 +1,87 @@
+//! Tiny scoped thread pool for data-parallel host work.
+//!
+//! rayon is not vendored, so batch assembly / dataset generation parallelism
+//! uses `std::thread::scope` chunking. The entry point is `par_chunks_mut`,
+//! which splits a mutable slice into one contiguous chunk per worker.
+
+/// Number of workers to use for host-side data parallelism.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(chunk_index, chunk)` over contiguous chunks of `data` on up to
+/// `workers` OS threads. Chunks are as even as possible; `f` must be Sync.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], workers: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (i, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, part));
+        }
+    });
+}
+
+/// Parallel-map `f` over `0..n`, collecting results in index order.
+pub fn par_map<R: Send, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let base: Vec<usize> = (0..n).collect();
+    // pair each output slot with its index via chunked ranges
+    let workers = workers.clamp(1, n.max(1));
+    let chunk = n.div_ceil(workers.max(1)).max(1);
+    std::thread::scope(|s| {
+        for (slots, idxs) in out.chunks_mut(chunk).zip(base.chunks(chunk)) {
+            let f = &f;
+            s.spawn(move || {
+                for (slot, &i) in slots.iter_mut().zip(idxs) {
+                    *slot = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 7, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = par_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_ok() {
+        par_chunks_mut::<u32, _>(&mut [], 4, |_, _| {});
+        assert!(par_map::<usize, _>(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn single_worker() {
+        let out = par_map(10, 1, |i| i + 1);
+        assert_eq!(out[9], 10);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration: the pure integer inference engine vs the float evalq path,
+//! and the quantization toolbox on real trained checkpoints.
+
+use std::path::{Path, PathBuf};
+
+use symog::coordinator::{TrainOptions, Trainer};
+use symog::data::Preset;
+use symog::inference::IntModel;
+use symog::runtime::Runtime;
+
+fn artifact_dir(tag: &str) -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(tag);
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn integer_engine_tracks_evalq_on_trained_lenet() {
+    let Some(dir) = artifact_dir("lenet5-symog-synth-mnist-w1-b2") else {
+        eprintln!("skipping: lenet5 artifact not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let (train, test) = Preset::SynthMnist.load(1024, 256, 11);
+
+    let mut trainer = Trainer::from_init(&art).unwrap();
+    let mut opts = TrainOptions::paper(6);
+    opts.seed = 11;
+    trainer.train(&train, &test, &opts).unwrap();
+    let (_, acc_q) = trainer.evaluate(&test, true).unwrap();
+
+    let ck = trainer.to_checkpoint().unwrap();
+    let model = IntModel::build(&art.manifest, &ck).unwrap();
+    assert!(model.all_ternary, "2-bit SYMOG weights must be ternary");
+    let usable = (test.len() / art.manifest.batch) * art.manifest.batch;
+    let acc_int = model
+        .accuracy(
+            &test.images[..usable * test.image_elems()],
+            &test.labels[..usable],
+            64,
+        )
+        .unwrap();
+    // the integer engine quantizes activations to 8 bits; allow a small gap
+    assert!(
+        (acc_int - acc_q).abs() < 0.08,
+        "integer engine {acc_int} vs evalq {acc_q}"
+    );
+    assert!(acc_int > 0.3, "integer engine broken: acc {acc_int}");
+
+    // cost model: ternary inference must clear the paper's 18.5x 8-bit claim.
+    // conv/dense contribute zero multiplies; the only remaining ones come
+    // from folded BN / non-power-of-two pooling — a tiny fraction of MACs.
+    let report = model.cost_report(1).unwrap();
+    assert!(
+        report.counts.int_mults * 20 < report.counts.acc_adds,
+        "multiplies not marginal: {} vs {} adds",
+        report.counts.int_mults,
+        report.counts.acc_adds
+    );
+    assert!(report.energy_ratio() > 18.5, "energy ratio {}", report.energy_ratio());
+    assert!(report.compression_ratio() > 8.0);
+}
+
+#[test]
+fn packed_model_roundtrip_preserves_predictions() {
+    let Some(dir) = artifact_dir("lenet5-symog-synth-mnist-w1-b2") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let (train, test) = Preset::SynthMnist.load(512, 128, 2);
+    let mut trainer = Trainer::from_init(&art).unwrap();
+    let mut opts = TrainOptions::paper(2);
+    opts.seed = 2;
+    opts.steps_per_epoch = Some(8);
+    trainer.train(&train, &test, &opts).unwrap();
+    let ck = trainer.to_checkpoint().unwrap();
+
+    let man_json = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let tmp_fxpm = std::env::temp_dir().join("symog_it.fxpm");
+    let tmp_ckpt = std::env::temp_dir().join("symog_it_full.ckpt");
+    symog::quant::packed::write_packed(&art.manifest, &man_json, &ck, &tmp_fxpm).unwrap();
+    ck.write(&tmp_ckpt).unwrap();
+
+    // packed file is much smaller than the float checkpoint
+    let packed_size = std::fs::metadata(&tmp_fxpm).unwrap().len();
+    let float_size = std::fs::metadata(&tmp_ckpt).unwrap().len();
+    assert!(
+        (float_size as f64 / packed_size as f64) > 6.0,
+        "packed {packed_size} vs float {float_size}"
+    );
+
+    // predictions identical between direct-ckpt engine and packed engine
+    let direct = IntModel::build(&art.manifest, &ck).unwrap();
+    let (man2, ck2) = symog::quant::packed::read_packed(&tmp_fxpm).unwrap();
+    let packed = IntModel::build(&man2, &ck2).unwrap();
+    let e = test.image_elems();
+    let pd = direct.predict(&test.images[..32 * e], 32).unwrap();
+    let pp = packed.predict(&test.images[..32 * e], 32).unwrap();
+    assert_eq!(pd, pp, "packed model must predict identically");
+    std::fs::remove_file(&tmp_fxpm).ok();
+    std::fs::remove_file(&tmp_ckpt).ok();
+}
+
+#[test]
+fn naive_ptq_is_worse_than_symog_training() {
+    // section 2.1's point: post-quantizing a float model loses accuracy;
+    // SYMOG training closes that gap. Verified end-to-end on the baseline
+    // vs symog lenet artifacts.
+    let (Some(bdir), Some(sdir)) = (
+        artifact_dir("lenet5-baseline-synth-mnist-w1-b2"),
+        artifact_dir("lenet5-symog-synth-mnist-w1-b2"),
+    ) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let base_art = rt.load_artifact(&bdir).unwrap();
+    let symog_art = rt.load_artifact(&sdir).unwrap();
+    let (train, test) = Preset::SynthMnist.load(1024, 256, 3);
+
+    // float pretrain
+    let mut base = Trainer::from_init(&base_art).unwrap();
+    let mut opts = TrainOptions::paper(5);
+    opts.seed = 3;
+    base.train(&train, &test, &opts).unwrap();
+    let (_, base_float_acc) = base.evaluate(&test, false).unwrap();
+    // naive PTQ = evalq on the float-trained weights
+    let (_, ptq_acc) = base.evaluate(&test, true).unwrap();
+
+    // SYMOG continue-training from the same pretrained weights
+    let ck = base.to_checkpoint().unwrap();
+    let mut symog = Trainer::from_checkpoint(&symog_art, &ck, true).unwrap();
+    let mut sopts = TrainOptions::paper(6);
+    sopts.seed = 3;
+    symog.train(&train, &test, &sopts).unwrap();
+    let (_, symog_q_acc) = symog.evaluate(&test, true).unwrap();
+
+    assert!(
+        symog_q_acc > ptq_acc + 0.02,
+        "SYMOG {symog_q_acc} must beat naive PTQ {ptq_acc} (float was {base_float_acc})"
+    );
+}
+
+#[test]
+fn quantize_ckpt_produces_codebook_weights() {
+    let Some(dir) = artifact_dir("lenet5-baseline-synth-mnist-w1-b2") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let ck = symog::coordinator::Checkpoint::read(&art.init_ckpt()).unwrap();
+    let qck = symog::quant::quantize_ckpt(&art.manifest, &ck).unwrap();
+    let deltas = &qck.find("__deltas__").unwrap().data;
+    for p in &art.manifest.params {
+        let Some(qidx) = p.qidx else { continue };
+        let t = qck.find(&p.name).unwrap();
+        let delta = deltas[qidx];
+        for &w in &t.data {
+            let m = w / delta;
+            assert!((m - m.round()).abs() < 1e-5, "{} not on codebook: {w}", p.name);
+            assert!(m.abs() <= 1.0 + 1e-5);
+        }
+    }
+    // stats on the quantized ckpt: zero quantization error
+    let stats = symog::quant::layer_stats(&art.manifest, &qck).unwrap();
+    for s in &stats {
+        assert!(s.mse < 1e-12, "{}: mse {}", s.name, s.mse);
+        let total: f32 = s.occupancy.iter().sum();
+        assert!((total - 1.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: comparator methods (BC / TWN / BR) train through the same
+//! coordinator, and failure modes are rejected cleanly.
+
+use std::path::{Path, PathBuf};
+
+use symog::coordinator::{Checkpoint, TrainOptions, Trainer};
+use symog::data::Preset;
+use symog::runtime::Runtime;
+
+fn artifact_dir(tag: &str) -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(tag);
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn comparator_methods_learn() {
+    let rt = Runtime::cpu().unwrap();
+    let (train, test) = Preset::SynthMnist.load(768, 128, 21);
+    for method in ["bc", "twn", "br"] {
+        let tag = format!("lenet5-{method}-synth-mnist-w1-b2");
+        let Some(dir) = artifact_dir(&tag) else {
+            eprintln!("skipping {tag}: not built");
+            continue;
+        };
+        let art = rt.load_artifact(&dir).unwrap();
+        assert_eq!(art.manifest.method, method);
+        let mut trainer = Trainer::from_init(&art).unwrap();
+        let mut opts = TrainOptions::paper(3);
+        opts.seed = 21;
+        opts.steps_per_epoch = Some(8);
+        // BR reuses lambda as its relaxation coefficient; BC/TWN ignore it
+        let outcome = trainer.train(&train, &test, &opts).unwrap();
+        let logs = &outcome.log.epochs;
+        assert!(
+            logs.last().unwrap().train_loss < logs[0].train_loss,
+            "{method}: loss {} -> {}",
+            logs[0].train_loss,
+            logs.last().unwrap().train_loss
+        );
+    }
+}
+
+#[test]
+fn bits_ablation_artifacts_share_interface() {
+    // the N-bit ablation artifacts must drive through the same coordinator
+    let rt = Runtime::cpu().unwrap();
+    let (train, test) = Preset::SynthMnist.load(512, 128, 5);
+    for bits in [3u32, 4, 8] {
+        let tag = format!("lenet5-symog-synth-mnist-w1-b{bits}");
+        let Some(dir) = artifact_dir(&tag) else {
+            eprintln!("skipping {tag}");
+            continue;
+        };
+        let art = rt.load_artifact(&dir).unwrap();
+        assert_eq!(art.manifest.n_bits, bits);
+        let mut trainer = Trainer::from_init(&art).unwrap();
+        let mut opts = TrainOptions::paper(1);
+        opts.steps_per_epoch = Some(4);
+        let outcome = trainer.train(&train, &test, &opts).unwrap();
+        assert!(outcome.log.epochs[0].testq_acc > 0.05);
+        // weights clipped to the wider N-bit domain
+        let bound_factor = ((1i32 << (bits - 1)) - 1) as f32;
+        for (w, d) in trainer.quant_layers_host().unwrap() {
+            for x in w {
+                assert!(x.abs() <= d * bound_factor + 1e-5);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_shape_mismatch_rejected() {
+    let Some(dir) = artifact_dir("smoke") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let mut ck = Checkpoint::read(&art.init_ckpt()).unwrap();
+    // corrupt the first weight tensor's shape
+    ck.tensors[0].dims = vec![1, 2];
+    ck.tensors[0].data = vec![0.0; 2];
+    let err = Trainer::from_checkpoint(&art, &ck, true);
+    assert!(err.is_err(), "shape mismatch must be rejected");
+}
+
+#[test]
+fn missing_tensor_rejected() {
+    let Some(dir) = artifact_dir("smoke") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let mut ck = Checkpoint::read(&art.init_ckpt()).unwrap();
+    ck.tensors.remove(0);
+    assert!(Trainer::from_checkpoint(&art, &ck, true).is_err());
+}
+
+#[test]
+fn truncated_checkpoint_rejected() {
+    let Some(dir) = artifact_dir("smoke") else {
+        eprintln!("skipping");
+        return;
+    };
+    let src = std::fs::read(dir.join("init.ckpt")).unwrap();
+    let tmp = std::env::temp_dir().join("symog_truncated.ckpt");
+    std::fs::write(&tmp, &src[..src.len() / 2]).unwrap();
+    assert!(Checkpoint::read(&tmp).is_err());
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn eval_smaller_than_batch_rejected() {
+    let Some(dir) = artifact_dir("smoke") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let trainer = Trainer::from_init(&art).unwrap();
+    let (_, mut test) = Preset::SynthMnist.load(64, 32, 0);
+    let tiny = test.split_off(8); // 8 < batch(16)
+    assert!(trainer.evaluate(&tiny, false).is_err());
+}
+
+#[test]
+fn noclip_artifact_lets_weights_escape() {
+    // the Fig-4 ablation artifact really does skip clipping
+    let Some(dir) = artifact_dir("lenet5-symog-synth-mnist-w1-b2-noclip") else {
+        eprintln!("skipping");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    assert!(!art.manifest.clip);
+    let (train, test) = Preset::SynthMnist.load(512, 128, 9);
+    let mut trainer = Trainer::from_init(&art).unwrap();
+    let mut opts = TrainOptions::paper(2);
+    opts.seed = 9;
+    trainer.train(&train, &test, &opts).unwrap();
+    let escaped = trainer
+        .quant_layers_host()
+        .unwrap()
+        .iter()
+        .any(|(w, d)| w.iter().any(|x| x.abs() > d * 1.0 + 1e-5));
+    assert!(escaped, "without clipping some weight should leave ±Δ");
+}

@@ -1,0 +1,121 @@
+//! End-to-end integration: load AOT artifacts, drive the full training
+//! coordinator, verify learning + quantization behaviour.
+//!
+//! Requires `make artifacts` (the `smoke` config); tests skip if absent.
+
+use std::path::{Path, PathBuf};
+
+use symog::coordinator::{Checkpoint, LambdaSchedule, TrainOptions, Trainer};
+use symog::data::{AugmentConfig, Preset};
+use symog::runtime::Runtime;
+
+fn smoke_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/smoke");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+#[test]
+fn train_smoke_end_to_end() {
+    let Some(dir) = smoke_dir() else {
+        eprintln!("skipping: artifacts/smoke not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    assert_eq!(art.manifest.model, "mlp");
+    assert_eq!(art.manifest.method, "symog");
+
+    let (train, test) = Preset::SynthMnist.load(512, 128, 42);
+    let mut trainer = Trainer::from_init(&art).unwrap();
+
+    // deltas were resolved from init weights: powers of two, positive
+    assert_eq!(trainer.deltas.len(), art.manifest.deltas_len());
+    for &d in &trainer.deltas {
+        assert!(d > 0.0);
+        let f = d.log2();
+        assert!((f - f.round()).abs() < 1e-6, "delta {d} not a power of two");
+    }
+
+    let mut opts = TrainOptions::paper(4);
+    opts.seed = 7;
+    opts.augment = AugmentConfig::none();
+    opts.track_modes = true;
+    opts.hist_epochs = vec![0, 4];
+    opts.hist_layers = vec![0];
+    let outcome = trainer.train(&train, &test, &opts).unwrap();
+
+    // learning happened
+    let logs = &outcome.log.epochs;
+    assert_eq!(logs.len(), 4);
+    assert!(
+        logs.last().unwrap().train_loss < logs[0].train_loss,
+        "train loss did not decrease: {} -> {}",
+        logs[0].train_loss,
+        logs.last().unwrap().train_loss
+    );
+    // classifier beats chance (10 classes) on held-out data, float and quantized
+    assert!(logs.last().unwrap().test_acc > 0.3);
+    assert!(logs.last().unwrap().testq_acc > 0.2);
+
+    // probes produced data
+    let tracker = outcome.tracker.unwrap();
+    assert_eq!(tracker.switch_rates.len(), 5); // baseline + 4 epochs
+    assert_eq!(outcome.histograms[0].1.hists.len(), 2); // epochs 0 and 4
+
+    // weights respect the clipping domain (section 3.4)
+    let layers = trainer.quant_layers_host().unwrap();
+    for (w, d) in &layers {
+        for &x in w {
+            assert!(x.abs() <= d * 1.0 + 1e-5, "weight {x} outside ±{d}");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(dir) = smoke_dir() else {
+        eprintln!("skipping: artifacts/smoke not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let (train, test) = Preset::SynthMnist.load(256, 64, 1);
+
+    let mut trainer = Trainer::from_init(&art).unwrap();
+    let mut opts = TrainOptions::paper(1);
+    opts.steps_per_epoch = Some(4);
+    trainer.train(&train, &test, &opts).unwrap();
+
+    let tmp = std::env::temp_dir().join("symog_it_ckpt.ckpt");
+    trainer.save(&tmp).unwrap();
+    let ck = Checkpoint::read(&tmp).unwrap();
+    assert_eq!(ck.meta_i64("epoch"), Some(1));
+
+    // resume without re-solving deltas: state must match exactly
+    let trainer2 = Trainer::from_checkpoint(&art, &ck, false).unwrap();
+    assert_eq!(trainer2.deltas, trainer.deltas);
+    assert_eq!(trainer2.epoch, 1);
+    let (l1, a1) = trainer.evaluate(&test, true).unwrap();
+    let (l2, a2) = trainer2.evaluate(&test, true).unwrap();
+    assert!((l1 - l2).abs() < 1e-6);
+    assert_eq!(a1, a2);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn lambda_off_matches_baseline_semantics() {
+    // SYMOG with lambda = 0 must still learn (it degenerates to clipped SGD)
+    let Some(dir) = smoke_dir() else {
+        eprintln!("skipping: artifacts/smoke not built");
+        return;
+    };
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load_artifact(&dir).unwrap();
+    let (train, test) = Preset::SynthMnist.load(256, 64, 5);
+    let mut trainer = Trainer::from_init(&art).unwrap();
+    let mut opts = TrainOptions::paper(2);
+    opts.lambda = LambdaSchedule::Off;
+    let outcome = trainer.train(&train, &test, &opts).unwrap();
+    let logs = &outcome.log.epochs;
+    assert!(logs[1].train_loss < logs[0].train_loss * 1.05);
+}
