@@ -4,11 +4,16 @@
 //!   cargo bench --bench hotpath
 //!
 //! Sections:
-//!   1. train-step latency breakdown (batch assembly / literal upload /
+//!   1. integer conv/dense: naive loops vs im2col + blocked GEMM on
+//!      VGG7-shaped layers (bit-identity asserted; emits BENCH_hotpath.json
+//!      at the repo root so the perf trajectory is tracked PR over PR).
+//!   2. train-step latency breakdown (batch assembly / literal upload /
 //!      execute) for the lenet5 artifact — the L3 coordinator target is
 //!      <10% of step time outside `execute`.
-//!   2. eval + integer-engine throughput.
-//!   3. substrate microbenches: quantizer, solver, mode tracking, synth-data.
+//!   3. eval + integer-engine throughput.
+//!   4. substrate microbenches: quantizer, solver, mode tracking, synth-data.
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 use symog::bench::{bench, bench_budgeted, fmt_time, Stats};
@@ -16,16 +21,22 @@ use symog::coordinator::{ModeTracker, Trainer};
 use symog::data::{AugmentConfig, BatchIter, Preset};
 use symog::driver::artifacts_root;
 use symog::fixedpoint;
-use symog::inference::IntModel;
+use symog::inference::{
+    conv2d, conv2d_naive, dense, dense_naive, IntModel, OpCounts, QTensor, QWeight,
+};
 use symog::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Runtime};
+use symog::util::json::Json;
 use symog::util::rng::Rng;
 
 fn main() -> Result<()> {
     println!("== SYMOG hot-path benchmarks ==\n");
-    // SYMOG_HOTPATH=substrates|runtime|engine runs one section only
+    // SYMOG_HOTPATH=gemm|substrates|runtime|engine runs one section only
     let section = std::env::var("SYMOG_HOTPATH").unwrap_or_default();
     let mut report: Vec<Stats> = Vec::new();
 
+    if section.is_empty() || section == "gemm" {
+        gemm_benches(&mut report)?;
+    }
     if section.is_empty() || section == "substrates" {
         substrate_benches(&mut report);
     }
@@ -49,6 +60,190 @@ fn main() -> Result<()> {
     }
     std::fs::write("results/hotpath.csv", csv)?;
     println!("-> results/hotpath.csv");
+    Ok(())
+}
+
+/// One naive-vs-GEMM conv comparison case (stride-1 SAME, VGG7-shaped).
+struct ConvCase {
+    name: &'static str,
+    n: usize,
+    h: usize,
+    cin: usize,
+    cout: usize,
+    n_bits: u32,
+    /// weight zero fraction for 2-bit cases (SYMOG's center mode)
+    zero_frac: f32,
+}
+
+const CONV_CASES: &[ConvCase] = &[
+    // VGG7 mid-stack shape, 8-bit weights: the multiply micro-kernel
+    ConvCase {
+        name: "conv3 16x16 64->64 w8",
+        n: 32,
+        h: 16,
+        cin: 64,
+        cout: 64,
+        n_bits: 8,
+        zero_frac: 0.0,
+    },
+    // VGG7 top-stack shape, uniform ternary (2-bit SYMOG)
+    ConvCase {
+        name: "conv5 8x8 128->128 w2",
+        n: 32,
+        h: 8,
+        cin: 128,
+        cout: 128,
+        n_bits: 2,
+        zero_frac: 0.34,
+    },
+    // same shape, sparse ternary: the pure add/sub plan engages
+    ConvCase {
+        name: "conv5 8x8 128->128 w2-sparse",
+        n: 32,
+        h: 8,
+        cin: 128,
+        cout: 128,
+        n_bits: 2,
+        zero_frac: 0.8,
+    },
+];
+
+fn conv_weights(rng: &mut Rng, numel: usize, n_bits: u32, zero_frac: f32, delta: f32) -> Vec<f32> {
+    (0..numel)
+        .map(|_| {
+            if n_bits == 2 {
+                if rng.bool(zero_frac) {
+                    0.0
+                } else if rng.bool(0.5) {
+                    delta
+                } else {
+                    -delta
+                }
+            } else {
+                rng.normal() * 8.0 * delta
+            }
+        })
+        .collect()
+}
+
+fn json_num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// Naive vs im2col+GEMM integer kernels; asserts bit-identity, reports
+/// throughput, and writes BENCH_hotpath.json at the repo root.
+fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
+    println!("--- integer GEMM hot path (naive vs im2col+blocked GEMM) ---");
+    let workers = symog::util::pool::default_workers();
+    let delta = 0.25f32;
+    let mut cases_json: Vec<Json> = Vec::new();
+    let mut conv_speedups: Vec<f64> = Vec::new();
+
+    for case in CONV_CASES {
+        let mut rng = Rng::new(0x6E3A);
+        let (n, h, w) = (case.n, case.h, case.h);
+        let k = 3usize;
+        let xs: Vec<f32> = (0..n * h * w * case.cin).map(|_| rng.normal()).collect();
+        let numel = k * k * case.cin * case.cout;
+        let ws = conv_weights(&mut rng, numel, case.n_bits, case.zero_frac, delta);
+        let qx = QTensor::from_f32(&xs, [n, h, w, case.cin], 8);
+        let qw = QWeight::encode(&ws, [k, k, case.cin, case.cout], delta, case.n_bits);
+        let macs = (n * h * w * case.cout * k * k * case.cin) as u64;
+
+        // correctness gate before timing anything
+        let mut cg = OpCounts::default();
+        let mut cn = OpCounts::default();
+        let got = conv2d(&qx, &qw, 1, true, &mut cg);
+        let want = conv2d_naive(&qx, &qw, 1, true, &mut cn);
+        assert_eq!(got.data, want.data, "{}: GEMM output differs from naive", case.name);
+        assert_eq!(cg, cn, "{}: op counts differ", case.name);
+
+        let naive = bench(&format!("naive {}", case.name), 1, 3, || {
+            let mut c = OpCounts::default();
+            std::hint::black_box(conv2d_naive(&qx, &qw, 1, true, &mut c));
+        });
+        let gemm = bench(&format!("gemm  {}", case.name), 2, 10, || {
+            let mut c = OpCounts::default();
+            std::hint::black_box(conv2d(&qx, &qw, 1, true, &mut c));
+        });
+        let speedup = naive.median_s / gemm.median_s;
+        println!(
+            "{}\n{}\n  -> {:.1} GMAC/s vs {:.1} GMAC/s: {:.2}x speedup (target >= 3x)",
+            naive.row(),
+            gemm.row(),
+            macs as f64 / naive.median_s / 1e9,
+            macs as f64 / gemm.median_s / 1e9,
+            speedup,
+        );
+        conv_speedups.push(speedup);
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(case.name.to_string()));
+        o.insert("kind".to_string(), Json::Str("conv2d".to_string()));
+        o.insert("batch".to_string(), json_num(n as f64));
+        o.insert("macs".to_string(), json_num(macs as f64));
+        o.insert("n_bits".to_string(), json_num(case.n_bits as f64));
+        o.insert("naive_s".to_string(), json_num(naive.median_s));
+        o.insert("gemm_s".to_string(), json_num(gemm.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        o.insert("bit_identical".to_string(), Json::Bool(true));
+        cases_json.push(Json::Obj(o));
+        report.push(naive);
+        report.push(gemm);
+    }
+
+    // dense layer (VGG7 classifier head shape)
+    let (dn, fi, fo) = (64usize, 2048usize, 512usize);
+    let mut rng = Rng::new(0xD3);
+    let xs: Vec<f32> = (0..dn * fi).map(|_| rng.normal()).collect();
+    let ws = conv_weights(&mut rng, fi * fo, 2, 0.34, delta);
+    let qx = QTensor::from_f32(&xs, [dn, 1, 1, fi], 8);
+    let qw = QWeight::encode(&ws, [fi, fo, 1, 1], delta, 2);
+    let macs = (dn * fi * fo) as u64;
+    let mut cg = OpCounts::default();
+    let mut cn = OpCounts::default();
+    assert_eq!(dense(&qx, &qw, &mut cg).data, dense_naive(&qx, &qw, &mut cn).data);
+    assert_eq!(cg, cn);
+    let naive = bench("naive dense 2048->512 b64", 1, 5, || {
+        let mut c = OpCounts::default();
+        std::hint::black_box(dense_naive(&qx, &qw, &mut c));
+    });
+    let gemm = bench("gemm  dense 2048->512 b64", 2, 10, || {
+        let mut c = OpCounts::default();
+        std::hint::black_box(dense(&qx, &qw, &mut c));
+    });
+    let dense_speedup = naive.median_s / gemm.median_s;
+    println!("{}\n{}\n  -> {:.2}x speedup", naive.row(), gemm.row(), dense_speedup);
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str("dense 2048->512".to_string()));
+    o.insert("kind".to_string(), Json::Str("dense".to_string()));
+    o.insert("batch".to_string(), json_num(dn as f64));
+    o.insert("macs".to_string(), json_num(macs as f64));
+    o.insert("n_bits".to_string(), json_num(2.0));
+    o.insert("naive_s".to_string(), json_num(naive.median_s));
+    o.insert("gemm_s".to_string(), json_num(gemm.median_s));
+    o.insert("speedup".to_string(), json_num(dense_speedup));
+    o.insert("bit_identical".to_string(), Json::Bool(true));
+    cases_json.push(Json::Obj(o));
+    report.push(naive);
+    report.push(gemm);
+
+    let min = conv_speedups.iter().copied().fold(f64::INFINITY, f64::min);
+    let geomean =
+        (conv_speedups.iter().map(|s| s.ln()).sum::<f64>() / conv_speedups.len() as f64).exp();
+    println!("\nconv speedup: min {min:.2}x, geomean {geomean:.2}x over {workers} workers\n");
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+    top.insert("workers".to_string(), json_num(workers as f64));
+    top.insert("conv_speedup_min".to_string(), json_num(min));
+    top.insert("conv_speedup_geomean".to_string(), json_num(geomean));
+    top.insert("dense_speedup".to_string(), json_num(dense_speedup));
+    top.insert("cases".to_string(), Json::Arr(cases_json));
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_hotpath.json");
+    std::fs::write(&out, Json::Obj(top).to_string() + "\n")?;
+    println!("-> {}", out.display());
     Ok(())
 }
 

@@ -15,8 +15,8 @@ pub mod tracker;
 pub mod trainer;
 
 pub use checkpoint::{Checkpoint, Kind, Tensor};
-pub use histogram::{mode_occupancy, Histogram, HistogramSeries};
+pub use histogram::{Histogram, HistogramSeries, mode_occupancy};
 pub use metrics::{EpochLog, RunLog};
 pub use schedule::{LambdaSchedule, LrSchedule};
 pub use tracker::ModeTracker;
-pub use trainer::{TrainOptions, TrainOutcome, Trainer};
+pub use trainer::{Trainer, TrainOptions, TrainOutcome};

@@ -19,7 +19,7 @@ use anyhow::{Context, Result};
 
 use crate::data::{AugmentConfig, BatchIter, Dataset};
 use crate::fixedpoint;
-use crate::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Artifact};
+use crate::runtime::{Artifact, literal_f32, literal_i32, literal_scalar_f32, run};
 
 use super::checkpoint::{Checkpoint, Kind, Tensor};
 use super::histogram::{Histogram, HistogramSeries};

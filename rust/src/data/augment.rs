@@ -150,7 +150,8 @@ mod tests {
             if (oy, ox) == (p, p) {
                 let mut img = img0.clone();
                 let mut rng = Rng::new(seed);
-                augment_batch(&mut img, [6, 6, 1], &AugmentConfig { pad: p, flip: false }, &mut rng);
+                let cfg = AugmentConfig { pad: p, flip: false };
+                augment_batch(&mut img, [6, 6, 1], &cfg, &mut rng);
                 assert_eq!(img, img0);
                 found = true;
                 break;

@@ -65,7 +65,7 @@ impl<'a> BatchIter<'a> {
     }
 }
 
-impl<'a> Iterator for BatchIter<'a> {
+impl Iterator for BatchIter<'_> {
     type Item = Batch;
 
     fn next(&mut self) -> Option<Batch> {

@@ -12,7 +12,7 @@ mod batch;
 mod synthetic;
 
 pub use augment::{augment_batch, AugmentConfig};
-pub use batch::{BatchIter, Batch};
+pub use batch::{Batch, BatchIter};
 pub use synthetic::{synth_dataset, SynthSpec};
 
 /// An in-memory image-classification dataset, NHWC f32 + i32 labels.

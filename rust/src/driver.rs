@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::config::Experiment;
-use crate::coordinator::{Checkpoint, TrainOutcome, Trainer};
+use crate::coordinator::{Checkpoint, Trainer, TrainOutcome};
 use crate::data::Dataset;
 use crate::runtime::{Artifact, Runtime};
 

@@ -32,26 +32,6 @@ impl Fxp {
         self.mantissa as f32 * (2f32).powi(-self.frac)
     }
 
-    /// Exact product: mantissas multiply, binary points add. Integer-only.
-    pub fn mul(self, other: Fxp) -> Fxp {
-        Fxp {
-            mantissa: (self.mantissa as i64 * other.mantissa as i64)
-                .clamp(i32::MIN as i64, i32::MAX as i64) as i32,
-            frac: self.frac + other.frac,
-        }
-    }
-
-    /// Sum after aligning binary points (shift the coarser operand up).
-    pub fn add(self, other: Fxp) -> Fxp {
-        let frac = self.frac.max(other.frac);
-        let a = (self.mantissa as i64) << (frac - self.frac);
-        let b = (other.mantissa as i64) << (frac - other.frac);
-        Fxp {
-            mantissa: (a + b).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
-            frac,
-        }
-    }
-
     /// Rescale to `frac` fractional bits with round-half-away-from-zero —
     /// a pure shift (+ rounding addend) in hardware.
     pub fn rescale(self, frac: i32) -> Fxp {
@@ -66,6 +46,34 @@ impl Fxp {
         }
         let shift = self.frac - frac;
         Fxp { mantissa: round_shift(self.mantissa as i64, shift) as i32, frac }
+    }
+}
+
+/// Exact product: mantissas multiply, binary points add. Integer-only.
+impl std::ops::Mul for Fxp {
+    type Output = Fxp;
+
+    fn mul(self, other: Fxp) -> Fxp {
+        Fxp {
+            mantissa: (self.mantissa as i64 * other.mantissa as i64)
+                .clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+            frac: self.frac + other.frac,
+        }
+    }
+}
+
+/// Sum after aligning binary points (shift the coarser operand up).
+impl std::ops::Add for Fxp {
+    type Output = Fxp;
+
+    fn add(self, other: Fxp) -> Fxp {
+        let frac = self.frac.max(other.frac);
+        let a = (self.mantissa as i64) << (frac - self.frac);
+        let b = (other.mantissa as i64) << (frac - other.frac);
+        Fxp {
+            mantissa: (a + b).clamp(i32::MIN as i64, i32::MAX as i64) as i32,
+            frac,
+        }
     }
 }
 
@@ -118,7 +126,7 @@ mod tests {
     fn mul_is_exact() {
         let a = Fxp::from_f32(1.25, 2).unwrap(); // m=5, f=2
         let b = Fxp::from_f32(-0.5, 1).unwrap(); // m=-1, f=1
-        let c = a.mul(b);
+        let c = a * b;
         assert_eq!(c.to_f32(), -0.625);
         assert_eq!(c.frac, 3);
     }
@@ -127,8 +135,8 @@ mod tests {
     fn add_aligns_points() {
         let a = Fxp::from_f32(1.5, 1).unwrap();
         let b = Fxp::from_f32(0.25, 2).unwrap();
-        assert_eq!(a.add(b).to_f32(), 1.75);
-        assert_eq!(b.add(a).to_f32(), 1.75);
+        assert_eq!((a + b).to_f32(), 1.75);
+        assert_eq!((b + a).to_f32(), 1.75);
     }
 
     #[test]

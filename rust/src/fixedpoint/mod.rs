@@ -9,8 +9,10 @@ mod fxp;
 mod quantizer;
 mod solver;
 
-pub use fxp::{round_shift as fxp_round_shift, Fxp};
-pub use quantizer::{clip_bound, mode_index, mode_indices, quant_error, quantize, quantize_slice, Quantizer};
+pub use fxp::{Fxp, round_shift as fxp_round_shift};
+pub use quantizer::{
+    clip_bound, mode_index, mode_indices, quant_error, quantize, quantize_slice, Quantizer,
+};
 pub use solver::{optimal_delta, optimal_delta_refined};
 
 #[cfg(test)]

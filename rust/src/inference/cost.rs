@@ -24,7 +24,8 @@ impl OpCounts {
         self.acc_adds + self.int_mults + self.shifts + self.compares
     }
 
-    pub fn add(&mut self, other: &OpCounts) {
+    /// Accumulate another count set into this one.
+    pub fn merge(&mut self, other: &OpCounts) {
         self.acc_adds += other.acc_adds;
         self.int_mults += other.int_mults;
         self.shifts += other.shifts;
@@ -115,7 +116,13 @@ impl CostModel {
     /// `float_macs`: MACs of the float model (== acc_adds of the integer
     /// engine's conv/dense). `param_count`: weights in quantized layers.
     /// `other_params`: float-kept parameters (bias/BN).
-    pub fn report(&self, counts: OpCounts, float_macs: u64, param_count: u64, other_params: u64) -> CostReport {
+    pub fn report(
+        &self,
+        counts: OpCounts,
+        float_macs: u64,
+        param_count: u64,
+        other_params: u64,
+    ) -> CostReport {
         let t = &self.table;
         let float_energy = float_macs as f64 * (t.f32_mult + t.f32_add);
         // fixed energy: accumulator adds at i32-add cost, residual mults at
@@ -165,7 +172,7 @@ mod tests {
     #[test]
     fn counts_add() {
         let mut a = OpCounts { acc_adds: 1, int_mults: 2, shifts: 3, compares: 4 };
-        a.add(&OpCounts { acc_adds: 10, int_mults: 20, shifts: 30, compares: 40 });
+        a.merge(&OpCounts { acc_adds: 10, int_mults: 20, shifts: 30, compares: 40 });
         assert_eq!(a.total(), 110);
     }
 

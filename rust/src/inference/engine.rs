@@ -26,6 +26,19 @@ enum IntLayer {
     Concat { from: usize },
 }
 
+/// Which conv/dense implementation the engine drives.
+///
+/// `Gemm` (the default) is the im2col + blocked-GEMM hot path, parallel
+/// over the batch; `Naive` is the direct-loop reference. Both are exact
+/// integer arithmetic and produce bit-identical activations — `Naive`
+/// exists for cross-checking and benchmarking, not as a fallback.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    #[default]
+    Gemm,
+    Naive,
+}
+
 /// The integer model: quantized weights + the layer program.
 pub struct IntModel {
     layers: Vec<IntLayer>,
@@ -38,6 +51,8 @@ pub struct IntModel {
     pub aux_params: u64,
     /// whether every quantized layer is ternary (pure add/sub inference)
     pub all_ternary: bool,
+    /// conv/dense implementation (GEMM hot path by default)
+    pub backend: Backend,
 }
 
 impl IntModel {
@@ -144,7 +159,14 @@ impl IntModel {
             quant_params,
             aux_params,
             all_ternary,
+            backend: Backend::default(),
         })
+    }
+
+    /// Builder-style backend override (used by the naive-vs-GEMM checks).
+    pub fn with_backend(mut self, backend: Backend) -> IntModel {
+        self.backend = backend;
+        self
     }
 
     /// Forward pass on a float batch (encoded to 8-bit fixed point at the
@@ -166,13 +188,21 @@ impl IntModel {
         for (li, layer) in self.layers.iter().enumerate() {
             match layer {
                 IntLayer::Conv { w, bias, stride, pad_same } => {
-                    x = ops::conv2d(&x, w, *stride, *pad_same, &mut counts);
+                    x = match self.backend {
+                        Backend::Gemm => ops::conv2d(&x, w, *stride, *pad_same, &mut counts),
+                        Backend::Naive => {
+                            ops::conv2d_naive(&x, w, *stride, *pad_same, &mut counts)
+                        }
+                    };
                     if let Some(b) = bias {
                         ops::add_bias(&mut x, b, &mut counts);
                     }
                 }
                 IntLayer::Dense { w, bias } => {
-                    x = ops::dense(&x, w, &mut counts);
+                    x = match self.backend {
+                        Backend::Gemm => ops::dense(&x, w, &mut counts),
+                        Backend::Naive => ops::dense_naive(&x, w, &mut counts),
+                    };
                     if let Some(b) = bias {
                         ops::add_bias(&mut x, b, &mut counts);
                     }

@@ -1,0 +1,467 @@
+//! im2col + blocked integer GEMM — the inference engine's hot path.
+//!
+//! The direct convolution loops (kept as `ops::conv2d_naive` for
+//! cross-checking and benchmarking) walk the input once per kernel tap and
+//! re-stream the whole weight tensor for every output pixel. This module
+//! restructures conv/dense as matrix multiplication:
+//!
+//! * **im2col**: each image's receptive fields are gathered into a dense
+//!   patch matrix `A[oh*ow, kh*kw*cin]` (padding becomes literal zeros, so
+//!   the inner loops are branch-free);
+//! * **blocked GEMM**: `C += A * B` with `B = `HWIO mantissas reshaped to
+//!   `[kh*kw*cin, cout]` (no copy needed — that IS the HWIO layout). The
+//!   kernel processes `MR = 4` output rows at a time so each loaded weight
+//!   row is reused fourfold from registers, and blocks the depth dimension
+//!   to keep the active weight panel cache-resident;
+//! * **ternary fast path**: when every mantissa is in {-1, 0, +1} *and* the
+//!   zero mode is well occupied, the weight matrix is transposed once into
+//!   sign-separated index lists and each MAC degenerates to a pure integer
+//!   add or subtract — the paper's fixed-point hardware claim, executed
+//!   literally;
+//! * **batch parallelism**: images are independent, so the batch dimension
+//!   is fanned out over `util::pool::par_chunks_mut`.
+//!
+//! Everything is exact i32 arithmetic in every path, so naive and GEMM
+//! results are bit-identical (asserted by property tests here and the
+//! `smoke_engine` integration test).
+
+use crate::util::pool;
+
+use super::ops::{QTensor, QWeight};
+
+/// Rows of `C` processed together by the register-blocked micro-kernel.
+const MR: usize = 4;
+
+/// Depth-block size: the active `B` panel is `KC * cols` i32 wide.
+const KC: usize = 256;
+
+/// Engage the add/sub ternary kernel only when at least this fraction of
+/// the weight mantissas is zero — below that, the vectorized multiply
+/// kernel wins on contemporary SIMD hardware.
+const TERNARY_MIN_ZERO_FRAC: f32 = 0.5;
+
+/// `C[rows, cols] += A[rows, depth] * B[depth, cols]`, all row-major.
+pub(crate) fn gemm_i32(
+    a: &[i32],
+    b: &[i32],
+    c: &mut [i32],
+    rows: usize,
+    depth: usize,
+    cols: usize,
+) {
+    debug_assert_eq!(a.len(), rows * depth);
+    debug_assert_eq!(b.len(), depth * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    for d0 in (0..depth).step_by(KC) {
+        let d1 = (d0 + KC).min(depth);
+        for (ab, cb) in a.chunks(MR * depth).zip(c.chunks_mut(MR * cols)) {
+            if cb.len() == MR * cols {
+                micro_kernel_4(ab, b, cb, depth, cols, d0, d1);
+            } else {
+                // remainder rows (< MR)
+                for (a_row, c_row) in ab.chunks(depth).zip(cb.chunks_mut(cols)) {
+                    accumulate_row(a_row, b, c_row, cols, d0, d1);
+                }
+            }
+        }
+    }
+}
+
+/// One `C` row: `c += sum_k a[k] * B[k, :]` over the depth block.
+#[inline]
+fn accumulate_row(a_row: &[i32], b: &[i32], c_row: &mut [i32], cols: usize, d0: usize, d1: usize) {
+    for (kk, &xv) in a_row[d0..d1].iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let b_row = &b[(d0 + kk) * cols..(d0 + kk + 1) * cols];
+        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+            *cv += xv * bv;
+        }
+    }
+}
+
+/// Four `C` rows at once: each loaded `B` row is reused from registers for
+/// all four activations, quartering weight-panel memory traffic.
+#[inline]
+fn micro_kernel_4(
+    ab: &[i32],
+    b: &[i32],
+    cb: &mut [i32],
+    depth: usize,
+    cols: usize,
+    d0: usize,
+    d1: usize,
+) {
+    let (a0, rest) = ab.split_at(depth);
+    let (a1, rest) = rest.split_at(depth);
+    let (a2, a3) = rest.split_at(depth);
+    let (c0, rest) = cb.split_at_mut(cols);
+    let (c1, rest) = rest.split_at_mut(cols);
+    let (c2, c3) = rest.split_at_mut(cols);
+    for kk in d0..d1 {
+        let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+        if (x0 | x1 | x2 | x3) == 0 {
+            continue;
+        }
+        let b_row = &b[kk * cols..(kk + 1) * cols];
+        for j in 0..cols {
+            let bv = b_row[j];
+            c0[j] += x0 * bv;
+            c1[j] += x1 * bv;
+            c2[j] += x2 * bv;
+            c3[j] += x3 * bv;
+        }
+    }
+}
+
+/// Sign-separated sparse view of a ternary weight matrix: per depth row,
+/// the column indices holding +1 and -1. A MAC against it is an add or a
+/// subtract — no multiplier anywhere.
+#[derive(Clone, Debug)]
+pub(crate) struct TernaryPlan {
+    plus: Vec<u32>,
+    minus: Vec<u32>,
+    /// CSR offsets, length depth + 1 each
+    plus_off: Vec<u32>,
+    minus_off: Vec<u32>,
+}
+
+impl TernaryPlan {
+    /// Build from a row-major `[depth, cols]` ternary matrix.
+    pub(crate) fn build(b: &[i32], depth: usize, cols: usize) -> TernaryPlan {
+        debug_assert_eq!(b.len(), depth * cols);
+        let mut plan = TernaryPlan {
+            plus: Vec::new(),
+            minus: Vec::new(),
+            plus_off: Vec::with_capacity(depth + 1),
+            minus_off: Vec::with_capacity(depth + 1),
+        };
+        plan.plus_off.push(0);
+        plan.minus_off.push(0);
+        for row in b.chunks(cols) {
+            for (j, &m) in row.iter().enumerate() {
+                debug_assert!((-1..=1).contains(&m));
+                match m {
+                    1 => plan.plus.push(j as u32),
+                    -1 => plan.minus.push(j as u32),
+                    _ => {}
+                }
+            }
+            plan.plus_off.push(plan.plus.len() as u32);
+            plan.minus_off.push(plan.minus.len() as u32);
+        }
+        plan
+    }
+
+    fn nonzeros(&self) -> usize {
+        self.plus.len() + self.minus.len()
+    }
+}
+
+/// `C += A * B` where `B` is ternary, as pure adds/subtracts.
+pub(crate) fn gemm_ternary(
+    a: &[i32],
+    plan: &TernaryPlan,
+    c: &mut [i32],
+    rows: usize,
+    depth: usize,
+    cols: usize,
+) {
+    debug_assert_eq!(a.len(), rows * depth);
+    debug_assert_eq!(c.len(), rows * cols);
+    for (a_row, c_row) in a.chunks(depth).zip(c.chunks_mut(cols)) {
+        for (kk, &xv) in a_row.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let p = plan.plus_off[kk] as usize..plan.plus_off[kk + 1] as usize;
+            for &j in &plan.plus[p] {
+                c_row[j as usize] += xv;
+            }
+            let m = plan.minus_off[kk] as usize..plan.minus_off[kk + 1] as usize;
+            for &j in &plan.minus[m] {
+                c_row[j as usize] -= xv;
+            }
+        }
+    }
+}
+
+/// SAME/VALID output geometry shared by the naive and GEMM conv paths.
+pub(crate) fn conv_geometry(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_same: bool,
+) -> (usize, usize, usize, usize) {
+    if pad_same {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pw = ((ow - 1) * stride + kw).saturating_sub(w);
+        (oh, ow, ph / 2, pw / 2)
+    } else {
+        ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0)
+    }
+}
+
+/// Gather one image's receptive fields into the patch matrix
+/// `patches[oh*ow, kh*kw*cin]`. Out-of-range taps stay zero.
+#[allow(clippy::too_many_arguments)]
+fn im2col(
+    x: &QTensor,
+    batch: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+    patches: &mut [i32],
+) {
+    let [_, h, w, cin] = x.dims;
+    let k_dim = kh * kw * cin;
+    patches.fill(0);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k_dim;
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - pad_h as isize;
+                if !(0..h as isize).contains(&iy) {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as isize - pad_w as isize;
+                    if !(0..w as isize).contains(&ix) {
+                        continue;
+                    }
+                    let src = ((batch * h + iy as usize) * w + ix as usize) * cin;
+                    let dst = row + (ky * kw + kx) * cin;
+                    patches[dst..dst + cin].copy_from_slice(&x.data[src..src + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Should a ternary weight use the add/sub kernel? Only when skipping the
+/// zero mode removes enough work to beat the vectorized multiply kernel.
+fn use_ternary_plan(w: &QWeight) -> bool {
+    if !w.is_ternary() {
+        return false;
+    }
+    let zeros = w.mantissa.iter().filter(|&&m| m == 0).count();
+    zeros as f32 >= TERNARY_MIN_ZERO_FRAC * w.mantissa.len() as f32
+}
+
+/// The weight's ternary plan, built once per `QWeight` and cached (the
+/// decision and the index lists only depend on the immutable mantissas).
+fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&TernaryPlan> {
+    w.ternary_plan
+        .get_or_init(|| {
+            use_ternary_plan(w).then(|| TernaryPlan::build(&w.mantissa_i32, depth, cols))
+        })
+        .as_ref()
+}
+
+/// Raw conv accumulators via im2col + GEMM, parallel over the batch.
+/// Returns `[n, oh, ow, cout]` i32 sums — bit-identical to the naive loops.
+pub(crate) fn conv2d_acc(
+    x: &QTensor,
+    w: &QWeight,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+) -> Vec<i32> {
+    let [n, _, _, cin] = x.dims;
+    let [kh, kw, _, cout] = w.dims;
+    let k_dim = kh * kw * cin;
+    let m_dim = oh * ow;
+    let mut acc = vec![0i32; n * m_dim * cout];
+    if n == 0 || m_dim == 0 {
+        return acc;
+    }
+    let plan = cached_plan(w, k_dim, cout);
+    let mut views: Vec<&mut [i32]> = acc.chunks_mut(m_dim * cout).collect();
+    let workers = pool::default_workers().clamp(1, views.len());
+    pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
+        let mut patches = vec![0i32; m_dim * k_dim];
+        for (bi, out_img) in chunk.iter_mut().enumerate() {
+            let b = offset + bi;
+            im2col(x, b, kh, kw, stride, pad_h, pad_w, oh, ow, &mut patches);
+            match plan {
+                Some(p) => gemm_ternary(&patches, p, out_img, m_dim, k_dim, cout),
+                None => gemm_i32(&patches, &w.mantissa_i32, out_img, m_dim, k_dim, cout),
+            }
+        }
+    });
+    acc
+}
+
+/// Raw dense accumulators `[n, f_out]` via blocked GEMM, parallel over
+/// batch-row blocks. Bit-identical to the naive loops.
+pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
+    let n = x.dims[0];
+    let f_in = x.numel() / n.max(1);
+    let [_, f_out, _, _] = w.dims;
+    let mut acc = vec![0i32; n * f_out];
+    if n == 0 {
+        return acc;
+    }
+    let plan = cached_plan(w, f_in, f_out);
+    let workers = pool::default_workers().clamp(1, n);
+    let rows_per_block = n.div_ceil(workers);
+    let mut views: Vec<&mut [i32]> = acc.chunks_mut(rows_per_block * f_out).collect();
+    pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
+        for (bi, out_block) in chunk.iter_mut().enumerate() {
+            let row0 = (offset + bi) * rows_per_block;
+            let rows = out_block.len() / f_out;
+            let a = &x.data[row0 * f_in..(row0 + rows) * f_in];
+            match plan {
+                Some(p) => gemm_ternary(a, p, out_block, rows, f_in, f_out),
+                None => gemm_i32(a, &w.mantissa_i32, out_block, rows, f_in, f_out),
+            }
+        }
+    });
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::OpCounts;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    /// Schoolbook reference for the raw GEMM kernels.
+    fn gemm_ref(a: &[i32], b: &[i32], rows: usize, depth: usize, cols: usize) -> Vec<i32> {
+        let mut c = vec![0i32; rows * cols];
+        for i in 0..rows {
+            for kk in 0..depth {
+                for j in 0..cols {
+                    c[i * cols + j] += a[i * depth + kk] * b[kk * cols + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn prop_blocked_gemm_matches_schoolbook() {
+        forall(24, |rng: &mut Rng| {
+            let rows = 1 + rng.below(13);
+            let depth = 1 + rng.below(300);
+            let cols = 1 + rng.below(40);
+            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(21) as i32 - 10).collect();
+            let b: Vec<i32> = (0..depth * cols).map(|_| rng.below(7) as i32 - 3).collect();
+            let mut c = vec![0i32; rows * cols];
+            gemm_i32(&a, &b, &mut c, rows, depth, cols);
+            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols));
+        });
+    }
+
+    #[test]
+    fn prop_ternary_plan_matches_dense() {
+        forall(24, |rng: &mut Rng| {
+            let rows = 1 + rng.below(9);
+            let depth = 1 + rng.below(120);
+            let cols = 1 + rng.below(33);
+            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(31) as i32 - 15).collect();
+            let b: Vec<i32> = (0..depth * cols).map(|_| rng.below(3) as i32 - 1).collect();
+            let plan = TernaryPlan::build(&b, depth, cols);
+            assert_eq!(plan.nonzeros(), b.iter().filter(|&&m| m != 0).count());
+            let mut c = vec![0i32; rows * cols];
+            gemm_ternary(&a, &plan, &mut c, rows, depth, cols);
+            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols));
+        });
+    }
+
+    #[test]
+    fn prop_conv_gemm_bit_identical_to_naive() {
+        forall(16, |rng: &mut Rng| {
+            let (h, w) = (3 + rng.below(10), 3 + rng.below(10));
+            let n = 1 + rng.below(5);
+            let cin = 1 + rng.below(5);
+            let cout = 1 + rng.below(9);
+            let k = (1 + 2 * rng.below(2)).min(h).min(w); // 1 or 3
+            let stride = 1 + rng.below(2);
+            let pad_same = rng.bool(0.5);
+            let n_bits = [2u32, 4, 8][rng.below(3)];
+            let xs: Vec<f32> = (0..n * h * w * cin).map(|_| rng.normal()).collect();
+            let ws: Vec<f32> = (0..k * k * cin * cout).map(|_| rng.normal() * 0.4).collect();
+            let qx = QTensor::from_f32(&xs, [n, h, w, cin], 8);
+            let qw = QWeight::encode(&ws, [k, k, cin, cout], 0.25, n_bits);
+            let mut cg = OpCounts::default();
+            let mut cn = OpCounts::default();
+            let got = super::super::ops::conv2d(&qx, &qw, stride, pad_same, &mut cg);
+            let want = super::super::ops::conv2d_naive(&qx, &qw, stride, pad_same, &mut cn);
+            assert_eq!(got.dims, want.dims);
+            assert_eq!(got.frac, want.frac);
+            assert_eq!(got.data, want.data, "k={k} s={stride} same={pad_same}");
+            assert_eq!(cg, cn, "op accounting must not depend on the backend");
+        });
+    }
+
+    #[test]
+    fn prop_dense_gemm_bit_identical_to_naive() {
+        forall(16, |rng: &mut Rng| {
+            let n = 1 + rng.below(9);
+            let f_in = 1 + rng.below(200);
+            let f_out = 1 + rng.below(40);
+            let n_bits = [2u32, 3, 8][rng.below(3)];
+            let xs: Vec<f32> = (0..n * f_in).map(|_| rng.normal()).collect();
+            let ws: Vec<f32> = (0..f_in * f_out).map(|_| rng.normal() * 0.4).collect();
+            let qx = QTensor::from_f32(&xs, [n, 1, 1, f_in], 8);
+            let qw = QWeight::encode(&ws, [f_in, f_out, 1, 1], 0.25, n_bits);
+            let mut cg = OpCounts::default();
+            let mut cn = OpCounts::default();
+            let got = super::super::ops::dense(&qx, &qw, &mut cg);
+            let want = super::super::ops::dense_naive(&qx, &qw, &mut cn);
+            assert_eq!(got.data, want.data);
+            assert_eq!(got.frac, want.frac);
+            assert_eq!(cg, cn);
+        });
+    }
+
+    #[test]
+    fn sparse_ternary_engages_add_sub_plan() {
+        // 80% zeros: the plan must engage and still agree with naive
+        let mut rng = Rng::new(7);
+        let cin = 8;
+        let cout = 16;
+        let ws: Vec<f32> = (0..3 * 3 * cin * cout)
+            .map(|_| match rng.below(10) {
+                0 => 0.25,
+                1 => -0.25,
+                _ => 0.0,
+            })
+            .collect();
+        let qw = QWeight::encode(&ws, [3, 3, cin, cout], 0.25, 2);
+        assert!(qw.is_ternary());
+        assert!(use_ternary_plan(&qw));
+        let xs: Vec<f32> = (0..2 * 6 * 6 * cin).map(|_| rng.normal()).collect();
+        let qx = QTensor::from_f32(&xs, [2, 6, 6, cin], 8);
+        let mut cg = OpCounts::default();
+        let mut cn = OpCounts::default();
+        let got = super::super::ops::conv2d(&qx, &qw, 1, true, &mut cg);
+        let want = super::super::ops::conv2d_naive(&qx, &qw, 1, true, &mut cn);
+        assert_eq!(got.data, want.data);
+        assert_eq!(cg.int_mults, 0, "ternary conv must not count multiplies");
+    }
+
+    #[test]
+    fn dense_uniform_ternary_uses_multiply_kernel() {
+        // uniform ternary is only ~1/3 zeros: the dense kernel should win
+        let mut rng = Rng::new(3);
+        let ws: Vec<f32> = (0..64 * 10).map(|_| (rng.below(3) as f32 - 1.0) * 0.5).collect();
+        let qw = QWeight::encode(&ws, [64, 10, 1, 1], 0.5, 2);
+        if qw.mantissa.iter().filter(|&&m| m == 0).count() * 2 < qw.mantissa.len() {
+            assert!(!use_ternary_plan(&qw));
+        }
+    }
+}

@@ -21,7 +21,9 @@
 
 mod cost;
 mod engine;
+mod gemm;
 mod ops;
 
 pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};
-pub use engine::{IntModel, QTensor};
+pub use engine::{Backend, IntModel, QTensor};
+pub use ops::{conv2d, conv2d_naive, dense, dense_naive, QWeight};

@@ -72,6 +72,9 @@ pub struct QWeight {
     pub frac: i32,
     /// conv: HWIO dims; dense: [in, out, 1, 1]
     pub dims: [usize; 4],
+    /// lazily-built sign-separated index plan for the ternary add/sub
+    /// GEMM kernel (None once built = "use the multiply kernel")
+    pub(crate) ternary_plan: std::sync::OnceLock<Option<super::gemm::TernaryPlan>>,
 }
 
 impl QWeight {
@@ -89,7 +92,7 @@ impl QWeight {
             })
             .collect();
         let mantissa_i32 = mantissa.iter().map(|&m| m as i32).collect();
-        QWeight { mantissa, mantissa_i32, frac, dims }
+        QWeight { mantissa, mantissa_i32, frac, dims, ternary_plan: std::sync::OnceLock::new() }
     }
 
     /// Are all mantissas in {-1, 0, 1}? (True for 2-bit SYMOG — multiplies
@@ -144,39 +147,80 @@ fn enc32(v: f32, frac: i32) -> i32 {
 // ---------------------------------------------------------------------------
 // layer kernels (all integer)
 
-/// Integer conv2d, NHWC x HWIO -> NHWC, i64 accumulators.
-/// `pad_same` selects SAME (TF-style) vs VALID padding.
-pub fn conv2d(x: &QTensor, w: &QWeight, stride: usize, pad_same: bool, counts: &mut super::OpCounts) -> QTensor {
+/// Shared conv/dense epilogue: exact op accounting (one MAC per output
+/// position x kernel elem x cin x cout, counted in full whichever backend
+/// produced the sums) + requantization. Keeping this in one place is what
+/// guarantees `OpCounts` never depends on the compute backend.
+fn finish_matmul(
+    acc: Vec<i32>,
+    dims: [usize; 4],
+    frac: i32,
+    macs: u64,
+    ternary: bool,
+    counts: &mut super::OpCounts,
+) -> QTensor {
+    counts.acc_adds += macs;
+    if !ternary {
+        counts.int_mults += macs;
+    }
+    let mut out = QTensor { data: acc, frac, dims };
+    let shift = out.requantize(16);
+    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
+    out
+}
+
+/// Integer conv2d, NHWC x HWIO -> NHWC. `pad_same` selects SAME (TF-style)
+/// vs VALID padding.
+///
+/// The hot path: im2col + blocked i32 GEMM, parallel over the batch
+/// dimension (see `gemm.rs`). Bit-identical to [`conv2d_naive`].
+///
+/// i32 accumulation is safe: activations are requantized to <= 16 bits
+/// between layers and weight mantissas are <= 2^{N-1}-1 <= 127, so the
+/// accumulator bound is K * 2^15 * 127 < 2^31 for every K < 2^9 at 8-bit
+/// weights and K < 2^16 ternary — far above any layer in the zoo.
+pub fn conv2d(
+    x: &QTensor,
+    w: &QWeight,
+    stride: usize,
+    pad_same: bool,
+    counts: &mut super::OpCounts,
+) -> QTensor {
     let [n, h, wd, cin] = x.dims;
     let [kh, kw, wcin, cout] = w.dims;
     assert_eq!(cin, wcin, "conv channel mismatch");
-    let (oh, ow, pad_h, pad_w) = if pad_same {
-        let oh = h.div_ceil(stride);
-        let ow = wd.div_ceil(stride);
-        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
-        let pw = ((ow - 1) * stride + kw).saturating_sub(wd);
-        (oh, ow, ph / 2, pw / 2)
-    } else {
-        ((h - kh) / stride + 1, (wd - kw) / stride + 1, 0, 0)
-    };
-    // i32 accumulation is safe: activations are requantized to <= 16 bits
-    // between layers and weight mantissas are <= 2^{N-1}-1 <= 127, so the
-    // accumulator bound is K * 2^15 * 127 < 2^31 for every K < 2^9 at 8-bit
-    // weights and K < 2^16 ternary — far above any layer in the zoo.
+    let (oh, ow, pad_h, pad_w) = super::gemm::conv_geometry(h, wd, kh, kw, stride, pad_same);
+    let acc = super::gemm::conv2d_acc(x, w, stride, pad_h, pad_w, oh, ow);
+    let macs = (n * oh * ow * cout * kh * kw * cin) as u64;
+    finish_matmul(acc, [n, oh, ow, cout], x.frac + w.frac, macs, w.is_ternary(), counts)
+}
+
+/// Reference integer conv2d: the direct nested loops the GEMM path is
+/// checked against (and benchmarked against in `benches/hotpath.rs`).
+pub fn conv2d_naive(
+    x: &QTensor,
+    w: &QWeight,
+    stride: usize,
+    pad_same: bool,
+    counts: &mut super::OpCounts,
+) -> QTensor {
+    let [n, h, wd, cin] = x.dims;
+    let [kh, kw, wcin, cout] = w.dims;
+    assert_eq!(cin, wcin, "conv channel mismatch");
+    let (oh, ow, pad_h, pad_w) = super::gemm::conv_geometry(h, wd, kh, kw, stride, pad_same);
     let mut acc = vec![0i32; n * oh * ow * cout];
-    let ternary = w.is_ternary();
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let out_off = ((b * oh + oy) * ow + ox) * cout;
                 for ky in 0..kh {
                     let iy = (oy * stride + ky) as isize - pad_h as isize;
-                    if iy < 0 || iy >= h as isize {
+                    if !(0..h as isize).contains(&iy) {
                         continue;
                     }
                     for kx in 0..kw {
                         let ix = (ox * stride + kx) as isize - pad_w as isize;
-                        if ix < 0 || ix >= wd as isize {
+                        if !(0..wd as isize).contains(&ix) {
                             continue;
                         }
                         let in_off = ((b * h + iy as usize) * wd + ix as usize) * cin;
@@ -201,30 +245,28 @@ pub fn conv2d(x: &QTensor, w: &QWeight, stride: usize, pad_same: bool, counts: &
             }
         }
     }
-    // op accounting: one MAC per (output position x kernel elem x cin x cout)
     let macs = (n * oh * ow * cout * kh * kw * cin) as u64;
-    counts.acc_adds += macs;
-    if !ternary {
-        counts.int_mults += macs;
-    }
-    let mut out = QTensor {
-        data: acc,
-        frac: x.frac + w.frac,
-        dims: [n, oh, ow, cout],
-    };
-    let shift = out.requantize(16);
-    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
-    out
+    finish_matmul(acc, [n, oh, ow, cout], x.frac + w.frac, macs, w.is_ternary(), counts)
 }
 
-/// Integer dense: [n, f_in] x [f_in, f_out].
+/// Integer dense: [n, f_in] x [f_in, f_out], blocked GEMM parallel over
+/// batch-row blocks. Bit-identical to [`dense_naive`].
 pub fn dense(x: &QTensor, w: &QWeight, counts: &mut super::OpCounts) -> QTensor {
     let n = x.dims[0];
-    let f_in = x.numel() / n;
+    let f_in = x.numel() / n.max(1);
     let [wi, wo, _, _] = w.dims;
     assert_eq!(f_in, wi, "dense shape mismatch");
-    let ternary = w.is_ternary();
-    // i32 accumulation: see the bound argument in conv2d
+    let acc = super::gemm::dense_acc(x, w);
+    let macs = (n * f_in * wo) as u64;
+    finish_matmul(acc, [n, 1, 1, wo], x.frac + w.frac, macs, w.is_ternary(), counts)
+}
+
+/// Reference integer dense: direct loops (see [`dense`]).
+pub fn dense_naive(x: &QTensor, w: &QWeight, counts: &mut super::OpCounts) -> QTensor {
+    let n = x.dims[0];
+    let f_in = x.numel() / n.max(1);
+    let [wi, wo, _, _] = w.dims;
+    assert_eq!(f_in, wi, "dense shape mismatch");
     let mut acc = vec![0i32; n * wo];
     for b in 0..n {
         let out_row = &mut acc[b * wo..(b + 1) * wo];
@@ -240,18 +282,7 @@ pub fn dense(x: &QTensor, w: &QWeight, counts: &mut super::OpCounts) -> QTensor 
         }
     }
     let macs = (n * f_in * wo) as u64;
-    counts.acc_adds += macs;
-    if !ternary {
-        counts.int_mults += macs;
-    }
-    let mut out = QTensor {
-        data: acc,
-        frac: x.frac + w.frac,
-        dims: [n, 1, 1, wo],
-    };
-    let shift = out.requantize(16);
-    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
-    out
+    finish_matmul(acc, [n, 1, 1, wo], x.frac + w.frac, macs, w.is_ternary(), counts)
 }
 
 /// Add a per-feature bias (stored as fixed point at the activation's frac).
@@ -622,8 +653,14 @@ mod tests {
             let mut c = crate::inference::OpCounts::default();
             let got = conv2d(&qx, &qw, stride, pad_same, &mut c);
             // reference on the *quantized* input so rounding cancels out
-            let (want, wd2) =
-                conv_f32_ref(&qx.to_f32(), [1, h, wid, cin], &w, [k, k, cin, cout], stride, pad_same);
+            let (want, wd2) = conv_f32_ref(
+                &qx.to_f32(),
+                [1, h, wid, cin],
+                &w,
+                [k, k, cin, cout],
+                stride,
+                pad_same,
+            );
             assert_eq!(got.dims, wd2);
             let gf = got.to_f32();
             for (g, e) in gf.iter().zip(&want) {

@@ -234,4 +234,50 @@ mod tests {
         let m = vec![1i8; 4000];
         assert_eq!(pack_codes(&m, 2).len(), 1000);
     }
+
+    #[test]
+    fn codes_roundtrip_fixed_widths_with_straddle() {
+        for n_bits in [2u32, 3, 4, 6, 8] {
+            let qmax = (1i16 << (n_bits - 1)) - 1;
+            // full symmetric codebook plus a tail whose length is not a
+            // multiple of 8 bits, so codes straddle byte boundaries
+            let mut m: Vec<i8> = (-qmax..=qmax).map(|v| v as i8).collect();
+            m.extend([qmax as i8, -(qmax as i8), 0, 1, -1, 0, qmax as i8]);
+            let packed = pack_codes(&m, n_bits);
+            assert_eq!(packed.len(), (m.len() * n_bits as usize).div_ceil(8));
+            assert_eq!(unpack_codes(&packed, m.len(), n_bits), m, "n_bits={n_bits}");
+        }
+    }
+
+    #[test]
+    fn bias_to_unsigned_encoding_at_extremes() {
+        // the stored code is mantissa + qmax: -qmax -> 0, 0 -> qmax,
+        // +qmax -> 2*qmax — always within n_bits unsigned
+        for n_bits in [2u32, 3, 4, 6, 8] {
+            let qmax = ((1i16 << (n_bits - 1)) - 1) as i8;
+            assert_eq!(pack_codes(&[-qmax], n_bits)[0], 0, "n_bits={n_bits}");
+            assert_eq!(pack_codes(&[0], n_bits)[0], qmax as u8);
+            assert_eq!(pack_codes(&[qmax], n_bits)[0], 2 * qmax as u8);
+            assert_eq!(unpack_codes(&[2 * qmax as u8], 1, n_bits), vec![qmax]);
+        }
+    }
+
+    #[test]
+    fn three_bit_codes_straddle_exact_bytes() {
+        // 3 codes x 3 bits = 9 bits: the third code crosses the byte edge.
+        // mantissas [3, -3, 1] -> codes [6, 0, 4] -> 110 000 1|00
+        let packed = pack_codes(&[3, -3, 1], 3);
+        assert_eq!(packed, vec![0b0000_0110, 0b0000_0001]);
+        assert_eq!(unpack_codes(&packed, 3, 3), vec![3, -3, 1]);
+    }
+
+    #[test]
+    fn six_bit_codes_straddle_exact_bytes() {
+        // codes are 6 wide: the second code occupies bits 6..12
+        let qmax = 31i8; // 6-bit qmax
+        let packed = pack_codes(&[-qmax, qmax, 0], 6);
+        // codes [0, 62, 31]: byte0 = 62<<6 truncated, byte1 = 62>>2 | 31<<4
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack_codes(&packed, 3, 6), vec![-qmax, qmax, 0]);
+    }
 }

@@ -96,13 +96,7 @@ impl Json {
         matches!(self, Json::Null)
     }
 
-    // --- writer -----------------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
+    // --- writer (via Display; `.to_string()` comes from the blanket impl) --
 
     fn write(&self, out: &mut String) {
         match self {
@@ -142,6 +136,14 @@ impl Json {
     }
 }
 
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -165,7 +167,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn skip_ws(&mut self) {
         while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
             self.i += 1;

@@ -9,8 +9,10 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
-/// Run `f(chunk_index, chunk)` over contiguous chunks of `data` on up to
-/// `workers` OS threads. Chunks are as even as possible; `f` must be Sync.
+/// Run `f(offset, chunk)` over contiguous chunks of `data` on up to
+/// `workers` OS threads, where `offset` is the chunk's starting index
+/// within `data` (so callers never re-derive the chunking formula).
+/// Chunks are as even as possible; `f` must be Sync.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], workers: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
@@ -24,7 +26,7 @@ where
     std::thread::scope(|s| {
         for (i, part) in data.chunks_mut(chunk).enumerate() {
             let f = &f;
-            s.spawn(move || f(i, part));
+            s.spawn(move || f(i * chunk, part));
         }
     });
 }
@@ -65,6 +67,17 @@ mod tests {
             }
         });
         assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn offsets_are_element_starts() {
+        let mut v: Vec<usize> = vec![0; 100];
+        par_chunks_mut(&mut v, 7, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        assert_eq!(v, (0..100).collect::<Vec<_>>());
     }
 
     #[test]

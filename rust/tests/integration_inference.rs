@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use symog::coordinator::{TrainOptions, Trainer};
+use symog::coordinator::{Trainer, TrainOptions};
 use symog::data::Preset;
 use symog::inference::IntModel;
 use symog::runtime::Runtime;

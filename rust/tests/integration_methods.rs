@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use symog::coordinator::{Checkpoint, TrainOptions, Trainer};
+use symog::coordinator::{Checkpoint, Trainer, TrainOptions};
 use symog::data::Preset;
 use symog::runtime::Runtime;
 

@@ -5,7 +5,7 @@
 
 use std::path::{Path, PathBuf};
 
-use symog::coordinator::{Checkpoint, LambdaSchedule, TrainOptions, Trainer};
+use symog::coordinator::{Checkpoint, LambdaSchedule, Trainer, TrainOptions};
 use symog::data::{AugmentConfig, Preset};
 use symog::runtime::Runtime;
 

@@ -1,0 +1,112 @@
+//! CI smoke test: build a tiny `IntModel` from an in-code manifest +
+//! checkpoint (no compiled artifacts needed), run a forward pass on a
+//! synthetic batch, and assert the naive and GEMM conv/dense paths produce
+//! bit-identical logits and identical op counts.
+
+use symog::coordinator::{Checkpoint, Kind, Tensor};
+use symog::inference::{Backend, IntModel};
+use symog::runtime::Manifest;
+use symog::util::rng::Rng;
+
+/// 8x8x2 input -> conv3x3 SAME (+bias) -> relu -> maxpool2 -> conv3x3 VALID
+/// -> folded BN -> relu -> flatten -> dense 24x10 (+bias).
+const MANIFEST: &str = r#"{
+  "tag": "smoke-engine", "model": "smoke", "method": "symog",
+  "dataset": "synth-mnist", "width_mult": 1.0, "batch": 8, "n_bits": 2,
+  "momentum": 0.9, "weight_decay": 0.0, "clip": true,
+  "input_shape": [8, 8, 2], "num_classes": 10, "n_quant": 3,
+  "params": [
+    {"name": "c1.w", "shape": [3, 3, 2, 4], "kind": "weight", "qidx": 0, "fan_in": 18},
+    {"name": "c1.b", "shape": [4], "kind": "bias", "qidx": null, "fan_in": 0},
+    {"name": "c2.w", "shape": [3, 3, 4, 6], "kind": "weight", "qidx": 1, "fan_in": 36},
+    {"name": "bn.gamma", "shape": [6], "kind": "gamma", "qidx": null, "fan_in": 0},
+    {"name": "bn.beta", "shape": [6], "kind": "beta", "qidx": null, "fan_in": 0},
+    {"name": "fc.w", "shape": [24, 10], "kind": "weight", "qidx": 2, "fan_in": 24},
+    {"name": "fc.b", "shape": [10], "kind": "bias", "qidx": null, "fan_in": 0}
+  ],
+  "state": [
+    {"name": "bn.mean", "shape": [6], "init": 0.0},
+    {"name": "bn.var", "shape": [6], "init": 1.0}
+  ],
+  "layers": [
+    {"type": "conv", "w": 0, "b": 1, "stride": 1, "padding": "SAME"},
+    {"type": "relu"},
+    {"type": "maxpool", "k": 2, "stride": 2},
+    {"type": "conv", "w": 2, "b": null, "stride": 1, "padding": "VALID"},
+    {"type": "bn", "gamma": 3, "beta": 4, "mean": 0, "var": 1},
+    {"type": "relu"},
+    {"type": "flatten"},
+    {"type": "dense", "w": 5, "b": 6}
+  ]
+}"#;
+
+fn tensor(name: &str, kind: Kind, dims: &[usize], data: Vec<f32>) -> Tensor {
+    Tensor { name: name.into(), kind, dims: dims.to_vec(), data }
+}
+
+/// Weights on the ternary codebook {-delta, 0, +delta}; aux params float.
+fn smoke_checkpoint(rng: &mut Rng) -> Checkpoint {
+    let delta = 0.5f32;
+    let tern = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.below(3) as f32 - 1.0) * delta).collect()
+    };
+    let noise = |rng: &mut Rng, n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() * s).collect()
+    };
+    let mut ck = Checkpoint::default();
+    ck.tensors.push(tensor("c1.w", Kind::Weight, &[3, 3, 2, 4], tern(rng, 72)));
+    ck.tensors.push(tensor("c1.b", Kind::Bias, &[4], noise(rng, 4, 0.1)));
+    ck.tensors.push(tensor("c2.w", Kind::Weight, &[3, 3, 4, 6], tern(rng, 216)));
+    let gamma: Vec<f32> = (0..6).map(|_| 1.0 + rng.normal() * 0.1).collect();
+    ck.tensors.push(tensor("bn.gamma", Kind::Gamma, &[6], gamma));
+    ck.tensors.push(tensor("bn.beta", Kind::Beta, &[6], noise(rng, 6, 0.1)));
+    ck.tensors.push(tensor("fc.w", Kind::Weight, &[24, 10], tern(rng, 240)));
+    ck.tensors.push(tensor("fc.b", Kind::Bias, &[10], noise(rng, 10, 0.1)));
+    ck.tensors.push(tensor("bn.mean", Kind::State, &[6], noise(rng, 6, 0.2)));
+    let var: Vec<f32> = (0..6).map(|_| 1.0 + rng.f32()).collect();
+    ck.tensors.push(tensor("bn.var", Kind::State, &[6], var));
+    ck.tensors.push(tensor("__deltas__", Kind::Deltas, &[3], vec![delta; 3]));
+    ck
+}
+
+#[test]
+fn gemm_and_naive_paths_bit_identical() {
+    let man = Manifest::parse(MANIFEST).unwrap();
+    let mut rng = Rng::new(0xBEEF);
+    let ck = smoke_checkpoint(&mut rng);
+
+    let gemm = IntModel::build(&man, &ck).unwrap();
+    assert_eq!(gemm.backend, Backend::Gemm, "GEMM must be the default backend");
+    assert!(gemm.all_ternary, "2-bit smoke weights must be ternary");
+    let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+
+    let batch = 8usize;
+    let images: Vec<f32> = (0..batch * 8 * 8 * 2).map(|_| rng.normal()).collect();
+    let (logits_g, counts_g) = gemm.forward(&images, batch).unwrap();
+    let (logits_n, counts_n) = naive.forward(&images, batch).unwrap();
+
+    assert_eq!(logits_g.len(), batch * 10);
+    assert_eq!(logits_g, logits_n, "GEMM and naive logits must be bit-identical");
+    assert_eq!(counts_g, counts_n, "op accounting must not depend on the backend");
+    // ternary conv/dense count zero multiplies; the only remaining ones
+    // come from the folded-BN affine (one per activation: 8 x 2 x 2 x 6)
+    assert_eq!(counts_g.int_mults, 8 * 2 * 2 * 6, "only folded BN may multiply");
+    assert!(counts_g.acc_adds > 0);
+
+    // predictions agree too (same logits => same argmax)
+    let pg = gemm.predict(&images, batch).unwrap();
+    let pn = naive.predict(&images, batch).unwrap();
+    assert_eq!(pg, pn);
+}
+
+#[test]
+fn smoke_model_cost_report_is_ternary_cheap() {
+    let man = Manifest::parse(MANIFEST).unwrap();
+    let mut rng = Rng::new(77);
+    let ck = smoke_checkpoint(&mut rng);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let report = model.cost_report(4).unwrap();
+    // conv/dense are mult-free; only folded BN multiplies remain
+    assert!(report.counts.int_mults < report.counts.acc_adds / 10);
+    assert!(report.energy_ratio() > 18.5, "energy ratio {}", report.energy_ratio());
+}
