@@ -1,66 +1,65 @@
-//! Section 4.4's self-reliant weight adaptation study (Figures 3 and 4):
-//! train VGG11 (width-scaled) on synthetic CIFAR-100 twice — with and
-//! without weight clipping — and print the per-layer mode-switch rates and
-//! the evolving weight histograms.
+//! Section 4.4's self-reliant weight adaptation study (Figures 3 and 4),
+//! running entirely on the pure-Rust native training backend — no AOT
+//! artifact, no Python, no PJRT:
 //!
-//!     make artifacts && cargo run --release --example weight_adaptation
+//!     cargo run --release --example weight_adaptation [-- --fast]
+//!
+//! A small convnet trains on synthetic CIFAR-100 twice — with and without
+//! weight clipping (section 3.4) — and prints per-epoch mode-switch rates
+//! (Fig. 4) plus the evolving layer-0 weight histograms (Fig. 3).
 
 use anyhow::Result;
-use symog::config::Experiment;
-use symog::data::Preset;
-use symog::driver::{self, artifacts_root};
-use symog::runtime::Runtime;
+use symog::coordinator::{TrainOutcome, Trainer, TrainOptions};
+use symog::data::{AugmentConfig, Preset};
+use symog::train::{NativeBackend, NativeHyper, NativeModel};
+
+fn run(
+    clip: bool,
+    epochs: u32,
+    train: &symog::data::Dataset,
+    test: &symog::data::Dataset,
+    steps: Option<usize>,
+) -> Result<TrainOutcome> {
+    let model = NativeModel::convnet([32, 32, 3], &[16, 32], 100, 0);
+    let hyper = NativeHyper { clip, ..NativeHyper::default() };
+    let mut trainer = Trainer::new(NativeBackend::new(model, hyper, 32));
+    let mut opts = TrainOptions::paper(epochs);
+    opts.seed = 1;
+    opts.augment = AugmentConfig::cifar(); // the paper's CIFAR protocol
+    opts.steps_per_epoch = steps;
+    opts.track_modes = true;
+    opts.hist_epochs = vec![0, epochs / 2, epochs];
+    opts.hist_layers = vec![0];
+    opts.verbose = true;
+    trainer.train(train, test, &opts)
+}
 
 fn main() -> Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
     let (epochs, train_n, test_n, steps) = if fast {
-        (4u32, 1024usize, 256usize, Some(8usize))
+        (4u32, 512usize, 128usize, Some(8usize))
     } else {
-        (16, 4096, 512, None)
+        (12, 2048, 512, None)
     };
-    let rt = Runtime::cpu()?;
-    let root = artifacts_root();
-    let base = Experiment {
-        name: "weight-adaptation".into(),
-        artifact: String::new(),
-        dataset: Preset::SynthCifar100,
-        train_n,
-        test_n,
-        epochs,
-        augment: true,
-        steps_per_epoch: steps,
-        track_modes: true,
-        hist_epochs: vec![0, epochs / 2, epochs],
-        hist_layers: vec![0, 3, 6], // the paper plots layers 1, 4, 7 (1-based)
-        verbose: true,
-        ..Default::default()
-    };
-
     let (train, test) = Preset::SynthCifar100.load(train_n, test_n, 0);
+    println!(
+        "native backend — synth-cifar100, {} train / {} test, {} epochs{}",
+        train.len(),
+        test.len(),
+        epochs,
+        if fast { " (--fast)" } else { "" }
+    );
+
     let mut results = Vec::new();
-    for (label, artifact) in [
-        ("with clipping", "vgg11-symog-synth-cifar100-w0.25-b2"),
-        ("without clipping", "vgg11-symog-synth-cifar100-w0.25-b2-noclip"),
-    ] {
-        println!("=== SYMOG {label} ===");
-        let exp = Experiment { artifact: artifact.into(), ..base.clone() };
-        let art = driver::load_artifact(&rt, &exp, &root)?;
-        let result = driver::run_experiment(&art, &exp, &train, &test)?;
-        results.push((label, result));
-        println!();
+    for (label, clip) in [("with clipping", true), ("without clipping", false)] {
+        println!("\n=== SYMOG {label} ===");
+        results.push((label, run(clip, epochs, &train, &test, steps)?));
     }
 
-    println!("mode-switch rate per epoch, mean over layers (Figure 4):");
+    println!("\nmode-switch rate per epoch, mean over layers (Figure 4):");
     println!("{:>6} | {:>14} | {:>16}", "epoch", "with clip", "without clip");
     let (with, without) = (&results[0].1, &results[1].1);
-    for (i, (a, b)) in with
-        .outcome
-        .log
-        .epochs
-        .iter()
-        .zip(&without.outcome.log.epochs)
-        .enumerate()
-    {
+    for (i, (a, b)) in with.log.epochs.iter().zip(&without.log.epochs).enumerate() {
         println!(
             "{:>6} | {:>13.1}% | {:>15.1}%",
             i + 1,
@@ -69,22 +68,22 @@ fn main() -> Result<()> {
         );
     }
 
-    println!("\nlayer-1 weight histograms over training (Figure 3, with clip):");
-    let hists = &with.outcome.histograms[0].1;
+    println!("\nlayer-0 weight histograms over training (Figure 3, with clip):");
+    let hists = &with.histograms[0].1;
     for (e, h) in hists.epochs.iter().zip(&hists.hists) {
         println!("  epoch {e:2}  {}", h.sparkline());
     }
 
     println!(
         "\nfinal quantized error: with clip {:.2}%  without clip {:.2}%",
-        with.best_q_error * 100.0,
-        without.best_q_error * 100.0
+        with.log.best_quantized_error() * 100.0,
+        without.log.best_quantized_error() * 100.0
     );
     std::fs::create_dir_all("results").ok();
-    if let Some(t) = &with.outcome.tracker {
+    if let Some(t) = &with.tracker {
         std::fs::write("results/fig4_with_clip.csv", t.to_csv())?;
     }
-    if let Some(t) = &without.outcome.tracker {
+    if let Some(t) = &without.tracker {
         std::fs::write("results/fig4_without_clip.csv", t.to_csv())?;
     }
     println!("switch-rate CSVs -> results/fig4_*.csv");

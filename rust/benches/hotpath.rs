@@ -356,7 +356,7 @@ fn runtime_benches(report: &mut Vec<Stats>, section: &str) -> Result<()> {
     report.push(s);
 
     // execute-only: pre-built literals, direct run()
-    let deltas_lit = literal_f32(&trainer.deltas, &[man.deltas_len()])?;
+    let deltas_lit = literal_f32(trainer.deltas(), &[man.deltas_len()])?;
     let img_lit = literal_f32(&images, &img_dims)?;
     let lab_lit = literal_i32(&labels, &[batch])?;
     let lr_lit = literal_scalar_f32(0.01);
@@ -365,7 +365,7 @@ fn runtime_benches(report: &mut Vec<Stats>, section: &str) -> Result<()> {
     let ck = trainer.to_checkpoint()?;
     let t2 = Trainer::from_checkpoint(&art, &ck, false)?;
     let params: Vec<xla::Literal> = (0..man.params.len())
-        .map(|i| literal_f32(&t2.param_host(i).unwrap(), &man.params[i].shape).unwrap())
+        .map(|i| literal_f32(&t2.backend.param_host(i).unwrap(), &man.params[i].shape).unwrap())
         .collect();
     let zeros: Vec<xla::Literal> = man
         .params

@@ -1,0 +1,127 @@
+//! CI regression gate for the integer GEMM hot path.
+//!
+//! Compares the `BENCH_hotpath.json` that `cargo bench --bench hotpath`
+//! just wrote against the committed `BENCH_baseline.json` and exits
+//! non-zero if any kernel's naive-vs-GEMM *speedup* regressed more than
+//! the tolerance (default 30%). Speedups are compared — not wall-clock
+//! seconds — so the gate is machine-speed-invariant: both numbers of a
+//! ratio come from the same host.
+//!
+//!     bench_check [--current PATH] [--baseline PATH] [--tolerance 0.30]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use symog::util::json::Json;
+
+struct Case {
+    name: String,
+    speedup: f64,
+    bit_identical: bool,
+}
+
+fn load_cases(path: &Path) -> Result<Vec<Case>> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&src).with_context(|| format!("parsing {}", path.display()))?;
+    j.get("cases")?
+        .arr()?
+        .iter()
+        .map(|c| {
+            Ok(Case {
+                name: c.get("name")?.str()?.to_string(),
+                speedup: c.get("speedup")?.num()?,
+                bit_identical: c
+                    .opt("bit_identical")
+                    .map(|b| b.boolean())
+                    .transpose()?
+                    .unwrap_or(true),
+            })
+        })
+        .collect()
+}
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("bench_check: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let mut current = PathBuf::from("../BENCH_hotpath.json");
+    let mut baseline = PathBuf::from("../BENCH_baseline.json");
+    let mut tolerance = 0.30f64;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut val = |name: &str| {
+            args.next().with_context(|| format!("{name} needs a value"))
+        };
+        match a.as_str() {
+            "--current" => current = PathBuf::from(val("--current")?),
+            "--baseline" => baseline = PathBuf::from(val("--baseline")?),
+            "--tolerance" => {
+                tolerance = val("--tolerance")?
+                    .parse()
+                    .context("--tolerance must be a float")?
+            }
+            other => bail!("unknown flag {other:?}"),
+        }
+    }
+    // also accept repo-root-relative paths when invoked from the repo root
+    for p in [&mut current, &mut baseline] {
+        if !p.exists() {
+            if let Some(name) = p.file_name() {
+                let flat = PathBuf::from(name);
+                if flat.exists() {
+                    *p = flat;
+                }
+            }
+        }
+    }
+
+    let cur = load_cases(&current).context(
+        "no current bench report — run `cargo bench --bench hotpath` first \
+         (SYMOG_HOTPATH=gemm is enough)",
+    )?;
+    let base = load_cases(&baseline)?;
+    anyhow::ensure!(!base.is_empty(), "baseline has no cases");
+
+    println!(
+        "{:<32} {:>10} {:>10} {:>8}  verdict (tolerance {:.0}%)",
+        "kernel", "baseline", "current", "ratio", tolerance * 100.0
+    );
+    let mut failures = Vec::new();
+    for b in &base {
+        let Some(c) = cur.iter().find(|c| c.name == b.name) else {
+            failures.push(format!("{}: missing from current report", b.name));
+            continue;
+        };
+        if !c.bit_identical {
+            failures.push(format!("{}: GEMM output no longer bit-identical", b.name));
+        }
+        let floor = b.speedup * (1.0 - tolerance);
+        let ratio = c.speedup / b.speedup;
+        let ok = c.speedup >= floor;
+        println!(
+            "{:<32} {:>9.2}x {:>9.2}x {:>7.2}x  {}",
+            b.name,
+            b.speedup,
+            c.speedup,
+            ratio,
+            if ok { "ok" } else { "REGRESSED" }
+        );
+        if !ok {
+            failures.push(format!(
+                "{}: speedup {:.2}x < floor {:.2}x (baseline {:.2}x)",
+                b.name, c.speedup, floor, b.speedup
+            ));
+        }
+    }
+    if !failures.is_empty() {
+        bail!("{} kernel(s) regressed:\n  {}", failures.len(), failures.join("\n  "));
+    }
+    println!("all {} kernels within tolerance", base.len());
+    Ok(())
+}

@@ -1,0 +1,286 @@
+//! The training-backend seam: one trait, two substrates.
+//!
+//! `Trainer` drives Algorithm 1 (epoch loop, schedules, probes,
+//! checkpointing) against a [`TrainBackend`], which owns the mutable model
+//! state and knows how to execute one fused train / eval step on a host
+//! batch:
+//!
+//! * [`XlaBackend`] — the AOT-artifact path: params live as `xla::Literal`s
+//!   and steps run the compiled train/eval/evalq executables on PJRT.
+//! * `train::NativeBackend` — the pure-Rust path: params live as host
+//!   vectors and steps run the `train::ops` forward/backward + the fused
+//!   SYMOG SGD update. No artifact, no Python, no PJRT.
+//!
+//! Both expose host copies of the quantized weights so the Fig-3/4 probes
+//! (`histogram`, `tracker`) are backend-agnostic.
+
+use anyhow::{Context, Result};
+
+use crate::fixedpoint;
+use crate::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Artifact};
+
+use super::checkpoint::{Checkpoint, Kind, Tensor};
+
+/// Loss/accuracy numbers of one executed batch.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    /// mean loss over the batch
+    pub loss: f32,
+    /// argmax-hit count (f32 so both substrates share one interface)
+    pub correct: f32,
+}
+
+/// What the coordinator needs from a training substrate.
+pub trait TrainBackend {
+    /// Display tag for logs (artifact tag / native model tag).
+    fn tag(&self) -> String;
+
+    /// Static batch size of one step.
+    fn batch(&self) -> usize;
+
+    fn n_bits(&self) -> u32;
+
+    /// Number of quantized weight tensors.
+    fn n_quant(&self) -> usize;
+
+    /// Per-layer step sizes, qidx order.
+    fn deltas(&self) -> &[f32];
+
+    /// One fused SGD step (Alg. 1 lines 10-18) on a host batch.
+    fn train_step(
+        &mut self,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        lambda: f32,
+    ) -> Result<StepOut>;
+
+    /// Loss/correct on one batch, float or hard-quantized weights.
+    fn eval_batch(&self, images: &[f32], labels: &[i32], quantized: bool) -> Result<StepOut>;
+
+    /// Host copies of all quantized weight tensors with their deltas, in
+    /// qidx order (probe input for tracker / histograms).
+    fn quant_layers_host(&self) -> Result<Vec<(Vec<f32>, f32)>>;
+
+    /// Snapshot everything into a checkpoint (float weights + momenta +
+    /// state + deltas; quantization is applied by the consumer).
+    fn to_checkpoint(&self, epoch: u32) -> Result<Checkpoint>;
+}
+
+/// The AOT-artifact backend: host mirrors of device literals + the three
+/// compiled executables.
+pub struct XlaBackend<'a> {
+    pub artifact: &'a Artifact,
+    params: Vec<xla::Literal>,
+    momenta: Vec<xla::Literal>,
+    state: Vec<xla::Literal>,
+    deltas: Vec<f32>,
+}
+
+impl<'a> XlaBackend<'a> {
+    /// Initialize from a checkpoint (aot.py's init.ckpt or a previously
+    /// saved training checkpoint). `resolve_deltas` recomputes the optimal
+    /// step sizes from the loaded weights (Alg. 1 lines 2-5, via the seeded
+    /// `optimal_delta_refined` solver) — pass true when starting SYMOG from
+    /// a pretrained float model.
+    pub fn from_checkpoint(
+        artifact: &'a Artifact,
+        ckpt: &Checkpoint,
+        resolve_deltas: bool,
+    ) -> Result<XlaBackend<'a>> {
+        let man = &artifact.manifest;
+        let mut params = Vec::with_capacity(man.params.len());
+        let mut momenta = Vec::with_capacity(man.params.len());
+        let mut weights_for_delta: Vec<&Tensor> = Vec::new();
+        for p in &man.params {
+            let t = ckpt
+                .find(&p.name)
+                .with_context(|| format!("checkpoint missing tensor {}", p.name))?;
+            anyhow::ensure!(
+                t.dims == p.shape,
+                "{}: ckpt shape {:?} != manifest {:?}",
+                p.name, t.dims, p.shape
+            );
+            params.push(literal_f32(&t.data, &p.shape)?);
+            // momenta: stored under "<name>#m" if present, else zeros
+            let mname = format!("{}#m", p.name);
+            match ckpt.find(&mname) {
+                Some(m) => momenta.push(literal_f32(&m.data, &p.shape)?),
+                None => momenta.push(literal_f32(&vec![0.0; p.numel()], &p.shape)?),
+            }
+            if p.is_quantized() {
+                weights_for_delta.push(t);
+            }
+        }
+        let mut state = Vec::with_capacity(man.state.len());
+        for s in &man.state {
+            let t = ckpt
+                .find(&s.name)
+                .with_context(|| format!("checkpoint missing state {}", s.name))?;
+            state.push(literal_f32(&t.data, &s.shape)?);
+        }
+        let deltas = if resolve_deltas {
+            weights_for_delta
+                .iter()
+                .map(|t| fixedpoint::optimal_delta_refined(&t.data, man.n_bits).0)
+                .collect()
+        } else {
+            let d = ckpt
+                .find("__deltas__")
+                .context("checkpoint missing __deltas__ (pass resolve_deltas=true?)")?;
+            d.data.clone()
+        };
+        let mut deltas = deltas;
+        deltas.resize(man.deltas_len(), 1.0);
+        Ok(XlaBackend { artifact, params, momenta, state, deltas })
+    }
+
+    /// Pull a parameter tensor back to the host.
+    pub fn param_host(&self, i: usize) -> Result<Vec<f32>> {
+        crate::runtime::to_f32_vec(&self.params[i])
+    }
+
+    fn img_dims(&self) -> [usize; 4] {
+        let man = &self.artifact.manifest;
+        [man.batch, man.input_shape[0], man.input_shape[1], man.input_shape[2]]
+    }
+}
+
+impl TrainBackend for XlaBackend<'_> {
+    fn tag(&self) -> String {
+        self.artifact.manifest.tag.clone()
+    }
+
+    fn batch(&self) -> usize {
+        self.artifact.manifest.batch
+    }
+
+    fn n_bits(&self) -> u32 {
+        self.artifact.manifest.n_bits
+    }
+
+    fn n_quant(&self) -> usize {
+        self.artifact.manifest.n_quant
+    }
+
+    fn deltas(&self) -> &[f32] {
+        &self.deltas
+    }
+
+    fn train_step(
+        &mut self,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        lambda: f32,
+    ) -> Result<StepOut> {
+        let man = &self.artifact.manifest;
+        let img_lit = literal_f32(images, &self.img_dims())?;
+        let lab_lit = literal_i32(labels, &[man.batch])?;
+        let deltas_lit = literal_f32(&self.deltas, &[man.deltas_len()])?;
+        let lr_lit = literal_scalar_f32(lr);
+        let lam_lit = literal_scalar_f32(lambda);
+        // flat calling convention: images, labels, params, momenta, state,
+        // deltas, lr, lam
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(man.train_arity());
+        args.push(&img_lit);
+        args.push(&lab_lit);
+        args.extend(self.params.iter());
+        args.extend(self.momenta.iter());
+        args.extend(self.state.iter());
+        args.push(&deltas_lit);
+        args.push(&lr_lit);
+        args.push(&lam_lit);
+        let mut out = run(&self.artifact.train, &args)?;
+        anyhow::ensure!(
+            out.len() == man.train_outputs(),
+            "train step returned {} outputs, expected {}",
+            out.len(),
+            man.train_outputs()
+        );
+        // outputs: loss, correct, params', momenta', state'
+        let p_n = man.params.len();
+        let s_n = man.state.len();
+        let state_new: Vec<xla::Literal> = out.split_off(2 + 2 * p_n);
+        let momenta_new: Vec<xla::Literal> = out.split_off(2 + p_n);
+        let params_new: Vec<xla::Literal> = out.split_off(2);
+        let correct = out.pop().unwrap().to_vec::<f32>()?[0];
+        let loss = out.pop().unwrap().to_vec::<f32>()?[0];
+        self.params = params_new;
+        self.momenta = momenta_new;
+        self.state = state_new;
+        debug_assert_eq!(self.state.len(), s_n);
+        Ok(StepOut { loss, correct })
+    }
+
+    fn eval_batch(&self, images: &[f32], labels: &[i32], quantized: bool) -> Result<StepOut> {
+        let man = &self.artifact.manifest;
+        let exe = if quantized { &self.artifact.evalq } else { &self.artifact.eval };
+        let img_lit = literal_f32(images, &self.img_dims())?;
+        let lab_lit = literal_i32(labels, &[man.batch])?;
+        let deltas_lit = if quantized {
+            Some(literal_f32(&self.deltas, &[man.deltas_len()])?)
+        } else {
+            None
+        };
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.push(&img_lit);
+        args.push(&lab_lit);
+        args.extend(self.params.iter());
+        args.extend(self.state.iter());
+        args.extend(deltas_lit.iter());
+        let out = run(exe, &args)?;
+        Ok(StepOut {
+            loss: out[0].to_vec::<f32>()?[0],
+            correct: out[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    fn quant_layers_host(&self) -> Result<Vec<(Vec<f32>, f32)>> {
+        let man = &self.artifact.manifest;
+        let mut out = Vec::with_capacity(man.n_quant);
+        for (i, p) in man.params.iter().enumerate() {
+            if let Some(q) = p.qidx {
+                out.push((self.param_host(i)?, self.deltas[q]));
+            }
+        }
+        Ok(out)
+    }
+
+    fn to_checkpoint(&self, epoch: u32) -> Result<Checkpoint> {
+        let man = &self.artifact.manifest;
+        let mut ck = Checkpoint::default();
+        ck.set_meta("model", crate::util::json::Json::Str(man.model.clone()));
+        ck.set_meta("method", crate::util::json::Json::Str(man.method.clone()));
+        ck.set_meta("epoch", crate::util::json::Json::Num(epoch as f64));
+        for (i, p) in man.params.iter().enumerate() {
+            ck.tensors.push(Tensor {
+                name: p.name.clone(),
+                kind: Kind::from_name(&p.kind)?,
+                dims: p.shape.clone(),
+                data: self.param_host(i)?,
+            });
+            ck.tensors.push(Tensor {
+                name: format!("{}#m", p.name),
+                kind: Kind::Momentum,
+                dims: p.shape.clone(),
+                data: crate::runtime::to_f32_vec(&self.momenta[i])?,
+            });
+        }
+        for (i, s) in man.state.iter().enumerate() {
+            ck.tensors.push(Tensor {
+                name: s.name.clone(),
+                kind: Kind::State,
+                dims: s.shape.clone(),
+                data: crate::runtime::to_f32_vec(&self.state[i])?,
+            });
+        }
+        ck.tensors.push(Tensor {
+            name: "__deltas__".into(),
+            kind: Kind::Deltas,
+            dims: vec![self.deltas.len()],
+            data: self.deltas.clone(),
+        });
+        Ok(ck)
+    }
+}

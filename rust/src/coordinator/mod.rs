@@ -1,12 +1,14 @@
 //! The L3 coordinator: Algorithm 1 as a Rust training orchestrator.
 //!
-//! * `trainer`    — epoch/batch loop over the fused AOT train step
+//! * `backend`    — the `TrainBackend` seam: XLA-artifact vs native substrate
+//! * `trainer`    — backend-generic epoch/batch loop, probes, checkpointing
 //! * `schedule`   — lr ramp + exponential lambda (section 3.3)
 //! * `tracker`    — mode-switch rates (Figure 4)
 //! * `histogram`  — weight-distribution probes (Figures 1 and 3)
 //! * `checkpoint` — binary checkpoints shared with the Python side
 //! * `metrics`    — per-epoch logs, CSV/JSONL
 
+pub mod backend;
 pub mod checkpoint;
 pub mod histogram;
 pub mod metrics;
@@ -14,6 +16,7 @@ pub mod schedule;
 pub mod tracker;
 pub mod trainer;
 
+pub use backend::{StepOut, TrainBackend, XlaBackend};
 pub use checkpoint::{Checkpoint, Kind, Tensor};
 pub use histogram::{Histogram, HistogramSeries, mode_occupancy};
 pub use metrics::{EpochLog, RunLog};

@@ -99,6 +99,34 @@ mod tests {
     }
 
     #[test]
+    fn paper_schedules_hit_prescribed_checkpoints() {
+        // Section 3.3's recommended settings, probed at e = 0, E/2, E for
+        // several run lengths: eta ramps 0.01 -> 0.001 linearly, lambda
+        // grows 10 -> 10 e^9 exponentially (sqrt(e^9) at the midpoint).
+        for epochs in [8u32, 40, 100] {
+            let lr = LrSchedule::paper(epochs);
+            assert!((lr.at(0) - 0.01).abs() < 1e-8, "E={epochs}");
+            assert!((lr.at(epochs / 2) - 0.0055).abs() < 1e-7, "E={epochs}");
+            assert!((lr.at(epochs) - 0.001).abs() < 1e-8, "E={epochs}");
+
+            let lam = LambdaSchedule::paper(epochs);
+            assert_eq!(lam.at(0), 10.0, "E={epochs}");
+            let mid = 10.0 * (4.5f32).exp();
+            assert!(
+                (lam.at(epochs / 2) - mid).abs() / mid < 1e-5,
+                "E={epochs}: lambda(E/2) = {} want {mid}",
+                lam.at(epochs / 2)
+            );
+            let end = 10.0 * (9.0f32).exp();
+            assert!(
+                (lam.at(epochs) - end).abs() / end < 1e-4,
+                "E={epochs}: lambda(E) = {} want {end}",
+                lam.at(epochs)
+            );
+        }
+    }
+
+    #[test]
     fn lambda_exponential_is_monotone() {
         let s = LambdaSchedule::paper(50);
         for e in 0..50 {

@@ -1,33 +1,34 @@
 //! The training coordinator: Algorithm 1 driven from Rust.
 //!
-//! The coordinator owns all mutable training state (weights, momenta, BN
-//! statistics, per-layer step sizes) as device-ready literals and drives the
-//! single fused train-step executable batch by batch. Python is never on
-//! this path — the executable was lowered once at `make artifacts` time.
+//! The coordinator owns the epoch loop, schedules, probes and
+//! checkpointing; the per-batch compute lives behind the
+//! [`TrainBackend`] seam (`backend.rs`), so the same `Trainer` drives
+//! both the AOT-artifact path ([`XlaBackend`]) and the pure-Rust
+//! [`crate::train::NativeBackend`].
 //!
 //! Responsibilities mapped to the paper:
-//! * step-size solve at init (Alg. 1 l.2-5) — `fixedpoint::optimal_delta`
+//! * step-size solve at init (Alg. 1 l.2-5) — `fixedpoint::optimal_delta_refined`
 //! * lr ramp + exponential lambda (l.7-8)   — `schedule::*`
 //! * batched SGD epoch loop (l.9-19)        — `run_epoch`
-//! * final hard quantization (l.21-24)      — `quantize_weights` / evalq
+//! * final hard quantization (l.21-24)      — backend `eval_batch(quantized)`
 //! * Fig-3/4 probes                          — `histogram::*`, `tracker::*`
 
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::data::{AugmentConfig, BatchIter, Dataset};
-use crate::fixedpoint;
-use crate::runtime::{Artifact, literal_f32, literal_i32, literal_scalar_f32, run};
+use crate::runtime::Artifact;
 
-use super::checkpoint::{Checkpoint, Kind, Tensor};
+use super::backend::{TrainBackend, XlaBackend};
+use super::checkpoint::Checkpoint;
 use super::histogram::{Histogram, HistogramSeries};
 use super::metrics::{EpochLog, RunLog};
 use super::schedule::{LambdaSchedule, LrSchedule};
 use super::tracker::ModeTracker;
 
-/// Training options beyond what the artifact manifest pins down.
+/// Training options beyond what the backend pins down.
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
     pub epochs: u32,
@@ -76,96 +77,48 @@ pub struct TrainOutcome {
     pub deltas: Vec<f32>,
 }
 
-/// The coordinator. Holds host-side state mirrors + the artifact.
-pub struct Trainer<'a> {
-    pub artifact: &'a Artifact,
-    params: Vec<xla::Literal>,
-    momenta: Vec<xla::Literal>,
-    state: Vec<xla::Literal>,
-    pub deltas: Vec<f32>,
+/// The coordinator: epoch loop + probes over any [`TrainBackend`].
+pub struct Trainer<B: TrainBackend> {
+    pub backend: B,
     pub epoch: u32,
 }
 
-impl<'a> Trainer<'a> {
-    /// Initialize from a checkpoint (aot.py's init.ckpt or a previously
-    /// saved training checkpoint). `resolve_deltas` recomputes the optimal
-    /// step sizes from the loaded weights (Alg. 1 lines 2-5) — pass true
-    /// when starting SYMOG from a pretrained float model.
+impl<'a> Trainer<XlaBackend<'a>> {
+    /// Initialize the artifact path from a checkpoint. `resolve_deltas`
+    /// re-solves the step sizes from the loaded weights (Alg. 1 lines 2-5)
+    /// — pass true when starting SYMOG from a pretrained float model.
     pub fn from_checkpoint(
         artifact: &'a Artifact,
         ckpt: &Checkpoint,
         resolve_deltas: bool,
-    ) -> Result<Trainer<'a>> {
-        let man = &artifact.manifest;
-        let mut params = Vec::with_capacity(man.params.len());
-        let mut momenta = Vec::with_capacity(man.params.len());
-        let mut weights_for_delta: Vec<&Tensor> = Vec::new();
-        for p in &man.params {
-            let t = ckpt
-                .find(&p.name)
-                .with_context(|| format!("checkpoint missing tensor {}", p.name))?;
-            anyhow::ensure!(
-                t.dims == p.shape,
-                "{}: ckpt shape {:?} != manifest {:?}",
-                p.name, t.dims, p.shape
-            );
-            params.push(literal_f32(&t.data, &p.shape)?);
-            // momenta: stored under "<name>#m" if present, else zeros
-            let mname = format!("{}#m", p.name);
-            match ckpt.find(&mname) {
-                Some(m) => momenta.push(literal_f32(&m.data, &p.shape)?),
-                None => momenta.push(literal_f32(&vec![0.0; p.numel()], &p.shape)?),
-            }
-            if p.is_quantized() {
-                weights_for_delta.push(t);
-            }
-        }
-        let mut state = Vec::with_capacity(man.state.len());
-        for s in &man.state {
-            let t = ckpt
-                .find(&s.name)
-                .with_context(|| format!("checkpoint missing state {}", s.name))?;
-            state.push(literal_f32(&t.data, &s.shape)?);
-        }
-        let deltas = if resolve_deltas {
-            weights_for_delta
-                .iter()
-                .map(|t| fixedpoint::optimal_delta_refined(&t.data, man.n_bits).0)
-                .collect()
-        } else {
-            let d = ckpt
-                .find("__deltas__")
-                .context("checkpoint missing __deltas__ (pass resolve_deltas=true?)")?;
-            d.data.clone()
-        };
-        let mut deltas = deltas;
-        deltas.resize(man.deltas_len(), 1.0);
+    ) -> Result<Trainer<XlaBackend<'a>>> {
+        let backend = XlaBackend::from_checkpoint(artifact, ckpt, resolve_deltas)?;
         let epoch = ckpt.meta_i64("epoch").unwrap_or(0) as u32;
-        Ok(Trainer { artifact, params, momenta, state, deltas, epoch })
+        Ok(Trainer { backend, epoch })
     }
 
     /// Convenience: load the artifact's own init checkpoint.
-    pub fn from_init(artifact: &'a Artifact) -> Result<Trainer<'a>> {
+    pub fn from_init(artifact: &'a Artifact) -> Result<Trainer<XlaBackend<'a>>> {
         let ckpt = Checkpoint::read(&artifact.init_ckpt())?;
         Trainer::from_checkpoint(artifact, &ckpt, true)
     }
+}
 
-    /// Pull a parameter tensor back to the host.
-    pub fn param_host(&self, i: usize) -> Result<Vec<f32>> {
-        crate::runtime::to_f32_vec(&self.params[i])
+impl<B: TrainBackend> Trainer<B> {
+    /// Wrap any backend at epoch 0 (the native path's entry point).
+    pub fn new(backend: B) -> Trainer<B> {
+        Trainer { backend, epoch: 0 }
+    }
+
+    /// Per-layer step sizes, qidx order.
+    pub fn deltas(&self) -> &[f32] {
+        self.backend.deltas()
     }
 
     /// Host copies of all quantized weight tensors with their deltas, in
     /// qidx order (probe input for tracker / histograms).
     pub fn quant_layers_host(&self) -> Result<Vec<(Vec<f32>, f32)>> {
-        let man = &self.artifact.manifest;
-        let mut out = Vec::with_capacity(man.n_quant);
-        for (i, p) in man.params.iter().enumerate() {
-            if let Some(q) = p.qidx {
-                out.push((self.param_host(i)?, self.deltas[q]));
-            }
-        }
-        Ok(out)
+        self.backend.quant_layers_host()
     }
 
     /// One epoch of Algorithm 1's inner loop. Returns (mean loss, accuracy).
@@ -176,52 +129,16 @@ impl<'a> Trainer<'a> {
         lr: f32,
         lambda: f32,
     ) -> Result<(f32, f32)> {
-        let man = &self.artifact.manifest;
-        let batch = man.batch;
+        let batch = self.backend.batch();
         let mut iter = BatchIter::new(data, batch, opts.seed, self.epoch as u64, opts.augment);
         let max_steps = opts.steps_per_epoch.unwrap_or(usize::MAX);
-        let deltas_lit = literal_f32(&self.deltas, &[man.deltas_len()])?;
-        let lr_lit = literal_scalar_f32(lr);
-        let lam_lit = literal_scalar_f32(lambda);
-        let img_dims = [batch, man.input_shape[0], man.input_shape[1], man.input_shape[2]];
-
         let (mut images, mut labels) = (Vec::new(), Vec::new());
         let (mut loss_sum, mut correct_sum, mut seen) = (0f64, 0f64, 0usize);
-        let (p_n, s_n) = (man.params.len(), man.state.len());
         let mut steps = 0usize;
         while steps < max_steps && iter.next_into(&mut images, &mut labels) {
-            let img_lit = literal_f32(&images, &img_dims)?;
-            let lab_lit = literal_i32(&labels, &[batch])?;
-            // flat calling convention: images, labels, params, momenta,
-            // state, deltas, lr, lam
-            let mut args: Vec<&xla::Literal> = Vec::with_capacity(man.train_arity());
-            args.push(&img_lit);
-            args.push(&lab_lit);
-            args.extend(self.params.iter());
-            args.extend(self.momenta.iter());
-            args.extend(self.state.iter());
-            args.push(&deltas_lit);
-            args.push(&lr_lit);
-            args.push(&lam_lit);
-            let mut out = run(&self.artifact.train, &args)?;
-            anyhow::ensure!(
-                out.len() == man.train_outputs(),
-                "train step returned {} outputs, expected {}",
-                out.len(),
-                man.train_outputs()
-            );
-            // outputs: loss, correct, params', momenta', state'
-            let state_new: Vec<xla::Literal> = out.split_off(2 + 2 * p_n);
-            let momenta_new: Vec<xla::Literal> = out.split_off(2 + p_n);
-            let params_new: Vec<xla::Literal> = out.split_off(2);
-            let correct = out.pop().unwrap().to_vec::<f32>()?[0];
-            let loss = out.pop().unwrap().to_vec::<f32>()?[0];
-            self.params = params_new;
-            self.momenta = momenta_new;
-            self.state = state_new;
-            debug_assert_eq!(self.state.len(), s_n);
-            loss_sum += loss as f64;
-            correct_sum += correct as f64;
+            let out = self.backend.train_step(&images, &labels, lr, lambda)?;
+            loss_sum += out.loss as f64;
+            correct_sum += out.correct as f64;
             seen += batch;
             steps += 1;
         }
@@ -234,31 +151,21 @@ impl<'a> Trainer<'a> {
 
     /// Evaluate on `data` with float (quantized=false) or hard-quantized
     /// (quantized=true) weights. Uses the largest batch-multiple prefix of
-    /// the test set (static-shape executable).
+    /// the test set (the step shape is static on both backends).
     pub fn evaluate(&self, data: &Dataset, quantized: bool) -> Result<(f32, f32)> {
-        let man = &self.artifact.manifest;
-        let batch = man.batch;
+        let batch = self.backend.batch();
         let usable = (data.len() / batch) * batch;
         anyhow::ensure!(usable > 0, "test set smaller than one batch");
-        let exe = if quantized { &self.artifact.evalq } else { &self.artifact.eval };
-        let deltas_lit = literal_f32(&self.deltas, &[man.deltas_len()])?;
-        let img_dims = [batch, man.input_shape[0], man.input_shape[1], man.input_shape[2]];
         let e = data.image_elems();
         let (mut loss_sum, mut correct_sum) = (0f64, 0f64);
         for start in (0..usable).step_by(batch) {
-            let img_lit = literal_f32(&data.images[start * e..(start + batch) * e], &img_dims)?;
-            let lab_lit = literal_i32(&data.labels[start..start + batch], &[batch])?;
-            let mut args: Vec<&xla::Literal> = Vec::new();
-            args.push(&img_lit);
-            args.push(&lab_lit);
-            args.extend(self.params.iter());
-            args.extend(self.state.iter());
-            if quantized {
-                args.push(&deltas_lit);
-            }
-            let out = run(exe, &args)?;
-            loss_sum += out[0].to_vec::<f32>()?[0] as f64;
-            correct_sum += out[1].to_vec::<f32>()?[0] as f64;
+            let out = self.backend.eval_batch(
+                &data.images[start * e..(start + batch) * e],
+                &data.labels[start..start + batch],
+                quantized,
+            )?;
+            loss_sum += out.loss as f64;
+            correct_sum += out.correct as f64;
         }
         let n_batches = usable / batch;
         Ok(((loss_sum / n_batches as f64) as f32, (correct_sum / usable as f64) as f32))
@@ -271,11 +178,10 @@ impl<'a> Trainer<'a> {
         test_data: &Dataset,
         opts: &TrainOptions,
     ) -> Result<TrainOutcome> {
-        let man = &self.artifact.manifest;
-        let mut log = RunLog::new(&man.tag);
+        let mut log = RunLog::new(&self.backend.tag());
         let mut tracker = opts
             .track_modes
-            .then(|| ModeTracker::new(man.n_quant, man.n_bits));
+            .then(|| ModeTracker::new(self.backend.n_quant(), self.backend.n_bits()));
         let mut histograms: Vec<(usize, HistogramSeries)> = opts
             .hist_layers
             .iter()
@@ -295,7 +201,7 @@ impl<'a> Trainer<'a> {
             let (testq_loss, testq_acc) = self.evaluate(test_data, true)?;
             let switch_rate = match &mut tracker {
                 Some(t) => {
-                    let layers = self.quant_layers_host()?;
+                    let layers = self.backend.quant_layers_host()?;
                     crate::util::mean(
                         &t.record(layers.iter().map(|(w, d)| (w.as_slice(), *d))),
                     )
@@ -329,7 +235,7 @@ impl<'a> Trainer<'a> {
             log,
             tracker,
             histograms,
-            deltas: self.deltas.clone(),
+            deltas: self.backend.deltas().to_vec(),
         })
     }
 
@@ -341,7 +247,7 @@ impl<'a> Trainer<'a> {
         epoch: u32,
     ) -> Result<()> {
         if let Some(t) = tracker {
-            let layers = self.quant_layers_host()?;
+            let layers = self.backend.quant_layers_host()?;
             t.record(layers.iter().map(|(w, d)| (w.as_slice(), *d)));
         }
         self.snapshot_hists(histograms, opts, epoch)
@@ -356,54 +262,23 @@ impl<'a> Trainer<'a> {
         if histograms.is_empty() || !opts.hist_epochs.contains(&epoch) {
             return Ok(());
         }
-        let man = &self.artifact.manifest;
-        let layers = self.quant_layers_host()?;
+        let layers = self.backend.quant_layers_host()?;
         for (qidx, series) in histograms.iter_mut() {
             if let Some((w, d)) = layers.get(*qidx) {
-                series.push(epoch, Histogram::for_layer(w, *d, man.n_bits, opts.hist_bins));
+                series.push(
+                    epoch,
+                    Histogram::for_layer(w, *d, self.backend.n_bits(), opts.hist_bins),
+                );
             }
         }
         Ok(())
     }
 
     /// Snapshot everything into a checkpoint (Alg. 1 line 21-23's float
-    /// weights + momenta + BN state + deltas; quantization is applied by
-    /// the consumer: evalq, the integer engine, or `quant::quantize_ckpt`).
+    /// weights + momenta + state + deltas; quantization is applied by the
+    /// consumer: evalq, the integer engine, or `quant::quantize_ckpt`).
     pub fn to_checkpoint(&self) -> Result<Checkpoint> {
-        let man = &self.artifact.manifest;
-        let mut ck = Checkpoint::default();
-        ck.set_meta("model", crate::util::json::Json::Str(man.model.clone()));
-        ck.set_meta("method", crate::util::json::Json::Str(man.method.clone()));
-        ck.set_meta("epoch", crate::util::json::Json::Num(self.epoch as f64));
-        for (i, p) in man.params.iter().enumerate() {
-            ck.tensors.push(Tensor {
-                name: p.name.clone(),
-                kind: Kind::from_name(&p.kind)?,
-                dims: p.shape.clone(),
-                data: self.param_host(i)?,
-            });
-            ck.tensors.push(Tensor {
-                name: format!("{}#m", p.name),
-                kind: Kind::Momentum,
-                dims: p.shape.clone(),
-                data: crate::runtime::to_f32_vec(&self.momenta[i])?,
-            });
-        }
-        for (i, s) in man.state.iter().enumerate() {
-            ck.tensors.push(Tensor {
-                name: s.name.clone(),
-                kind: Kind::State,
-                dims: s.shape.clone(),
-                data: crate::runtime::to_f32_vec(&self.state[i])?,
-            });
-        }
-        ck.tensors.push(Tensor {
-            name: "__deltas__".into(),
-            kind: Kind::Deltas,
-            dims: vec![self.deltas.len()],
-            data: self.deltas.clone(),
-        });
-        Ok(ck)
+        self.backend.to_checkpoint(self.epoch)
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {

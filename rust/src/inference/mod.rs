@@ -21,7 +21,7 @@
 
 mod cost;
 mod engine;
-mod gemm;
+pub(crate) mod gemm;
 mod ops;
 
 pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};

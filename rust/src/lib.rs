@@ -1,8 +1,10 @@
 //! SYMOG: symmetric mixture-of-Gaussian-modes fixed-point quantization.
 //!
 //! Full-stack reproduction of Enderich et al., Neurocomputing 2020:
-//! a Rust training coordinator driving AOT-compiled JAX/Pallas compute
-//! (HLO via PJRT), plus a pure integer fixed-point inference engine.
+//! a Rust training coordinator with two backends — AOT-compiled
+//! JAX/Pallas compute (HLO via PJRT) and a pure-Rust native trainer
+//! (`train::NativeBackend`) — plus a pure integer fixed-point inference
+//! engine.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
@@ -18,4 +20,5 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod testing;
+pub mod train;
 pub mod util;

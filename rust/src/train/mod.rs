@@ -1,0 +1,26 @@
+//! Native training substrate: Algorithm 1's compute, in pure Rust.
+//!
+//! This module is the `TrainBackend` the repo falls back to (and ships as
+//! the default end-to-end path) when no AOT artifact exists: f32
+//! forward/backward for dense / conv / ReLU / softmax-cross-entropy,
+//! minibatch Nesterov SGD, and the SYMOG regularizer gradient
+//! `lambda * (2/M)(w - Q_N(w; delta))` of Eqs. 3-4 — making the paper's
+//! "the learning task and the quantization are solved simultaneously"
+//! loop executable with nothing but this crate.
+//!
+//! * `ops`     — forward + backward primitives (NHWC / HWIO layouts)
+//! * `model`   — sequential model, He init, checkpoint interop
+//! * `sgd`     — Nesterov + fused SYMOG update (Alg. 1 lines 14-17)
+//! * `symog`   — regularizer value/gradient + mode-concentration probes
+//! * `backend` — `NativeBackend`, the `TrainBackend` impl
+
+pub mod backend;
+pub mod model;
+pub mod ops;
+pub mod sgd;
+pub mod symog;
+
+pub use backend::{NativeBackend, NativeHyper};
+pub use model::{ModelBuilder, NativeModel, Param};
+pub use ops::Conv2dShape;
+pub use symog::{mean_mode_mass, mode_mass};

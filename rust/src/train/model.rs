@@ -1,0 +1,415 @@
+//! Sequential f32 model for the native training backend.
+//!
+//! A `NativeModel` is a stack of conv / dense / ReLU nodes over NHWC
+//! activations, with its parameters held host-side (data + gradient +
+//! momentum per tensor). Naming and kinds mirror the AOT manifest
+//! convention (`l{i}.dense.w`, kind "weight"/"bias", qidx per quantized
+//! weight) so checkpoints interoperate with the rest of the toolbox.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::checkpoint::{Checkpoint, Kind, Tensor};
+use crate::fixedpoint::quantize_slice;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::ops::{self, Conv2dShape};
+
+/// One trainable tensor with its optimizer state.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub kind: Kind,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    pub grad: Vec<f32>,
+    pub momentum: Vec<f32>,
+    /// index into the deltas vector; Some only for quantized weights
+    pub qidx: Option<usize>,
+}
+
+impl Param {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One node of the sequential graph (shapes resolved at build time).
+#[derive(Clone, Copy, Debug)]
+enum Node {
+    Conv { w: usize, b: usize, shape: Conv2dShape },
+    Dense { w: usize, b: usize, fin: usize, fout: usize },
+    Relu,
+}
+
+/// A sequential model: input -> nodes -> logits.
+pub struct NativeModel {
+    pub tag: String,
+    pub input_shape: [usize; 3],
+    pub classes: usize,
+    pub params: Vec<Param>,
+    pub n_quant: usize,
+    nodes: Vec<Node>,
+}
+
+/// Incremental builder so architectures stay declarative at call sites.
+pub struct ModelBuilder {
+    tag: String,
+    input_shape: [usize; 3],
+    cur: [usize; 3],
+    params: Vec<Param>,
+    nodes: Vec<Node>,
+    n_quant: usize,
+    rng: Rng,
+}
+
+impl ModelBuilder {
+    pub fn new(tag: &str, input_shape: [usize; 3], seed: u64) -> Self {
+        ModelBuilder {
+            tag: tag.to_string(),
+            input_shape,
+            cur: input_shape,
+            params: Vec::new(),
+            nodes: Vec::new(),
+            n_quant: 0,
+            rng: Rng::new(seed ^ 0x4E415456), // "NATV"
+        }
+    }
+
+    fn he_init(&mut self, numel: usize, fan_in: usize) -> Vec<f32> {
+        let sigma = (2.0 / fan_in.max(1) as f32).sqrt();
+        let mut w = vec![0f32; numel];
+        self.rng.fill_normal(&mut w, sigma);
+        w
+    }
+
+    fn push_param(&mut self, name: String, kind: Kind, shape: Vec<usize>, data: Vec<f32>) -> usize {
+        let n = data.len();
+        self.params.push(Param {
+            name,
+            kind,
+            shape,
+            data,
+            grad: Vec::new(),
+            momentum: vec![0f32; n],
+            qidx: None,
+        });
+        self.params.len() - 1
+    }
+
+    /// 3x3-style SAME conv (odd k), stride `stride`, `cout` filters.
+    pub fn conv(mut self, k: usize, stride: usize, cout: usize) -> Self {
+        assert!(k % 2 == 1, "conv kernel must be odd for SAME padding");
+        let [h, w, cin] = self.cur;
+        let shape = Conv2dShape { h, w, cin, k, stride, cout };
+        let li = self.nodes.len();
+        let fan_in = k * k * cin;
+        let wdata = self.he_init(shape.weight_elems(), fan_in);
+        let wi = self.push_param(
+            format!("l{li}.conv.w"),
+            Kind::Weight,
+            vec![k, k, cin, cout],
+            wdata,
+        );
+        self.params[wi].qidx = Some(self.n_quant);
+        self.n_quant += 1;
+        let bi = self.push_param(format!("l{li}.conv.b"), Kind::Bias, vec![cout], vec![0f32; cout]);
+        self.nodes.push(Node::Conv { w: wi, b: bi, shape });
+        self.cur = [shape.out_h(), shape.out_w(), cout];
+        self
+    }
+
+    /// Fully-connected layer over the flattened current activation.
+    pub fn dense(mut self, fout: usize) -> Self {
+        let fin = self.cur[0] * self.cur[1] * self.cur[2];
+        let li = self.nodes.len();
+        let wdata = self.he_init(fin * fout, fin);
+        let wi = self.push_param(format!("l{li}.dense.w"), Kind::Weight, vec![fin, fout], wdata);
+        self.params[wi].qidx = Some(self.n_quant);
+        self.n_quant += 1;
+        let bi =
+            self.push_param(format!("l{li}.dense.b"), Kind::Bias, vec![fout], vec![0f32; fout]);
+        self.nodes.push(Node::Dense { w: wi, b: bi, fin, fout });
+        self.cur = [1, 1, fout];
+        self
+    }
+
+    pub fn relu(mut self) -> Self {
+        self.nodes.push(Node::Relu);
+        self
+    }
+
+    /// Finish with the classifier head already in place.
+    pub fn build(self) -> NativeModel {
+        let classes = self.cur[0] * self.cur[1] * self.cur[2];
+        NativeModel {
+            tag: self.tag,
+            input_shape: self.input_shape,
+            classes,
+            params: self.params,
+            n_quant: self.n_quant,
+            nodes: self.nodes,
+        }
+    }
+}
+
+impl NativeModel {
+    /// MLP: flatten -> (dense -> relu)* -> dense(classes).
+    pub fn mlp(input_shape: [usize; 3], hidden: &[usize], classes: usize, seed: u64) -> Self {
+        let mut b = ModelBuilder::new("native-mlp", input_shape, seed);
+        for &h in hidden {
+            b = b.dense(h).relu();
+        }
+        b.dense(classes).build()
+    }
+
+    /// Small convnet: (conv3x3 s2 -> relu)* -> dense(classes).
+    pub fn convnet(
+        input_shape: [usize; 3],
+        channels: &[usize],
+        classes: usize,
+        seed: u64,
+    ) -> NativeModel {
+        let mut b = ModelBuilder::new("native-convnet", input_shape, seed);
+        for &c in channels {
+            b = b.conv(3, 2, c).relu();
+        }
+        b.dense(classes).build()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Host weight tensors of the quantized layers in qidx order.
+    pub fn quant_weights(&self) -> Vec<&Param> {
+        let mut v: Vec<&Param> = self.params.iter().filter(|p| p.qidx.is_some()).collect();
+        v.sort_by_key(|p| p.qidx);
+        v
+    }
+
+    /// Weight slice for node param `idx`, hard-quantized when `quant` is set.
+    fn weight_of<'a>(
+        &'a self,
+        idx: usize,
+        quant: Option<(&[f32], u32)>,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        let p = &self.params[idx];
+        match (quant, p.qidx) {
+            (Some((deltas, n_bits)), Some(q)) => {
+                scratch.resize(p.data.len(), 0.0);
+                quantize_slice(&p.data, deltas[q], n_bits, scratch);
+                scratch
+            }
+            _ => &p.data,
+        }
+    }
+
+    /// Forward pass keeping every intermediate activation (for backward).
+    /// `acts[0]` is the input; `acts[i + 1]` is node i's output.
+    pub fn forward_cached(&self, images: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        self.forward_impl(images, batch, None)
+    }
+
+    /// Logits only, optionally with hard-quantized weights (evalq semantics).
+    pub fn logits(&self, images: &[f32], batch: usize, quant: Option<(&[f32], u32)>) -> Vec<f32> {
+        self.forward_impl(images, batch, quant).pop().unwrap()
+    }
+
+    fn forward_impl(
+        &self,
+        images: &[f32],
+        batch: usize,
+        quant: Option<(&[f32], u32)>,
+    ) -> Vec<Vec<f32>> {
+        let e = self.input_shape.iter().product::<usize>();
+        assert_eq!(images.len(), batch * e, "input size mismatch");
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len() + 1);
+        acts.push(images.to_vec());
+        let mut scratch = Vec::new();
+        for node in &self.nodes {
+            let x = acts.last().unwrap();
+            let y = match *node {
+                Node::Conv { w, b, shape } => {
+                    let wt = self.weight_of(w, quant, &mut scratch);
+                    ops::conv2d_forward(x, wt, &self.params[b].data, batch, &shape)
+                }
+                Node::Dense { w, b, fin, fout } => {
+                    let wt = self.weight_of(w, quant, &mut scratch);
+                    ops::dense_forward(x, wt, &self.params[b].data, batch, fin, fout)
+                }
+                Node::Relu => ops::relu_forward(x),
+            };
+            acts.push(y);
+        }
+        acts
+    }
+
+    /// Backward pass from `dlogits`; fills `params[i].grad` (overwriting).
+    pub fn backward(&mut self, acts: &[Vec<f32>], dlogits: Vec<f32>, batch: usize) {
+        assert_eq!(acts.len(), self.nodes.len() + 1);
+        let mut dy = dlogits;
+        for i in (0..self.nodes.len()).rev() {
+            let node = self.nodes[i];
+            let x = &acts[i];
+            match node {
+                Node::Conv { w, b, shape } => {
+                    let (dx, dw, db) =
+                        ops::conv2d_backward(x, &self.params[w].data, &dy, batch, &shape);
+                    self.params[w].grad = dw;
+                    self.params[b].grad = db;
+                    dy = dx;
+                }
+                Node::Dense { w, b, fin, fout } => {
+                    let (dx, dw, db) =
+                        ops::dense_backward(x, &self.params[w].data, &dy, batch, fin, fout);
+                    self.params[w].grad = dw;
+                    self.params[b].grad = db;
+                    dy = dx;
+                }
+                Node::Relu => {
+                    dy = ops::relu_backward(x, &dy);
+                }
+            }
+        }
+    }
+
+    /// Snapshot params + momenta (+ `__deltas__`) into a checkpoint.
+    pub fn to_checkpoint(&self, deltas: &[f32], epoch: u32, method: &str) -> Checkpoint {
+        let mut ck = Checkpoint::default();
+        ck.set_meta("model", Json::Str(self.tag.clone()));
+        ck.set_meta("method", Json::Str(method.to_string()));
+        ck.set_meta("epoch", Json::Num(epoch as f64));
+        for p in &self.params {
+            ck.tensors.push(Tensor {
+                name: p.name.clone(),
+                kind: p.kind,
+                dims: p.shape.clone(),
+                data: p.data.clone(),
+            });
+            ck.tensors.push(Tensor {
+                name: format!("{}#m", p.name),
+                kind: Kind::Momentum,
+                dims: p.shape.clone(),
+                data: p.momentum.clone(),
+            });
+        }
+        ck.tensors.push(Tensor {
+            name: "__deltas__".into(),
+            kind: Kind::Deltas,
+            dims: vec![deltas.len()],
+            data: deltas.to_vec(),
+        });
+        ck
+    }
+
+    /// Load parameter data (+ momenta when present) from a checkpoint
+    /// written by `to_checkpoint` for the same architecture.
+    pub fn load_checkpoint(&mut self, ck: &Checkpoint) -> Result<()> {
+        for p in &mut self.params {
+            let t = ck
+                .find(&p.name)
+                .with_context(|| format!("checkpoint missing tensor {}", p.name))?;
+            anyhow::ensure!(
+                t.dims == p.shape,
+                "{}: ckpt shape {:?} != model {:?}",
+                p.name, t.dims, p.shape
+            );
+            p.data = t.data.clone();
+            match ck.find(&format!("{}#m", p.name)) {
+                Some(m) => {
+                    anyhow::ensure!(m.data.len() == p.numel(), "{}#m: bad momentum size", p.name);
+                    p.momentum = m.data.clone();
+                }
+                None => p.momentum = vec![0f32; p.numel()],
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_shapes_and_naming() {
+        let m = NativeModel::mlp([4, 4, 1], &[8], 3, 0);
+        assert_eq!(m.classes, 3);
+        assert_eq!(m.n_quant, 2);
+        assert_eq!(m.params.len(), 4);
+        assert_eq!(m.params[0].name, "l0.dense.w");
+        assert_eq!(m.params[0].shape, vec![16, 8]);
+        assert_eq!(m.params[0].qidx, Some(0));
+        assert_eq!(m.params[1].kind, Kind::Bias);
+        assert_eq!(m.num_params(), 16 * 8 + 8 + 8 * 3 + 3);
+        let x = vec![0.5f32; 2 * 16];
+        let logits = m.logits(&x, 2, None);
+        assert_eq!(logits.len(), 2 * 3);
+    }
+
+    #[test]
+    fn convnet_shapes() {
+        let m = NativeModel::convnet([8, 8, 1], &[4, 8], 10, 1);
+        // 8x8 -> 4x4x4 -> 2x2x8 -> dense 10
+        assert_eq!(m.n_quant, 3);
+        let dense_w = m.params.iter().find(|p| p.name.contains("dense.w")).unwrap();
+        assert_eq!(dense_w.shape, vec![2 * 2 * 8, 10]);
+        let x = vec![0.1f32; 8 * 8];
+        let logits = m.logits(&x, 1, None);
+        assert_eq!(logits.len(), 10);
+    }
+
+    #[test]
+    fn he_init_scale_is_sane() {
+        let m = NativeModel::mlp([8, 8, 1], &[32], 10, 3);
+        let w = &m.params[0];
+        let sigma = crate::util::std_dev(&w.data);
+        let want = (2.0f32 / 64.0).sqrt();
+        assert!((sigma - want).abs() < 0.25 * want, "sigma {sigma} vs {want}");
+        // biases start at zero
+        assert!(m.params[1].data.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn quantized_forward_uses_codebook_weights() {
+        let m = NativeModel::mlp([2, 2, 1], &[], 4, 5);
+        let deltas = vec![0.125f32; m.n_quant];
+        let x = vec![1.0f32, 0.0, 0.0, 0.0];
+        // quantized logits == forward through a hand-quantized copy
+        let lq = m.logits(&x, 1, Some((&deltas, 2)));
+        let wq: Vec<f32> = m.params[0]
+            .data
+            .iter()
+            .map(|&v| crate::fixedpoint::quantize(v, 0.125, 2))
+            .collect();
+        let want = ops::dense_forward(&x, &wq, &m.params[1].data, 1, 4, 4);
+        crate::testing::assert_allclose(&lq, &want, 1e-6);
+        // and differs from the float forward (He weights are off-codebook)
+        let lf = m.logits(&x, 1, None);
+        assert!(lq.iter().zip(&lf).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_state() {
+        let mut m = NativeModel::mlp([4, 4, 1], &[6], 5, 9);
+        m.params[0].momentum[3] = 0.25;
+        let ck = m.to_checkpoint(&[0.5, 0.25], 7, "symog");
+        assert_eq!(ck.meta_i64("epoch"), Some(7));
+        let mut m2 = NativeModel::mlp([4, 4, 1], &[6], 5, 1234);
+        assert_ne!(m2.params[0].data, m.params[0].data);
+        m2.load_checkpoint(&ck).unwrap();
+        assert_eq!(m2.params[0].data, m.params[0].data);
+        assert_eq!(m2.params[0].momentum[3], 0.25);
+        assert_eq!(ck.find("__deltas__").unwrap().data, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn wrong_arch_checkpoint_rejected() {
+        let m = NativeModel::mlp([4, 4, 1], &[6], 5, 0);
+        let ck = m.to_checkpoint(&[1.0, 1.0], 0, "symog");
+        let mut other = NativeModel::mlp([4, 4, 1], &[7], 5, 0);
+        assert!(other.load_checkpoint(&ck).is_err());
+    }
+}

@@ -1,0 +1,433 @@
+//! f32 forward/backward primitives for the native training backend.
+//!
+//! Layouts match the AOT side: activations are NHWC, conv weights are HWIO,
+//! dense weights are [in, out] row-major. All loops are plain sequential
+//! Rust — deterministic regardless of thread count, and fast enough for the
+//! tiny-to-small models the native backend targets (the integer GEMM hot
+//! path stays the inference engine's job).
+
+/// Static geometry of one conv layer (batch is supplied per call).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dShape {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    /// square kernel edge (odd)
+    pub k: usize,
+    pub stride: usize,
+    pub cout: usize,
+}
+
+impl Conv2dShape {
+    /// (out_h, out_w, pad_top, pad_left), delegating to the single SAME
+    /// geometry implementation shared with the integer inference engine —
+    /// a trained checkpoint and the engine can never disagree on shapes.
+    fn geometry(&self) -> (usize, usize, i64, i64) {
+        let (oh, ow, pt, pl) = crate::inference::gemm::conv_geometry(
+            self.h, self.w, self.k, self.k, self.stride, true,
+        );
+        (oh, ow, pt as i64, pl as i64)
+    }
+
+    /// SAME-padding output height: ceil(h / stride).
+    pub fn out_h(&self) -> usize {
+        self.geometry().0
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.geometry().1
+    }
+
+    /// SAME padding before the top row (TF convention: excess goes after).
+    fn pad_top(&self) -> i64 {
+        self.geometry().2
+    }
+
+    fn pad_left(&self) -> i64 {
+        self.geometry().3
+    }
+
+    pub fn in_elems(&self, batch: usize) -> usize {
+        batch * self.h * self.w * self.cin
+    }
+
+    pub fn out_elems(&self, batch: usize) -> usize {
+        batch * self.out_h() * self.out_w() * self.cout
+    }
+
+    pub fn weight_elems(&self) -> usize {
+        self.k * self.k * self.cin * self.cout
+    }
+}
+
+/// y[b, out] = x[b, in] · w[in, out] + bias[out].
+pub fn dense_forward(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * fin);
+    debug_assert_eq!(w.len(), fin * fout);
+    debug_assert_eq!(bias.len(), fout);
+    let mut y = vec![0f32; batch * fout];
+    for i in 0..batch {
+        let yrow = &mut y[i * fout..(i + 1) * fout];
+        yrow.copy_from_slice(bias);
+        let xrow = &x[i * fin..(i + 1) * fin];
+        for (p, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // ReLU sparsity
+            }
+            let wrow = &w[p * fout..(p + 1) * fout];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// Gradients of `dense_forward`: returns (dx, dw, dbias).
+pub fn dense_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), batch * fout);
+    let mut dx = vec![0f32; batch * fin];
+    let mut dw = vec![0f32; fin * fout];
+    let mut db = vec![0f32; fout];
+    for i in 0..batch {
+        let dyrow = &dy[i * fout..(i + 1) * fout];
+        for (dbv, &dyv) in db.iter_mut().zip(dyrow) {
+            *dbv += dyv;
+        }
+        let xrow = &x[i * fin..(i + 1) * fin];
+        let dxrow = &mut dx[i * fin..(i + 1) * fin];
+        for p in 0..fin {
+            let wrow = &w[p * fout..(p + 1) * fout];
+            let mut acc = 0f32;
+            for (&dyv, &wv) in dyrow.iter().zip(wrow) {
+                acc += dyv * wv;
+            }
+            dxrow[p] = acc;
+            let xv = xrow[p];
+            if xv != 0.0 {
+                let dwrow = &mut dw[p * fout..(p + 1) * fout];
+                for (dwv, &dyv) in dwrow.iter_mut().zip(dyrow) {
+                    *dwv += xv * dyv;
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+/// NHWC conv with HWIO weights, SAME padding, square stride.
+pub fn conv2d_forward(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), s.in_elems(batch));
+    debug_assert_eq!(wt.len(), s.weight_elems());
+    debug_assert_eq!(bias.len(), s.cout);
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let (pt, pl) = (s.pad_top(), s.pad_left());
+    let mut y = vec![0f32; s.out_elems(batch)];
+    for im in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let ybase = ((im * oh + oy) * ow + ox) * s.cout;
+                y[ybase..ybase + s.cout].copy_from_slice(bias);
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as i64 - pt;
+                    if iy < 0 || iy >= s.h as i64 {
+                        continue;
+                    }
+                    for kx in 0..s.k {
+                        let ix = (ox * s.stride + kx) as i64 - pl;
+                        if ix < 0 || ix >= s.w as i64 {
+                            continue;
+                        }
+                        let xbase = ((im * s.h + iy as usize) * s.w + ix as usize) * s.cin;
+                        let wbase = (ky * s.k + kx) * s.cin * s.cout;
+                        for ci in 0..s.cin {
+                            let xv = x[xbase + ci];
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &wt[wbase + ci * s.cout..wbase + (ci + 1) * s.cout];
+                            let yrow = &mut y[ybase..ybase + s.cout];
+                            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                                *yv += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Gradients of `conv2d_forward`: returns (dx, dw, dbias).
+pub fn conv2d_backward(
+    x: &[f32],
+    wt: &[f32],
+    dy: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), s.out_elems(batch));
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let (pt, pl) = (s.pad_top(), s.pad_left());
+    let mut dx = vec![0f32; s.in_elems(batch)];
+    let mut dw = vec![0f32; s.weight_elems()];
+    let mut db = vec![0f32; s.cout];
+    for im in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dybase = ((im * oh + oy) * ow + ox) * s.cout;
+                let dyrow = &dy[dybase..dybase + s.cout];
+                for (dbv, &dyv) in db.iter_mut().zip(dyrow) {
+                    *dbv += dyv;
+                }
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as i64 - pt;
+                    if iy < 0 || iy >= s.h as i64 {
+                        continue;
+                    }
+                    for kx in 0..s.k {
+                        let ix = (ox * s.stride + kx) as i64 - pl;
+                        if ix < 0 || ix >= s.w as i64 {
+                            continue;
+                        }
+                        let xbase = ((im * s.h + iy as usize) * s.w + ix as usize) * s.cin;
+                        let wbase = (ky * s.k + kx) * s.cin * s.cout;
+                        for ci in 0..s.cin {
+                            let xv = x[xbase + ci];
+                            let wrow = &wt[wbase + ci * s.cout..wbase + (ci + 1) * s.cout];
+                            let dwrow = &mut dw[wbase + ci * s.cout..wbase + (ci + 1) * s.cout];
+                            let mut acc = 0f32;
+                            for co in 0..s.cout {
+                                let dyv = dyrow[co];
+                                acc += wrow[co] * dyv;
+                                dwrow[co] += xv * dyv;
+                            }
+                            dx[xbase + ci] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dx, dw, db)
+}
+
+pub fn relu_forward(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// dx = dy where the pre-activation was positive, else 0.
+pub fn relu_backward(pre: &[f32], dy: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(pre.len(), dy.len());
+    pre.iter().zip(dy).map(|(&p, &d)| if p > 0.0 { d } else { 0.0 }).collect()
+}
+
+/// Mean softmax cross-entropy over the batch.
+/// Returns (mean loss, argmax-hit count as f32, dlogits already / batch).
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    batch: usize,
+    classes: usize,
+) -> (f32, f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(labels.len(), batch);
+    let mut d = vec![0f32; batch * classes];
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    let inv_b = 1.0 / batch as f32;
+    for i in 0..batch {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > max {
+                max = v;
+                argmax = j;
+            }
+        }
+        let mut sum = 0f64;
+        for &v in row {
+            sum += ((v - max) as f64).exp();
+        }
+        let y = labels[i] as usize;
+        assert!(y < classes, "label {y} out of range for {classes} classes");
+        loss += sum.ln() - (row[y] - max) as f64;
+        if argmax == y {
+            correct += 1;
+        }
+        let drow = &mut d[i * classes..(i + 1) * classes];
+        for j in 0..classes {
+            let p = (((row[j] - max) as f64).exp() / sum) as f32;
+            let target = if j == y { 1.0 } else { 0.0 };
+            drow[j] = (p - target) * inv_b;
+        }
+    }
+    ((loss / batch as f64) as f32, correct as f32, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_forward_known_values() {
+        // x = [[1, 2]], w = [[1, 0, -1], [2, 1, 0]], b = [0.5, 0, 0]
+        let y =
+            dense_forward(&[1.0, 2.0], &[1.0, 0.0, -1.0, 2.0, 1.0, 0.0], &[0.5, 0.0, 0.0], 1, 2, 3);
+        assert_eq!(y, vec![5.5, 2.0, -1.0]);
+    }
+
+    #[test]
+    fn conv1x1_equals_per_pixel_dense() {
+        // a 1x1 stride-1 conv is a dense layer applied at every pixel
+        let mut rng = Rng::new(3);
+        let s = Conv2dShape { h: 4, w: 3, cin: 2, k: 1, stride: 1, cout: 5 };
+        let x: Vec<f32> = (0..s.in_elems(2)).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..s.cout).map(|_| rng.normal()).collect();
+        let yc = conv2d_forward(&x, &w, &b, 2, &s);
+        let yd = dense_forward(&x, &w, &b, 2 * 4 * 3, 2, 5);
+        crate::testing::assert_allclose(&yc, &yd, 1e-6);
+    }
+
+    #[test]
+    fn conv_same_padding_shapes() {
+        let s = Conv2dShape { h: 7, w: 7, cin: 1, k: 3, stride: 2, cout: 1 };
+        assert_eq!((s.out_h(), s.out_w()), (4, 4));
+        let x = vec![1.0f32; s.in_elems(1)];
+        let w = vec![1.0f32; s.weight_elems()];
+        let y = conv2d_forward(&x, &w, &[0.0], 1, &s);
+        assert_eq!(y.len(), 16);
+        // interior output pixels see the full 3x3 window of ones
+        assert_eq!(y[5], 9.0); // (oy=1, ox=1) -> centered at (2, 2)
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let pre = [-1.0f32, 0.0, 2.0];
+        assert_eq!(relu_forward(&pre), vec![0.0, 0.0, 2.0]);
+        assert_eq!(relu_backward(&pre, &[5.0, 5.0, 5.0]), vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn softmax_uniform_logits() {
+        let (loss, correct, d) = softmax_xent(&[0.0; 8], &[1, 3], 2, 4);
+        assert!((loss - (4f32).ln()).abs() < 1e-6);
+        assert!(correct <= 2.0); // argmax of uniform row is index 0
+        // gradient rows sum to zero
+        let s0: f32 = d[..4].iter().sum();
+        assert!(s0.abs() < 1e-6);
+    }
+
+    /// Central finite difference of a scalar-valued closure at params[i].
+    fn num_grad<F: FnMut(&[f32]) -> f32>(params: &[f32], i: usize, mut f: F) -> f32 {
+        let h = 1e-2f32;
+        let mut p = params.to_vec();
+        p[i] = params[i] + h;
+        let up = f(&p);
+        p[i] = params[i] - h;
+        let dn = f(&p);
+        (up - dn) / (2.0 * h)
+    }
+
+    fn check_grads(ana: &[f32], params: &[f32], f: impl FnMut(&[f32]) -> f32 + Copy) {
+        for i in 0..params.len() {
+            let num = num_grad(params, i, f);
+            let tol = 2e-3 + 2e-2 * num.abs();
+            assert!(
+                (ana[i] - num).abs() <= tol,
+                "grad[{i}]: analytic {} vs numeric {num}",
+                ana[i]
+            );
+        }
+    }
+
+    #[test]
+    fn dense_gradients_match_finite_differences() {
+        let mut rng = Rng::new(7);
+        let (batch, fin, fout) = (3usize, 4usize, 5usize);
+        let x: Vec<f32> = (0..batch * fin).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..fin * fout).map(|_| rng.normal() * 0.5).collect();
+        let b: Vec<f32> = (0..fout).map(|_| rng.normal() * 0.1).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(fout) as i32).collect();
+
+        let y = dense_forward(&x, &w, &b, batch, fin, fout);
+        let (_, _, dy) = softmax_xent(&y, &labels, batch, fout);
+        let (dx, dw, db) = dense_backward(&x, &w, &dy, batch, fin, fout);
+
+        let loss_of_w = |wp: &[f32]| {
+            let y = dense_forward(&x, wp, &b, batch, fin, fout);
+            softmax_xent(&y, &labels, batch, fout).0
+        };
+        check_grads(&dw, &w, &loss_of_w);
+
+        let loss_of_b = |bp: &[f32]| {
+            let y = dense_forward(&x, &w, bp, batch, fin, fout);
+            softmax_xent(&y, &labels, batch, fout).0
+        };
+        check_grads(&db, &b, &loss_of_b);
+
+        let loss_of_x = |xp: &[f32]| {
+            let y = dense_forward(xp, &w, &b, batch, fin, fout);
+            softmax_xent(&y, &labels, batch, fout).0
+        };
+        check_grads(&dx, &x, &loss_of_x);
+    }
+
+    #[test]
+    fn conv_gradients_match_finite_differences() {
+        let mut rng = Rng::new(11);
+        let batch = 2usize;
+        let s = Conv2dShape { h: 5, w: 4, cin: 2, k: 3, stride: 2, cout: 3 };
+        let classes = s.out_elems(1); // flatten conv output straight into xent
+        let x: Vec<f32> = (0..s.in_elems(batch)).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal() * 0.3).collect();
+        let b: Vec<f32> = (0..s.cout).map(|_| rng.normal() * 0.1).collect();
+        let labels: Vec<i32> = (0..batch).map(|_| rng.below(classes) as i32).collect();
+
+        let y = conv2d_forward(&x, &w, &b, batch, &s);
+        let (_, _, dy) = softmax_xent(&y, &labels, batch, classes);
+        let (dx, dw, db) = conv2d_backward(&x, &w, &dy, batch, &s);
+
+        let loss_of_w = |wp: &[f32]| {
+            let y = conv2d_forward(&x, wp, &b, batch, &s);
+            softmax_xent(&y, &labels, batch, classes).0
+        };
+        check_grads(&dw, &w, &loss_of_w);
+
+        let loss_of_b = |bp: &[f32]| {
+            let y = conv2d_forward(&x, &w, bp, batch, &s);
+            softmax_xent(&y, &labels, batch, classes).0
+        };
+        check_grads(&db, &b, &loss_of_b);
+
+        let loss_of_x = |xp: &[f32]| {
+            let y = conv2d_forward(xp, &w, &b, batch, &s);
+            softmax_xent(&y, &labels, batch, classes).0
+        };
+        check_grads(&dx, &x, &loss_of_x);
+    }
+}

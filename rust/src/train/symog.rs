@@ -1,0 +1,108 @@
+//! The SYMOG soft-quantization loss pieces (Eqs. 2–4) on host tensors.
+//!
+//! The regularizer for one layer is `R_l = (1/M) ||w - Q_N(w; delta_l)||^2`
+//! (Eq. 3's per-layer term) and its gradient — with the quantizer treated as
+//! piecewise-constant (straight-through zero derivative, Eq. 4) — is
+//! `dR/dw = (2/M) (w - Q_N(w; delta_l))`. Both match
+//! `python/compile/kernels/ref.py` bit-for-bit in structure.
+
+use crate::fixedpoint::quantize;
+
+/// Per-layer regularizer value R_l (Eq. 3 term, mean squared mode distance).
+pub fn regularizer(w: &[f32], delta: f32, n_bits: u32) -> f64 {
+    crate::fixedpoint::quant_error(w, delta, n_bits) / w.len().max(1) as f64
+}
+
+/// dR/dw = (2/M)(w - Q_N(w; delta)) into a fresh vector (Eq. 4).
+pub fn reg_grad(w: &[f32], delta: f32, n_bits: u32) -> Vec<f32> {
+    let inv_m2 = 2.0 / w.len().max(1) as f32;
+    w.iter().map(|&x| inv_m2 * (x - quantize(x, delta, n_bits))).collect()
+}
+
+/// Fraction of weights within `frac * delta` of their nearest quantization
+/// mode — the mode-concentration measure behind Figure 3's narrative (mass
+/// collapsing onto the mixture modes as lambda grows).
+pub fn mode_mass(w: &[f32], delta: f32, n_bits: u32, frac: f32) -> f32 {
+    if w.is_empty() {
+        return 0.0;
+    }
+    let tol = frac * delta;
+    let near = w.iter().filter(|&&x| (x - quantize(x, delta, n_bits)).abs() <= tol).count();
+    near as f32 / w.len() as f32
+}
+
+/// Element-count-weighted mean `mode_mass` over (weights, delta) layers.
+pub fn mean_mode_mass(layers: &[(Vec<f32>, f32)], n_bits: u32, frac: f32) -> f32 {
+    let total: usize = layers.iter().map(|(w, _)| w.len()).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut acc = 0f64;
+    for (w, delta) in layers {
+        acc += mode_mass(w, *delta, n_bits, frac) as f64 * w.len() as f64;
+    }
+    (acc / total as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn regularizer_zero_on_codebook() {
+        let w = [-0.5f32, 0.0, 0.5, 0.5, -0.5];
+        assert_eq!(regularizer(&w, 0.5, 2), 0.0);
+        assert_eq!(mode_mass(&w, 0.5, 2, 0.0), 1.0);
+    }
+
+    #[test]
+    fn reg_grad_points_at_nearest_mode() {
+        // w = 0.6 with delta 0.5 -> nearest mode 0.5, gradient positive
+        let g = reg_grad(&[0.6, 0.4, -0.6], 0.5, 2);
+        let m2 = 2.0 / 3.0;
+        crate::testing::assert_allclose(
+            &g,
+            &[m2 * 0.1, m2 * -0.1, m2 * -0.1],
+            1e-6,
+        );
+    }
+
+    #[test]
+    fn reg_grad_is_odd() {
+        let mut rng = Rng::new(5);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let neg: Vec<f32> = w.iter().map(|x| -x).collect();
+        let g = reg_grad(&w, 0.25, 2);
+        let gn = reg_grad(&neg, 0.25, 2);
+        for (a, b) in g.iter().zip(&gn) {
+            assert!((a + b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mode_mass_bounds_and_growth() {
+        let mut rng = Rng::new(1);
+        let spread: Vec<f32> = (0..2000).map(|_| rng.normal() * 0.3).collect();
+        let tight: Vec<f32> = spread
+            .iter()
+            .map(|&x| quantize(x, 0.25, 2) + 0.01 * rng.normal())
+            .collect();
+        let m_spread = mode_mass(&spread, 0.25, 2, 0.25);
+        let m_tight = mode_mass(&tight, 0.25, 2, 0.25);
+        assert!((0.0..=1.0).contains(&m_spread));
+        assert!(m_tight > 0.95, "tight mass {m_tight}");
+        assert!(m_tight > m_spread);
+    }
+
+    #[test]
+    fn mean_mode_mass_weights_by_numel() {
+        // layer A: all on modes (mass 1), 3 elems; layer B: all off (mass 0), 1 elem
+        let layers = vec![
+            (vec![0.5f32, -0.5, 0.0], 0.5f32),
+            (vec![0.26f32], 0.5f32),
+        ];
+        let m = mean_mode_mass(&layers, 2, 0.1);
+        assert!((m - 0.75).abs() < 1e-6, "mass {m}");
+    }
+}

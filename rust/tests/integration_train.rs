@@ -29,8 +29,8 @@ fn train_smoke_end_to_end() {
     let mut trainer = Trainer::from_init(&art).unwrap();
 
     // deltas were resolved from init weights: powers of two, positive
-    assert_eq!(trainer.deltas.len(), art.manifest.deltas_len());
-    for &d in &trainer.deltas {
+    assert_eq!(trainer.deltas().len(), art.manifest.deltas_len());
+    for &d in trainer.deltas() {
         assert!(d > 0.0);
         let f = d.log2();
         assert!((f - f.round()).abs() < 1e-6, "delta {d} not a power of two");
@@ -93,7 +93,7 @@ fn checkpoint_roundtrip_through_trainer() {
 
     // resume without re-solving deltas: state must match exactly
     let trainer2 = Trainer::from_checkpoint(&art, &ck, false).unwrap();
-    assert_eq!(trainer2.deltas, trainer.deltas);
+    assert_eq!(trainer2.deltas(), trainer.deltas());
     assert_eq!(trainer2.epoch, 1);
     let (l1, a1) = trainer.evaluate(&test, true).unwrap();
     let (l2, a2) = trainer2.evaluate(&test, true).unwrap();

@@ -1,0 +1,136 @@
+//! End-to-end SYMOG training smoke on the pure-Rust backend — no XLA
+//! artifact anywhere on disk (this is the CI `train-smoke` gate).
+//!
+//! A tiny MLP trains on synth-mnist through the full Algorithm 1 loop
+//! (paper schedules: linear lr ramp, exponential lambda) and must show the
+//! paper's three signatures:
+//!   (a) the task is learned (train loss falls, mostly monotonically),
+//!   (b) weight mass concentrates onto the quantization modes as lambda
+//!       grows (Fig. 3's mixture collapse),
+//!   (c) hard-quantized eval agrees with soft eval at the end (Table 1's
+//!       "quantization for free" claim).
+
+use symog::coordinator::{TrainBackend, Trainer, TrainOptions};
+use symog::data::Preset;
+use symog::train::{mean_mode_mass, NativeBackend, NativeHyper, NativeModel};
+
+const EPOCHS: u32 = 8;
+
+fn native_trainer(model_seed: u64) -> Trainer<NativeBackend> {
+    let model = NativeModel::mlp([28, 28, 1], &[32], 10, model_seed);
+    Trainer::new(NativeBackend::new(model, NativeHyper::default(), 32))
+}
+
+#[test]
+fn native_symog_run_learns_and_quantizes() {
+    let (train, test) = Preset::SynthMnist.load(512, 128, 42);
+    let mut trainer = native_trainer(7);
+    let n_bits = trainer.backend.n_bits();
+
+    // deltas solved at init (Alg. 1 l.2-5): positive powers of two
+    assert_eq!(trainer.deltas().len(), trainer.backend.n_quant());
+    for &d in trainer.deltas() {
+        assert!(d > 0.0);
+        let f = d.log2();
+        assert!((f - f.round()).abs() < 1e-6, "delta {d} not a power of two");
+    }
+
+    let init_mass = mean_mode_mass(&trainer.quant_layers_host().unwrap(), n_bits, 0.25);
+
+    let mut opts = TrainOptions::paper(EPOCHS);
+    opts.seed = 7;
+    opts.track_modes = true;
+    opts.hist_epochs = vec![0, EPOCHS];
+    opts.hist_layers = vec![0];
+    let outcome = trainer.train(&train, &test, &opts).unwrap();
+    let logs = &outcome.log.epochs;
+    assert_eq!(logs.len(), EPOCHS as usize);
+
+    // (a) loss decreases, monotonically-ish: large net drop, few upticks
+    let (first, last) = (logs[0].train_loss, logs.last().unwrap().train_loss);
+    assert!(last < 0.5 * first, "train loss barely moved: {first} -> {last}");
+    let upticks = logs
+        .windows(2)
+        .filter(|w| w[1].train_loss > w[0].train_loss)
+        .count();
+    assert!(upticks <= 2, "{upticks} loss upticks out of {}", logs.len() - 1);
+
+    // (b) mass within delta/4 of the modes grows as lambda ramps (Fig. 3)
+    let final_mass = mean_mode_mass(&trainer.quant_layers_host().unwrap(), n_bits, 0.25);
+    assert!(
+        final_mass > init_mass + 0.2 && final_mass > 0.8,
+        "mode mass did not concentrate: {init_mass:.3} -> {final_mass:.3}"
+    );
+
+    // (c) hard-quantized eval tracks soft eval, both beating chance (0.1)
+    let (_, soft_acc) = trainer.evaluate(&test, false).unwrap();
+    let (_, hard_acc) = trainer.evaluate(&test, true).unwrap();
+    assert!(soft_acc > 0.5, "soft accuracy {soft_acc}");
+    assert!(hard_acc > 0.5, "hard-quantized accuracy {hard_acc}");
+    assert!(
+        (soft_acc - hard_acc).abs() <= 0.1,
+        "soft {soft_acc} vs hard {hard_acc} disagree"
+    );
+
+    // weights respect the clipping domain (section 3.4)
+    for (w, d) in &trainer.quant_layers_host().unwrap() {
+        let bound = symog::fixedpoint::clip_bound(n_bits, *d);
+        for &x in w {
+            assert!(x.abs() <= bound + 1e-5, "weight {x} outside ±{bound}");
+        }
+    }
+
+    // probes worked against host weights: baseline + one record per epoch
+    let tracker = outcome.tracker.unwrap();
+    assert_eq!(tracker.switch_rates.len(), EPOCHS as usize + 1);
+    assert_eq!(outcome.histograms[0].1.hists.len(), 2); // epochs 0 and E
+    // late epochs switch fewer modes than early ones (Fig. 4's trend)
+    let early = tracker.switch_rates[1].iter().sum::<f32>();
+    let late = tracker.switch_rates[EPOCHS as usize].iter().sum::<f32>();
+    assert!(late <= early + 1e-6, "switch rate grew: {early} -> {late}");
+}
+
+#[test]
+fn native_checkpoint_roundtrip_resumes_exactly() {
+    let (train, test) = Preset::SynthMnist.load(256, 64, 3);
+    let mut trainer = native_trainer(11);
+    let mut opts = TrainOptions::paper(2);
+    opts.seed = 11;
+    opts.steps_per_epoch = Some(4);
+    trainer.train(&train, &test, &opts).unwrap();
+
+    let tmp = std::env::temp_dir().join("symog_native_roundtrip.ckpt");
+    trainer.save(&tmp).unwrap();
+    let ck = symog::coordinator::Checkpoint::read(&tmp).unwrap();
+    assert_eq!(ck.meta_i64("epoch"), Some(2));
+    assert_eq!(ck.meta_str("model"), Some("native-mlp"));
+
+    let mut restored = native_trainer(999); // different init, then load
+    restored.backend.load_checkpoint(&ck, false).unwrap();
+    restored.epoch = ck.meta_i64("epoch").unwrap_or(0) as u32;
+    assert_eq!(restored.deltas(), trainer.deltas());
+    let (l1, a1) = trainer.evaluate(&test, true).unwrap();
+    let (l2, a2) = restored.evaluate(&test, true).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn native_backend_without_regularizer_still_learns() {
+    // lambda = Off degenerates to clipped Nesterov SGD and must still learn
+    let (train, test) = Preset::SynthMnist.load(256, 64, 5);
+    let mut trainer = native_trainer(13);
+    let mut opts = TrainOptions::paper(3);
+    opts.seed = 13;
+    opts.lambda = symog::coordinator::LambdaSchedule::Off;
+    let outcome = trainer.train(&train, &test, &opts).unwrap();
+    let logs = &outcome.log.epochs;
+    assert!(
+        logs.last().unwrap().train_loss < logs[0].train_loss,
+        "loss {} -> {}",
+        logs[0].train_loss,
+        logs.last().unwrap().train_loss
+    );
+    assert!(logs.last().unwrap().test_acc > 0.3);
+}
