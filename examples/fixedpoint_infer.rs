@@ -33,11 +33,20 @@ fn main() -> Result<()> {
     let last = result.outcome.log.last().unwrap();
     println!("evalq (XLA float simulation of Q(w)): acc {:.4}", last.testq_acc);
 
-    println!("\n=== pure integer inference ===");
+    println!("\n=== pure integer inference (compile-then-execute) ===");
     let model = IntModel::build(&artifact.manifest, &result.final_ckpt)?;
     println!(
         "quantized params: {}   all-ternary: {}   (ternary ⇒ conv/dense have NO multiplies)",
         model.quant_params, model.all_ternary
+    );
+    // the same plan forward()/accuracy() use internally, shown explicitly:
+    // shapes resolved, epilogues fused, arena preallocated — once
+    let plan = model.shared_plan(64)?;
+    println!(
+        "execution plan: {} fused steps, {} KiB activation arena, {} workers",
+        plan.num_steps(),
+        plan.arena_bytes() / 1024,
+        plan.workers()
     );
     let t0 = std::time::Instant::now();
     let acc = model.accuracy(&test.images, &test.labels, 64)?;
@@ -51,6 +60,8 @@ fn main() -> Result<()> {
     );
 
     println!("\n=== cost model (45nm energy, Sze et al. 2017 / Horowitz) ===");
+    // analytic since the plan refactor: op counts come from shapes x
+    // sparsity recorded at quantize time — no dummy forward runs here
     let report = model.cost_report(1)?;
     println!("{}", report.render());
     println!(

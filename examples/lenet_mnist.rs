@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 use symog::config::Experiment;
 use symog::data::Preset;
 use symog::driver::{self, artifacts_root};
+use symog::inference::IntModel;
 use symog::report::{render_table1, Table1Row};
 use symog::runtime::Runtime;
 
@@ -89,6 +90,24 @@ fn main() -> Result<()> {
         },
     ];
     println!("\n{}", render_table1(&rows));
+
+    // deploy check: the trained 2-bit model through the planned integer
+    // engine (compiled ExecPlan, arena-backed, analytic cost report)
+    let art = driver::load_artifact(&rt, &symog_exp, &root)?;
+    let model = IntModel::build(&art.manifest, &symog_run.final_ckpt)?;
+    let plan = model.shared_plan(64)?;
+    let t0 = std::time::Instant::now();
+    let acc_int = model.accuracy(&test.images, &test.labels, 64)?;
+    println!(
+        "planned integer inference: acc {:.4} ({} imgs in {:.2}s, {} fused steps, \
+         {} KiB arena, energy ratio {:.1}x analytic)",
+        acc_int,
+        test.len(),
+        t0.elapsed().as_secs_f64(),
+        plan.num_steps(),
+        plan.arena_bytes() / 1024,
+        model.cost_report(1)?.energy_ratio()
+    );
 
     std::fs::create_dir_all("results").ok();
     symog_run.outcome.log.save_csv(Path::new("results/lenet_mnist_symog.csv"))?;

@@ -10,6 +10,7 @@ use anyhow::Result;
 use symog::config::Experiment;
 use symog::data::Preset;
 use symog::driver::{self, artifacts_root};
+use symog::inference::IntModel;
 use symog::report::{render_table1, Table1Row};
 use symog::runtime::Runtime;
 
@@ -52,7 +53,26 @@ fn main() -> Result<()> {
         let art = driver::load_artifact(&rt, &exp, &root)?;
         let result = driver::run_experiment(&art, &exp, &train, &test)?;
         let err = if bits == "32" { result.best_f_error } else { result.best_q_error };
-        println!("{label}: best error {:.2}%\n", err * 100.0);
+        println!("{label}: best error {:.2}%", err * 100.0);
+        if label == "SYMOG" {
+            // serve the hard-quantized VGG7 through the planned integer
+            // engine: one compiled ExecPlan, reused across every batch
+            let model = IntModel::build(&art.manifest, &result.final_ckpt)?;
+            let plan = model.shared_plan(64)?;
+            let t0 = std::time::Instant::now();
+            let acc = model.accuracy(&test.images, &test.labels, 64)?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "planned integer inference: acc {:.4}, {:.0} imgs/s \
+                 ({} fused steps, {} KiB arena); energy ratio {:.1}x (analytic)",
+                acc,
+                test.len() as f64 / dt.max(1e-9),
+                plan.num_steps(),
+                plan.arena_bytes() / 1024,
+                model.cost_report(1)?.energy_ratio()
+            );
+        }
+        println!();
         rows.push(Table1Row {
             dataset: "synth-cifar10".into(),
             method: label.into(),

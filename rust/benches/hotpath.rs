@@ -5,8 +5,10 @@
 //!
 //! Sections:
 //!   1. integer conv/dense: naive loops vs im2col + blocked GEMM on
-//!      VGG7-shaped layers (bit-identity asserted; emits BENCH_hotpath.json
-//!      at the repo root so the perf trajectory is tracked PR over PR).
+//!      VGG7-shaped layers, plus interpret-vs-planned whole-model forwards
+//!      (`ExecPlan` arena + fused epilogues vs the per-call GEMM walk).
+//!      Bit-identity asserted; emits BENCH_hotpath.json at the repo root
+//!      so the perf trajectory is tracked PR over PR.
 //!   2. train-step latency breakdown (batch assembly / literal upload /
 //!      execute) for the lenet5 artifact — the L3 coordinator target is
 //!      <10% of step time outside `execute`.
@@ -22,9 +24,10 @@ use symog::data::{AugmentConfig, BatchIter, Preset};
 use symog::driver::artifacts_root;
 use symog::fixedpoint;
 use symog::inference::{
-    conv2d, conv2d_naive, dense, dense_naive, IntModel, OpCounts, QTensor, QWeight,
+    conv2d, conv2d_naive, dense, dense_naive, Backend, IntModel, OpCounts, QTensor, QWeight,
 };
 use symog::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Runtime};
+use symog::testing::models;
 use symog::util::json::Json;
 use symog::util::rng::Rng;
 
@@ -226,6 +229,54 @@ fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
     cases_json.push(Json::Obj(o));
     report.push(naive);
     report.push(gemm);
+
+    // --- interpret vs planned: whole-model forward, VGG7-shaped stack ----
+    // Same GEMM kernels on both sides; the delta is everything the plan
+    // removed: per-op allocation, per-call im2col scratch, serial epilogue
+    // passes (requantize/bias/BN/ReLU now fused + parallel), per-forward
+    // retention bookkeeping.
+    println!("--- interpret vs planned (VGG7-shaped model forward) ---");
+    for (name, n_bits) in [("planned vgg7 b32 w2", 2u32), ("planned vgg7 b32 w8", 8)] {
+        let mut rng = Rng::new(0x71A);
+        let (man, ck) = models::vgg7ish(&mut rng, n_bits, 32);
+        let interp = IntModel::build(&man, &ck)?.with_backend(Backend::Gemm);
+        let planned = IntModel::build(&man, &ck)?;
+        let batch = 32usize;
+        let elems: usize = man.input_shape.iter().product();
+        let images: Vec<f32> = (0..batch * elems).map(|_| rng.normal()).collect();
+
+        // correctness gate before timing anything
+        let (logits_i, counts_i) = interp.forward(&images, batch)?;
+        let (logits_p, counts_p) = planned.forward(&images, batch)?;
+        assert_eq!(logits_p, logits_i, "{name}: planned logits differ from interpreted");
+        assert_eq!(counts_p, counts_i, "{name}: op counts differ");
+
+        let s_i = bench(&format!("interp {name}"), 1, 6, || {
+            std::hint::black_box(interp.forward(&images, batch).unwrap());
+        });
+        let s_p = bench(&format!("plan   {name}"), 2, 10, || {
+            std::hint::black_box(planned.forward(&images, batch).unwrap());
+        });
+        let speedup = s_i.median_s / s_p.median_s;
+        println!(
+            "{}\n{}\n  -> {:.2}x planned speedup (target >= 1.2x)",
+            s_i.row(),
+            s_p.row(),
+            speedup,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o.insert("kind".to_string(), Json::Str("planned_forward".to_string()));
+        o.insert("batch".to_string(), json_num(batch as f64));
+        o.insert("n_bits".to_string(), json_num(n_bits as f64));
+        o.insert("interp_s".to_string(), json_num(s_i.median_s));
+        o.insert("planned_s".to_string(), json_num(s_p.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        o.insert("bit_identical".to_string(), Json::Bool(true));
+        cases_json.push(Json::Obj(o));
+        report.push(s_i);
+        report.push(s_p);
+    }
 
     let min = conv_speedups.iter().copied().fold(f64::INFINITY, f64::min);
     let geomean =

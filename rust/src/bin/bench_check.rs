@@ -1,11 +1,15 @@
-//! CI regression gate for the integer GEMM hot path.
+//! CI regression gate for the integer inference hot path.
 //!
 //! Compares the `BENCH_hotpath.json` that `cargo bench --bench hotpath`
 //! just wrote against the committed `BENCH_baseline.json` and exits
-//! non-zero if any kernel's naive-vs-GEMM *speedup* regressed more than
-//! the tolerance (default 30%). Speedups are compared — not wall-clock
-//! seconds — so the gate is machine-speed-invariant: both numbers of a
-//! ratio come from the same host.
+//! non-zero if any case's *speedup ratio* regressed more than the
+//! tolerance (default 30%). Two ratio families are gated side by side:
+//! naive-vs-GEMM kernel speedups and interpret-vs-planned whole-model
+//! forwards (`kind: "planned_forward"` — the `ExecPlan` arena + fused
+//! epilogue path must stay ahead of the per-call GEMM walk). Ratios are
+//! compared — not wall-clock seconds — so the gate is
+//! machine-speed-invariant: both numbers of a ratio come from the same
+//! host.
 //!
 //!     bench_check [--current PATH] [--baseline PATH] [--tolerance 0.30]
 

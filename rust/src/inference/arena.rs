@@ -1,0 +1,166 @@
+//! Arena buffers for planned execution.
+//!
+//! An `ExecPlan` (see `plan.rs`) resolves every intermediate shape once, so
+//! all activation storage for a whole forward pass can be preallocated:
+//!
+//! * two **ping-pong slots** that transient layer outputs alternate
+//!   between (each sized to the largest tensor that ever lands in it);
+//! * one **retained slot** per concat source, so skip/concat tensors are
+//!   written once and read in place — no per-forward clone;
+//! * flat **side scratch**: per-worker im2col patch panels, per-worker
+//!   amax reduction cells, i64 pooling accumulators, and the per-layer
+//!   bias/BN constant encodings (which depend on the runtime exponent).
+//!
+//! Everything lives in one `Scratch` value. A `Scratch` is cheap relative
+//! to the shared `ExecPlan` (it is just buffers — no weights), is built
+//! for exactly one plan (checked via `plan_id`), and after the first
+//! `ExecPlan::run` never grows again: steady-state forwards perform zero
+//! allocation inside the arena (asserted by `Scratch::fingerprint` in the
+//! allocation-discipline test).
+
+/// Index of one preallocated activation buffer in the arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Slot(pub(crate) usize);
+
+/// Per-thread mutable state for `ExecPlan::run`: the activation arena plus
+/// all side scratch. One `Scratch` per concurrently-running forward; the
+/// plan itself stays shared and immutable.
+pub struct Scratch {
+    /// activation buffers, indexed by `Slot`
+    pub(crate) bufs: Vec<Vec<i32>>,
+    /// current binary-point position of each slot's contents
+    pub(crate) fracs: Vec<i32>,
+    /// im2col patch panels, `workers` contiguous regions of `patch_len`
+    pub(crate) patches: Vec<i32>,
+    pub(crate) patch_len: usize,
+    /// per-worker |mantissa| maxima for requantization reductions
+    pub(crate) amax: Vec<i64>,
+    /// i64 accumulators for average pooling
+    pub(crate) wide: Vec<i64>,
+    /// bias mantissas encoded at the runtime exponent (len = max cout)
+    pub(crate) bias_enc: Vec<i64>,
+    /// folded-BN offsets aligned to the runtime product exponent
+    pub(crate) bn_enc: Vec<i64>,
+    /// the plan this scratch was sized for
+    pub(crate) plan_id: u64,
+}
+
+impl Scratch {
+    /// Allocate a scratch sized by the plan's capacity table. All buffers
+    /// get their final length here; `run` only ever writes into them.
+    pub(crate) fn sized(
+        plan_id: u64,
+        slot_caps: &[usize],
+        workers: usize,
+        patch_len: usize,
+        wide_len: usize,
+        chan_len: usize,
+    ) -> Scratch {
+        Scratch {
+            bufs: slot_caps.iter().map(|&c| vec![0i32; c]).collect(),
+            fracs: vec![0; slot_caps.len()],
+            patches: vec![0i32; workers * patch_len],
+            patch_len,
+            amax: vec![0i64; workers],
+            wide: vec![0i64; wide_len],
+            bias_enc: vec![0i64; chan_len],
+            bn_enc: vec![0i64; chan_len],
+            plan_id,
+        }
+    }
+
+    /// (pointer, capacity) of every arena-owned allocation — stable across
+    /// steady-state runs. The allocation-discipline test snapshots this
+    /// after the first forward and asserts it never changes.
+    pub fn fingerprint(&self) -> Vec<(usize, usize)> {
+        let mut fp: Vec<(usize, usize)> = self
+            .bufs
+            .iter()
+            .map(|b| (b.as_ptr() as usize, b.capacity()))
+            .collect();
+        fp.push((self.fracs.as_ptr() as usize, self.fracs.capacity()));
+        fp.push((self.patches.as_ptr() as usize, self.patches.capacity()));
+        fp.push((self.amax.as_ptr() as usize, self.amax.capacity()));
+        fp.push((self.wide.as_ptr() as usize, self.wide.capacity()));
+        fp.push((self.bias_enc.as_ptr() as usize, self.bias_enc.capacity()));
+        fp.push((self.bn_enc.as_ptr() as usize, self.bn_enc.capacity()));
+        fp
+    }
+
+    /// Total bytes held by the activation slots (reported by examples/docs).
+    pub fn arena_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<i32>()).sum()
+    }
+}
+
+/// Two disjoint `&mut` borrows out of one slice (stable-Rust split_at_mut
+/// dance; `slice::get_disjoint_mut` postdates our MSRV).
+pub(crate) fn two_mut<T>(v: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert_ne!(i, j, "arena slots must be distinct");
+    if i < j {
+        let (lo, hi) = v.split_at_mut(j);
+        (&mut lo[i], &mut hi[0])
+    } else {
+        let (lo, hi) = v.split_at_mut(i);
+        (&mut hi[0], &mut lo[j])
+    }
+}
+
+/// Three disjoint `&mut` borrows out of one slice.
+pub(crate) fn three_mut<T>(v: &mut [T], i: usize, j: usize, k: usize) -> (&mut T, &mut T, &mut T) {
+    assert!(i != j && j != k && i != k, "arena slots must be distinct");
+    // sort the indices, split twice, then hand the parts back in call order
+    let mut order = [(i, 0usize), (j, 1), (k, 2)];
+    order.sort_unstable();
+    let (lo, rest) = v.split_at_mut(order[1].0);
+    let (mid, hi) = rest.split_at_mut(order[2].0 - order[1].0);
+    let parts = [&mut lo[order[0].0], &mut mid[0], &mut hi[0]];
+    let mut out: [Option<&mut T>; 3] = [None, None, None];
+    for (part, (_, rank)) in parts.into_iter().zip(order) {
+        out[rank] = Some(part);
+    }
+    let [a, b, c] = out;
+    (a.unwrap(), b.unwrap(), c.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_mut_disjoint_both_orders() {
+        let mut v = vec![10, 20, 30];
+        let (a, b) = two_mut(&mut v, 0, 2);
+        assert_eq!((*a, *b), (10, 30));
+        let (a, b) = two_mut(&mut v, 2, 0);
+        assert_eq!((*a, *b), (30, 10));
+    }
+
+    #[test]
+    fn three_mut_all_permutations() {
+        let mut v = vec![1, 2, 3, 4];
+        for (i, j, k) in [(0, 1, 2), (2, 0, 3), (3, 1, 0), (1, 3, 2)] {
+            let (a, b, c) = three_mut(&mut v, i, j, k);
+            assert_eq!((*a, *b, *c), (v_at(i), v_at(j), v_at(k)));
+        }
+        fn v_at(i: usize) -> i32 {
+            [1, 2, 3, 4][i]
+        }
+    }
+
+    #[test]
+    fn fingerprint_stable_without_growth() {
+        let mut s = Scratch::sized(1, &[16, 8], 2, 4, 4, 4);
+        let fp = s.fingerprint();
+        s.bufs[0][..16].fill(7);
+        s.patches.fill(3);
+        assert_eq!(fp, s.fingerprint());
+    }
+
+    #[test]
+    #[should_panic]
+    fn two_mut_rejects_aliasing() {
+        let mut v = vec![1, 2];
+        let _ = two_mut(&mut v, 1, 1);
+    }
+}

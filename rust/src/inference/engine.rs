@@ -1,20 +1,36 @@
 //! Graph executor: rebuild the network from the artifact manifest and run
 //! it with integer arithmetic only.
+//!
+//! Since the compile-then-execute refactor the default path is *planned*:
+//! `forward` lazily compiles the layer program into an [`ExecPlan`]
+//! (preallocated arena, fused epilogues, plan-time concat retention) and
+//! reuses it — plus a pooled `Scratch` — across calls. The interpreted
+//! walk below survives as the bit-exact oracle (`Backend::Naive`) and the
+//! per-call GEMM comparison point (`Backend::Gemm`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Checkpoint;
 use crate::runtime::Manifest;
 
+use super::arena::Scratch;
 use super::ops::{self, QAffine, QWeight};
+use super::plan::ExecPlan;
 use super::{CostModel, CostReport, OpCounts};
 
 pub use super::ops::QTensor;
 
 const BN_EPS: f32 = 1e-5;
 
+/// Scratches kept warm per model; beyond this, extras are dropped (they
+/// only pile up when more threads than this share one `IntModel`).
+const MAX_POOLED_SCRATCH: usize = 8;
+
 /// One compiled layer of the integer network.
-enum IntLayer {
+pub(crate) enum IntLayer {
     Conv { w: QWeight, bias: Option<Vec<f32>>, stride: usize, pad_same: bool },
     Dense { w: QWeight, bias: Option<Vec<f32>> },
     Bn(QAffine),
@@ -26,22 +42,34 @@ enum IntLayer {
     Concat { from: usize },
 }
 
-/// Which conv/dense implementation the engine drives.
+/// Which execution strategy `forward` drives.
 ///
-/// `Gemm` (the default) is the im2col + blocked-GEMM hot path, parallel
-/// over the batch; `Naive` is the direct-loop reference. Both are exact
-/// integer arithmetic and produce bit-identical activations — `Naive`
-/// exists for cross-checking and benchmarking, not as a fallback.
+/// `Planned` (the default) compiles the layer program once into an
+/// [`ExecPlan`] — arena buffers, fused integer epilogues — and executes
+/// that. `Gemm` interprets the layer list per call on the im2col + blocked
+/// GEMM kernels; `Naive` interprets on the direct-loop reference kernels.
+/// All three are exact integer arithmetic and produce bit-identical
+/// activations and identical `OpCounts` — the interpreted modes exist for
+/// cross-checking and benchmarking, not as fallbacks.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Backend {
     #[default]
+    Planned,
     Gemm,
     Naive,
 }
 
+/// A compiled plan plus its pool of reusable per-call scratches.
+struct PlanCache {
+    plan: Arc<ExecPlan>,
+    scratch: Vec<Scratch>,
+}
+
 /// The integer model: quantized weights + the layer program.
 pub struct IntModel {
-    layers: Vec<IntLayer>,
+    layers: Arc<Vec<IntLayer>>,
+    /// concat-source layer indices, resolved once at build time
+    retained: BTreeSet<usize>,
     pub n_bits: u32,
     pub input_shape: [usize; 3],
     pub num_classes: usize,
@@ -51,8 +79,10 @@ pub struct IntModel {
     pub aux_params: u64,
     /// whether every quantized layer is ternary (pure add/sub inference)
     pub all_ternary: bool,
-    /// conv/dense implementation (GEMM hot path by default)
+    /// execution strategy (planned by default)
     pub backend: Backend,
+    /// lazily-built plan + scratch pool for the planned backend
+    cache: Mutex<Option<PlanCache>>,
 }
 
 impl IntModel {
@@ -151,8 +181,18 @@ impl IntModel {
                 other => bail!("integer engine: unsupported layer type {other:?}"),
             }
         }
+        // concat retention is a property of the (immutable) program — decide
+        // it once here, not per forward
+        let retained: BTreeSet<usize> = layers
+            .iter()
+            .filter_map(|l| match l {
+                IntLayer::Concat { from } => Some(*from),
+                _ => None,
+            })
+            .collect();
         Ok(IntModel {
-            layers,
+            layers: Arc::new(layers),
+            retained,
             n_bits: man.n_bits,
             input_shape: man.input_shape,
             num_classes: man.num_classes,
@@ -160,73 +200,180 @@ impl IntModel {
             aux_params,
             all_ternary,
             backend: Backend::default(),
+            cache: Mutex::new(None),
         })
     }
 
-    /// Builder-style backend override (used by the naive-vs-GEMM checks).
+    /// Builder-style backend override (used by the planned/GEMM/naive
+    /// cross-checks).
     pub fn with_backend(mut self, backend: Backend) -> IntModel {
         self.backend = backend;
         self
     }
 
+    /// Compile the layer program for batches up to `max_batch`. The plan is
+    /// immutable and `Sync`: share it behind an `Arc` and give each worker
+    /// thread its own [`ExecPlan::scratch`] — that pairing is the serving
+    /// seam. Returns a fresh, unshared plan (e.g. to retune
+    /// [`ExecPlan::with_workers`]); use [`IntModel::shared_plan`] to get
+    /// the cached instance `forward` itself runs on.
+    pub fn plan(&self, max_batch: usize) -> Result<ExecPlan> {
+        ExecPlan::build(
+            Arc::clone(&self.layers),
+            &self.retained,
+            self.input_shape,
+            max_batch,
+        )
+    }
+
+    /// The cache-backed shared plan — the exact instance `forward`/
+    /// `predict`/`accuracy` execute on (compiled at most once per
+    /// `max_batch` high-water mark).
+    pub fn shared_plan(&self, max_batch: usize) -> Result<Arc<ExecPlan>> {
+        self.plan_for(max_batch)
+    }
+
+    /// The cached shared plan, (re)built if the requested batch outgrows it.
+    fn plan_for(&self, batch: usize) -> Result<Arc<ExecPlan>> {
+        let mut guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(c) = guard.as_ref() {
+            if c.plan.max_batch() >= batch {
+                return Ok(Arc::clone(&c.plan));
+            }
+        }
+        let plan = Arc::new(self.plan(batch)?);
+        *guard = Some(PlanCache { plan: Arc::clone(&plan), scratch: Vec::new() });
+        Ok(plan)
+    }
+
+    fn take_scratch(&self, plan: &Arc<ExecPlan>) -> Option<Scratch> {
+        let mut guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_mut() {
+            Some(c) if Arc::ptr_eq(&c.plan, plan) => c.scratch.pop(),
+            _ => None,
+        }
+    }
+
+    fn put_scratch(&self, plan: &Arc<ExecPlan>, scratch: Scratch) {
+        let mut guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(c) = guard.as_mut() {
+            if Arc::ptr_eq(&c.plan, plan) && c.scratch.len() < MAX_POOLED_SCRATCH {
+                c.scratch.push(scratch);
+            }
+        }
+    }
+
     /// Forward pass on a float batch (encoded to 8-bit fixed point at the
-    /// input). Returns (logits, op counts).
+    /// input). Returns (logits, op counts). Routes through the lazily-built
+    /// plan unless an interpreted backend was selected.
     pub fn forward(&self, images: &[f32], batch: usize) -> Result<(Vec<f32>, OpCounts)> {
+        match self.backend {
+            Backend::Planned => self.forward_planned(images, batch),
+            Backend::Gemm | Backend::Naive => self.forward_interpreted(images, batch),
+        }
+    }
+
+    fn forward_planned(&self, images: &[f32], batch: usize) -> Result<(Vec<f32>, OpCounts)> {
+        let plan = self.plan_for(batch)?;
+        let mut scratch = self
+            .take_scratch(&plan)
+            .unwrap_or_else(|| plan.scratch());
+        let logits = plan.run(images, batch, &mut scratch)?;
+        self.put_scratch(&plan, scratch);
+        Ok((logits, plan.op_counts(batch)))
+    }
+
+    /// The interpreted walk: per-call allocation, one op at a time. Kept as
+    /// the oracle the planned executor is raced against (`Backend::Naive`)
+    /// and as the per-call GEMM baseline (`Backend::Gemm`).
+    fn forward_interpreted(&self, images: &[f32], batch: usize) -> Result<(Vec<f32>, OpCounts)> {
         let [h, w, c] = self.input_shape;
         anyhow::ensure!(images.len() == batch * h * w * c, "bad input size");
-        let mut x = QTensor::from_f32(images, [batch, h, w, c], 8);
+        let naive = self.backend == Backend::Naive;
         let mut counts = OpCounts::default();
-        let mut acts: Vec<Option<QTensor>> = Vec::with_capacity(self.layers.len());
-        let needed: std::collections::BTreeSet<usize> = self
-            .layers
-            .iter()
-            .filter_map(|l| match l {
-                IntLayer::Concat { from } => Some(*from),
-                _ => None,
-            })
-            .collect();
+        let mut x = QTensor::from_f32(images, [batch, h, w, c], 8);
+        // Retained concat sources are *moved* into `stored` (no clone);
+        // while the stream is parked there, out-of-place ops read it in
+        // place and only an in-place op has to copy it back out.
+        let mut stored: BTreeMap<usize, QTensor> = BTreeMap::new();
+        let mut parked: Option<usize> = None;
         for (li, layer) in self.layers.iter().enumerate() {
             match layer {
                 IntLayer::Conv { w, bias, stride, pad_same } => {
-                    x = match self.backend {
-                        Backend::Gemm => ops::conv2d(&x, w, *stride, *pad_same, &mut counts),
-                        Backend::Naive => {
-                            ops::conv2d_naive(&x, w, *stride, *pad_same, &mut counts)
-                        }
+                    let src = parked.map_or(&x, |i| &stored[&i]);
+                    let mut out = if naive {
+                        ops::conv2d_naive(src, w, *stride, *pad_same, &mut counts)
+                    } else {
+                        ops::conv2d(src, w, *stride, *pad_same, &mut counts)
                     };
                     if let Some(b) = bias {
-                        ops::add_bias(&mut x, b, &mut counts);
+                        ops::add_bias(&mut out, b, &mut counts);
                     }
+                    x = out;
+                    parked = None;
                 }
                 IntLayer::Dense { w, bias } => {
-                    x = match self.backend {
-                        Backend::Gemm => ops::dense(&x, w, &mut counts),
-                        Backend::Naive => ops::dense_naive(&x, w, &mut counts),
+                    let src = parked.map_or(&x, |i| &stored[&i]);
+                    let mut out = if naive {
+                        ops::dense_naive(src, w, &mut counts)
+                    } else {
+                        ops::dense(src, w, &mut counts)
                     };
                     if let Some(b) = bias {
-                        ops::add_bias(&mut x, b, &mut counts);
+                        ops::add_bias(&mut out, b, &mut counts);
                     }
+                    x = out;
+                    parked = None;
                 }
-                IntLayer::Bn(a) => ops::affine(&mut x, a, &mut counts),
-                IntLayer::Relu => ops::relu(&mut x, &mut counts),
-                IntLayer::MaxPool { k, stride } => x = ops::maxpool(&x, *k, *stride, &mut counts),
-                IntLayer::AvgPool { k, stride } => x = ops::avgpool(&x, *k, *stride, &mut counts),
-                IntLayer::GlobalAvgPool => x = ops::global_avgpool(&x, &mut counts),
+                IntLayer::Bn(a) => {
+                    unpark(&mut x, &mut parked, &stored);
+                    ops::affine(&mut x, a, &mut counts);
+                }
+                IntLayer::Relu => {
+                    unpark(&mut x, &mut parked, &stored);
+                    ops::relu(&mut x, &mut counts);
+                }
+                IntLayer::MaxPool { k, stride } => {
+                    let src = parked.map_or(&x, |i| &stored[&i]);
+                    x = ops::maxpool(src, *k, *stride, &mut counts);
+                    parked = None;
+                }
+                IntLayer::AvgPool { k, stride } => {
+                    let src = parked.map_or(&x, |i| &stored[&i]);
+                    x = ops::avgpool(src, *k, *stride, &mut counts);
+                    parked = None;
+                }
+                IntLayer::GlobalAvgPool => {
+                    let src = parked.map_or(&x, |i| &stored[&i]);
+                    x = ops::global_avgpool(src, &mut counts);
+                    parked = None;
+                }
                 IntLayer::Flatten => {
+                    unpark(&mut x, &mut parked, &stored);
                     let n = x.dims[0];
                     let f = x.numel() / n;
                     x.dims = [n, 1, 1, f];
                 }
                 IntLayer::Concat { from } => {
-                    let src = acts[*from]
-                        .as_ref()
+                    let a = stored
+                        .get(from)
                         .context("concat source not retained")?;
-                    x = ops::concat(src, &x, &mut counts);
+                    let b = parked.map_or(&x, |i| &stored[&i]);
+                    x = ops::concat(a, b, &mut counts);
+                    parked = None;
                 }
             }
-            acts.push(needed.contains(&li).then(|| x.clone()));
+            if self.retained.contains(&li) {
+                let t = std::mem::replace(
+                    &mut x,
+                    QTensor { data: Vec::new(), frac: 0, dims: [0; 4] },
+                );
+                stored.insert(li, t);
+                parked = Some(li);
+            }
         }
-        Ok((x.to_f32(), counts))
+        let out = parked.map_or(&x, |i| &stored[&i]);
+        Ok((out.to_f32(), counts))
     }
 
     /// Classify a float batch: returns predicted class ids.
@@ -263,14 +410,22 @@ impl IntModel {
         Ok(correct as f32 / n as f32)
     }
 
-    /// Cost report for one forward pass of `batch` images.
+    /// Cost report for one forward pass of `batch` images — analytic since
+    /// the compile-then-execute refactor: `OpCounts` comes straight from
+    /// the plan (shapes x per-layer ternary flags), no dummy forward runs.
     pub fn cost_report(&self, batch: usize) -> Result<CostReport> {
-        let [h, w, c] = self.input_shape;
-        let images = vec![0.1f32; batch * h * w * c];
-        let (_, counts) = self.forward(&images, batch)?;
+        let counts = self.plan_for(batch)?.op_counts(batch);
         // float MACs == integer accumulator adds from conv/dense (bias adds
         // and BN excluded on both sides for a like-for-like core count)
         let model = CostModel::new(self.n_bits);
         Ok(model.report(counts, counts.acc_adds, self.quant_params, self.aux_params))
+    }
+}
+
+/// Copy a parked (retained) stream back into the working tensor so an
+/// in-place op can mutate it without corrupting the retained value.
+fn unpark(x: &mut QTensor, parked: &mut Option<usize>, stored: &BTreeMap<usize, QTensor>) {
+    if let Some(i) = parked.take() {
+        *x = stored[&i].clone();
     }
 }

@@ -208,10 +208,12 @@ pub(crate) fn conv_geometry(
 }
 
 /// Gather one image's receptive fields into the patch matrix
-/// `patches[oh*ow, kh*kw*cin]`. Out-of-range taps stay zero.
+/// `patches[oh*ow, kh*kw*cin]`. Out-of-range taps stay zero. Takes raw
+/// slices so the planned executor can feed arena buffers directly.
 #[allow(clippy::too_many_arguments)]
-fn im2col(
-    x: &QTensor,
+pub(crate) fn im2col(
+    x: &[i32],
+    (h, w, cin): (usize, usize, usize),
     batch: usize,
     kh: usize,
     kw: usize,
@@ -222,7 +224,6 @@ fn im2col(
     ow: usize,
     patches: &mut [i32],
 ) {
-    let [_, h, w, cin] = x.dims;
     let k_dim = kh * kw * cin;
     patches.fill(0);
     for oy in 0..oh {
@@ -240,7 +241,7 @@ fn im2col(
                     }
                     let src = ((batch * h + iy as usize) * w + ix as usize) * cin;
                     let dst = row + (ky * kw + kx) * cin;
-                    patches[dst..dst + cin].copy_from_slice(&x.data[src..src + cin]);
+                    patches[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
                 }
             }
         }
@@ -259,7 +260,8 @@ fn use_ternary_plan(w: &QWeight) -> bool {
 
 /// The weight's ternary plan, built once per `QWeight` and cached (the
 /// decision and the index lists only depend on the immutable mantissas).
-fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&TernaryPlan> {
+/// `ExecPlan` warms this at plan-build time so no forward ever pays for it.
+pub(crate) fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&TernaryPlan> {
     w.ternary_plan
         .get_or_init(|| {
             use_ternary_plan(w).then(|| TernaryPlan::build(&w.mantissa_i32, depth, cols))
@@ -293,7 +295,8 @@ pub(crate) fn conv2d_acc(
         let mut patches = vec![0i32; m_dim * k_dim];
         for (bi, out_img) in chunk.iter_mut().enumerate() {
             let b = offset + bi;
-            im2col(x, b, kh, kw, stride, pad_h, pad_w, oh, ow, &mut patches);
+            let hwc = (x.dims[1], x.dims[2], cin);
+            im2col(&x.data, hwc, b, kh, kw, stride, pad_h, pad_w, oh, ow, &mut patches);
             match plan {
                 Some(p) => gemm_ternary(&patches, p, out_img, m_dim, k_dim, cout),
                 None => gemm_i32(&patches, &w.mantissa_i32, out_img, m_dim, k_dim, cout),

@@ -18,12 +18,22 @@
 //! The engine reconstructs the network from the artifact manifest's layer
 //! graph and a trained checkpoint, and its accuracy is validated against
 //! the float `evalq` executable in the integration tests.
+//!
+//! Execution is compile-then-execute by default: `IntModel::plan` lowers
+//! the layer program once into an [`ExecPlan`] (preallocated ping-pong
+//! arena, plan-time concat retention, fused bias/BN/ReLU/requantize
+//! epilogues, analytic op counting) which `forward` reuses across calls —
+//! see `plan.rs` and DESIGN.md §"Planned execution".
 
+mod arena;
 mod cost;
 mod engine;
 pub(crate) mod gemm;
 mod ops;
+mod plan;
 
+pub use arena::Scratch;
 pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};
 pub use engine::{Backend, IntModel, QTensor};
 pub use ops::{conv2d, conv2d_naive, dense, dense_naive, QWeight};
+pub use plan::ExecPlan;

@@ -23,18 +23,8 @@ impl QTensor {
     /// <= 2^{bits-1}-1 (8-bit activations by default). Integer hardware
     /// derives this from a leading-zero count of the running max.
     pub fn from_f32(x: &[f32], dims: [usize; 4], bits: u32) -> QTensor {
-        let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
-        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
-        // delta = 2^-frac such that amax/delta <= qmax
-        let frac = (qmax / amax).log2().floor() as i32;
-        let scale = (2f64).powi(frac);
-        let data = x
-            .iter()
-            .map(|&v| {
-                let s = v as f64 * scale;
-                (s.abs() + 0.5).floor().copysign(s) as i32
-            })
-            .collect();
+        let mut data = vec![0i32; x.len()];
+        let frac = encode_f32_into(x, bits, &mut data);
         QTensor { data, frac, dims }
     }
 
@@ -46,12 +36,8 @@ impl QTensor {
     /// Requantize mantissas down to `bits` dynamic range (shift right until
     /// max |mantissa| fits). Pure integer: max-abs + shift.
     pub fn requantize(&mut self, bits: u32) -> i32 {
-        let qmax = (1i64 << (bits - 1)) - 1;
         let amax = self.data.iter().fold(0i64, |m, &v| m.max((v as i64).abs()));
-        let mut shift = 0;
-        while (amax >> shift) > qmax {
-            shift += 1;
-        }
+        let shift = shift_for_amax(amax, bits);
         if shift > 0 {
             for v in &mut self.data {
                 *v = fxp_round_shift(*v as i64, shift) as i32;
@@ -60,6 +46,35 @@ impl QTensor {
         }
         shift
     }
+}
+
+/// Smallest right-shift that brings `amax` within the signed `bits` range —
+/// the requantization decision shared by the interpreted ops and the
+/// planned executor (both must agree bit-for-bit).
+pub(crate) fn shift_for_amax(amax: i64, bits: u32) -> i32 {
+    let qmax = (1i64 << (bits - 1)) - 1;
+    let mut shift = 0;
+    while (amax >> shift) > qmax {
+        shift += 1;
+    }
+    shift
+}
+
+/// Encode floats to i32 mantissas at the largest frac keeping max
+/// |mantissa| within `bits`; returns the chosen frac. Shared by
+/// `QTensor::from_f32` and the planned executor's input stage.
+pub(crate) fn encode_f32_into(x: &[f32], bits: u32, out: &mut [i32]) -> i32 {
+    debug_assert_eq!(x.len(), out.len());
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    // delta = 2^-frac such that amax/delta <= qmax
+    let frac = (qmax / amax).log2().floor() as i32;
+    let scale = (2f64).powi(frac);
+    for (o, &v) in out.iter_mut().zip(x) {
+        let s = v as f64 * scale;
+        *o = (s.abs() + 0.5).floor().copysign(s) as i32;
+    }
+    frac
 }
 
 /// Quantized weight tensor: i8 mantissas + power-of-two step 2^-frac.
@@ -139,7 +154,7 @@ impl QAffine {
     }
 }
 
-fn enc32(v: f32, frac: i32) -> i32 {
+pub(crate) fn enc32(v: f32, frac: i32) -> i32 {
     let s = v as f64 * (2f64).powi(frac);
     (s.abs() + 0.5).floor().copysign(s) as i32
 }
@@ -151,6 +166,12 @@ fn enc32(v: f32, frac: i32) -> i32 {
 /// position x kernel elem x cin x cout, counted in full whichever backend
 /// produced the sums) + requantization. Keeping this in one place is what
 /// guarantees `OpCounts` never depends on the compute backend.
+///
+/// Shift accounting is deterministic: every requantization point bills one
+/// shift per element whether or not the resolved shift is zero (the barrel
+/// shifter sits on the datapath either way). This makes `OpCounts` a pure
+/// function of network shape, which is what lets `ExecPlan::op_counts`
+/// price a forward pass analytically without executing it.
 fn finish_matmul(
     acc: Vec<i32>,
     dims: [usize; 4],
@@ -164,8 +185,8 @@ fn finish_matmul(
         counts.int_mults += macs;
     }
     let mut out = QTensor { data: acc, frac, dims };
-    let shift = out.requantize(16);
-    counts.shifts += if shift > 0 { out.numel() as u64 } else { 0 };
+    out.requantize(16);
+    counts.shifts += out.numel() as u64;
     out
 }
 
@@ -312,11 +333,12 @@ pub fn affine(x: &mut QTensor, a: &QAffine, counts: &mut super::OpCounts) {
     x.frac = prod_frac;
     counts.int_mults += x.numel() as u64;
     counts.acc_adds += x.numel() as u64;
-    let shift = x.requantize(16);
-    counts.shifts += if shift > 0 { x.numel() as u64 } else { 0 };
+    x.requantize(16);
+    // deterministic shift accounting (see finish_matmul)
+    counts.shifts += x.numel() as u64;
 }
 
-fn shift_to(m: i64, from_frac: i32, to_frac: i32) -> i64 {
+pub(crate) fn shift_to(m: i64, from_frac: i32, to_frac: i32) -> i64 {
     if to_frac >= from_frac {
         m << (to_frac - from_frac)
     } else {
@@ -334,11 +356,20 @@ pub fn relu(x: &mut QTensor, counts: &mut super::OpCounts) {
     counts.compares += x.numel() as u64;
 }
 
-/// Integer max-pool (VALID, square window).
-pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCounts) -> QTensor {
-    let [n, h, w, c] = x.dims;
-    let (oh, ow) = (h / stride, w / stride);
-    let mut out = vec![i32::MIN; n * oh * ow * c];
+/// Shared max-pool core (also driven by the planned executor): NHWC,
+/// square window clamped at the lower-right edge. One definition so the
+/// boundary rule can never drift between the interpreted and planned
+/// paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn maxpool_slice(
+    src: &[i32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    k: usize,
+    stride: usize,
+    (oh, ow): (usize, usize),
+    dst: &mut [i32],
+) {
+    dst[..n * oh * ow * c].fill(i32::MIN);
     for b in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -346,12 +377,12 @@ pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCount
                     for kx in 0..k.min(w - ox * stride) {
                         let iy = oy * stride + ky;
                         let ix = ox * stride + kx;
-                        let src = ((b * h + iy) * w + ix) * c;
-                        let dst = ((b * oh + oy) * ow + ox) * c;
+                        let si = ((b * h + iy) * w + ix) * c;
+                        let di = ((b * oh + oy) * ow + ox) * c;
                         for ch in 0..c {
-                            let v = x.data[src + ch];
-                            if v > out[dst + ch] {
-                                out[dst + ch] = v;
+                            let v = src[si + ch];
+                            if v > dst[di + ch] {
+                                dst[di + ch] = v;
                             }
                         }
                     }
@@ -359,6 +390,63 @@ pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCount
             }
         }
     }
+}
+
+/// Shared average-pool accumulation core (see [`maxpool_slice`]): sums
+/// window values into i64 accumulators; the caller divides via
+/// [`divide_slice`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn avgpool_acc_slice(
+    src: &[i32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    k: usize,
+    stride: usize,
+    (oh, ow): (usize, usize),
+    acc: &mut [i64],
+) {
+    acc[..n * oh * ow * c].fill(0);
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..k.min(h - oy * stride) {
+                    for kx in 0..k.min(w - ox * stride) {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let si = ((b * h + iy) * w + ix) * c;
+                        let di = ((b * oh + oy) * ow + ox) * c;
+                        for ch in 0..c {
+                            acc[di + ch] += src[si + ch] as i64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Shared global-average accumulation core: per-image per-channel sums.
+pub(crate) fn global_avg_acc_slice(
+    src: &[i32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    acc: &mut [i64],
+) {
+    acc[..n * c].fill(0);
+    for b in 0..n {
+        for i in 0..h * w {
+            let si = (b * h * w + i) * c;
+            for ch in 0..c {
+                acc[b * c + ch] += src[si + ch] as i64;
+            }
+        }
+    }
+}
+
+/// Integer max-pool (VALID, square window).
+pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCounts) -> QTensor {
+    let [n, h, w, c] = x.dims;
+    let (oh, ow) = (h / stride, w / stride);
+    let mut out = vec![0i32; n * oh * ow * c];
+    maxpool_slice(&x.data, (n, h, w, c), k, stride, (oh, ow), &mut out);
     counts.compares += (n * oh * ow * c * k * k) as u64;
     QTensor { data: out, frac: x.frac, dims: [n, oh, ow, c] }
 }
@@ -367,62 +455,88 @@ pub fn maxpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCount
 pub fn avgpool(x: &QTensor, k: usize, stride: usize, counts: &mut super::OpCounts) -> QTensor {
     let [n, h, w, c] = x.dims;
     let (oh, ow) = (h / stride, w / stride);
-    let mut out = vec![0i64; n * oh * ow * c];
-    for b in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                for ky in 0..k.min(h - oy * stride) {
-                    for kx in 0..k.min(w - ox * stride) {
-                        let iy = oy * stride + ky;
-                        let ix = ox * stride + kx;
-                        let src = ((b * h + iy) * w + ix) * c;
-                        let dst = ((b * oh + oy) * ow + ox) * c;
-                        for ch in 0..c {
-                            out[dst + ch] += x.data[src + ch] as i64;
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let mut acc = vec![0i64; n * oh * ow * c];
+    avgpool_acc_slice(&x.data, (n, h, w, c), k, stride, (oh, ow), &mut acc);
     counts.acc_adds += (n * oh * ow * c * k * k) as u64;
     let area = (k * k) as u32;
-    let div = divide_out(&out, area, counts);
+    let div = divide_out(&acc, area, counts);
     QTensor { data: div, frac: x.frac, dims: [n, oh, ow, c] }
 }
 
 /// Global average pool -> [n, 1, 1, c].
 pub fn global_avgpool(x: &QTensor, counts: &mut super::OpCounts) -> QTensor {
     let [n, h, w, c] = x.dims;
-    let mut out = vec![0i64; n * c];
-    for b in 0..n {
-        for i in 0..h * w {
-            let src = (b * h * w + i) * c;
-            for ch in 0..c {
-                out[b * c + ch] += x.data[src + ch] as i64;
-            }
-        }
-    }
+    let mut acc = vec![0i64; n * c];
+    global_avg_acc_slice(&x.data, (n, h, w, c), &mut acc);
     counts.acc_adds += (n * h * w * c) as u64;
-    let div = divide_out(&out, (h * w) as u32, counts);
+    let div = divide_out(&acc, (h * w) as u32, counts);
     QTensor { data: div, frac: x.frac, dims: [n, 1, 1, c] }
 }
 
-/// Divide accumulators by `area`: pure shift when power of two, else a
-/// fixed-point reciprocal multiply + shift (still integer-only).
-fn divide_out(acc: &[i64], area: u32, counts: &mut super::OpCounts) -> Vec<i32> {
+/// Shared pooling-divide core (also driven by the planned executor): pure
+/// shift when `area` is a power of two, Q16 reciprocal multiply + shift
+/// otherwise. One definition so the rounding rule can never drift between
+/// the interpreted and planned paths.
+pub(crate) fn divide_slice(acc: &[i64], area: u32, out: &mut [i32]) {
+    debug_assert_eq!(acc.len(), out.len());
     if area.is_power_of_two() {
         let s = area.trailing_zeros() as i32;
-        counts.shifts += acc.len() as u64;
-        acc.iter().map(|&v| fxp_round_shift(v, s) as i32).collect()
+        for (o, &v) in out.iter_mut().zip(acc) {
+            *o = fxp_round_shift(v, s) as i32;
+        }
     } else {
         // reciprocal in Q16: round(2^16 / area)
         let recip = ((1u64 << 16) + (area as u64 / 2)) / area as u64;
+        for (o, &v) in out.iter_mut().zip(acc) {
+            *o = fxp_round_shift(v * recip as i64, 16) as i32;
+        }
+    }
+}
+
+/// Divide accumulators by `area` into a fresh vector, with op accounting.
+fn divide_out(acc: &[i64], area: u32, counts: &mut super::OpCounts) -> Vec<i32> {
+    if !area.is_power_of_two() {
         counts.int_mults += acc.len() as u64;
-        counts.shifts += acc.len() as u64;
-        acc.iter()
-            .map(|&v| fxp_round_shift(v * recip as i64, 16) as i32)
-            .collect()
+    }
+    counts.shifts += acc.len() as u64;
+    let mut out = vec![0i32; acc.len()];
+    divide_slice(acc, area, &mut out);
+    out
+}
+
+/// Shared concat core (also driven by the planned executor): interleave
+/// two NHWC sources channel-wise, shifting the finer exponent down to
+/// `frac`. One definition so the alignment rule can never drift between
+/// the interpreted and planned paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn concat_rows(
+    av: &[i32],
+    fa: i32,
+    bv: &[i32],
+    fb: i32,
+    frac: i32,
+    ca: usize,
+    cb: usize,
+    rows: usize,
+    dv: &mut [i32],
+) {
+    let fix = |v: i32, f: i32| -> i32 {
+        if f == frac {
+            v
+        } else {
+            fxp_round_shift(v as i64, f - frac) as i32
+        }
+    };
+    let mut o = 0usize;
+    for i in 0..rows {
+        for &v in &av[i * ca..(i + 1) * ca] {
+            dv[o] = fix(v, fa);
+            o += 1;
+        }
+        for &v in &bv[i * cb..(i + 1) * cb] {
+            dv[o] = fix(v, fb);
+            o += 1;
+        }
     }
 }
 
@@ -433,23 +547,14 @@ pub fn concat(a: &QTensor, b: &QTensor, counts: &mut super::OpCounts) -> QTensor
     assert_eq!(a.dims[1], b.dims[1]);
     assert_eq!(a.dims[2], b.dims[2]);
     let frac = a.frac.min(b.frac);
-    let fix = |t: &QTensor, v: i32| -> i32 {
-        if t.frac == frac {
-            v
-        } else {
-            fxp_round_shift(v as i64, t.frac - frac) as i32
-        }
-    };
     let [n, h, w, ca] = a.dims;
     let cb = b.dims[3];
-    let mut out = Vec::with_capacity(n * h * w * (ca + cb));
-    for i in 0..n * h * w {
-        out.extend(a.data[i * ca..(i + 1) * ca].iter().map(|&v| fix(a, v)));
-        out.extend(b.data[i * cb..(i + 1) * cb].iter().map(|&v| fix(b, v)));
-    }
-    if a.frac != b.frac {
-        counts.shifts += out.len() as u64;
-    }
+    let rows = n * h * w;
+    let mut out = vec![0i32; rows * (ca + cb)];
+    concat_rows(&a.data, a.frac, &b.data, b.frac, frac, ca, cb, rows, &mut out);
+    // deterministic shift accounting (see finish_matmul): the alignment
+    // shifter is billed whether or not the exponents happened to agree
+    counts.shifts += out.len() as u64;
     QTensor { data: out, frac, dims: [n, h, w, ca + cb] }
 }
 

@@ -1,0 +1,842 @@
+//! Compile-then-execute inference: `ExecPlan`.
+//!
+//! The interpreted engine (`engine.rs`) re-derives everything on every
+//! forward: shapes, concat retention, im2col scratch, and it runs
+//! requantize / bias / folded-BN / ReLU as separate full-tensor passes
+//! with a fresh allocation per op. A hard-quantized SYMOG net is a
+//! *static* artifact though (§3.1: fixed-point weights, shift-only
+//! rescaling), so all of that is knowable once:
+//!
+//! `IntModel::plan(max_batch)` walks the layer program a single time and
+//! emits an immutable, shareable `ExecPlan`:
+//!
+//! * every intermediate shape is resolved and each step is assigned a slot
+//!   in a preallocated ping-pong arena (`arena.rs`); concat sources get
+//!   dedicated retained slots, so skip tensors are written once and read
+//!   in place — no per-forward `needed`-set rebuild, no clone;
+//! * im2col geometry is precomputed and the ternary add/sub plans are
+//!   warmed at plan time;
+//! * bias + folded-BN + ReLU + requantize are **fused into the matmul
+//!   epilogue**: one elementwise pass (two when BN's exponent must be
+//!   re-centered — the shift amount depends on the batch-global |max|,
+//!   which is itself reduced inside the GEMM workers) instead of four
+//!   interpreted passes, and the epilogue runs batch-parallel where the
+//!   interpreter was serial;
+//! * `op_counts` is an analytic function of the plan — `cost_report`
+//!   prices a forward without executing one.
+//!
+//! Execution state lives in a per-thread `Scratch`; the plan itself is
+//! `Sync` and meant to be shared behind an `Arc` — that split is the seam
+//! a serving layer sits on (N workers, one plan, one scratch each).
+//!
+//! Everything here replays the interpreter's integer arithmetic
+//! *bit-for-bit* (same kernels, same requantize decisions, same rounding),
+//! which `tests/planned_exec.rs` enforces against `Backend::Naive`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::fixedpoint::fxp_round_shift;
+use crate::util::pool;
+
+use super::arena::{self, Scratch, Slot};
+use super::engine::IntLayer;
+use super::ops::{self, QAffine, QWeight};
+use super::{gemm, OpCounts};
+
+static NEXT_PLAN_ID: AtomicU64 = AtomicU64::new(1);
+
+fn numel3(d: [usize; 3]) -> usize {
+    d[0] * d[1] * d[2]
+}
+
+fn clamp_i32(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Precomputed conv geometry (resolved once at plan time).
+#[derive(Clone, Copy, Debug)]
+struct ConvGeom {
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+}
+
+/// One executable step of the plan. A `MatMul` step is a *fusion group*:
+/// the conv/dense layer plus any immediately-following BN/ReLU absorbed
+/// into its epilogue (fusion never crosses a concat-retention boundary,
+/// so retained tensors keep the interpreter's exact per-layer values).
+#[derive(Clone, Debug)]
+enum StepKind {
+    MatMul {
+        li: usize,
+        geom: Option<ConvGeom>,
+        bn: Option<usize>,
+        relu: bool,
+        bias: bool,
+        ternary: bool,
+        macs_per_img: u64,
+    },
+    Affine { li: usize },
+    Relu,
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    Concat { a: Slot, a_dim: [usize; 3] },
+    /// materialize a shape-only layer (retained flatten) into its own slot
+    Copy,
+}
+
+#[derive(Clone, Debug)]
+struct Step {
+    kind: StepKind,
+    src: Slot,
+    dst: Slot,
+    /// per-image HWC dims at the step input / output (batch dim implicit)
+    in_dim: [usize; 3],
+    out_dim: [usize; 3],
+}
+
+/// A compiled forward pass: immutable, cheap to share across threads.
+pub struct ExecPlan {
+    id: u64,
+    layers: Arc<Vec<IntLayer>>,
+    steps: Vec<Step>,
+    max_batch: usize,
+    workers: usize,
+    in_dim: [usize; 3],
+    in_slot: Slot,
+    out_slot: Slot,
+    out_per_img: usize,
+    /// capacity (in i32 elements, `max_batch`-scaled) of each arena slot
+    slot_caps: Vec<usize>,
+    /// per-worker im2col panel length (max over conv steps)
+    patch_len: usize,
+    /// i64 pooling-accumulator length
+    wide_len: usize,
+    /// max channel count needing per-call bias/BN constant encoding
+    chan_len: usize,
+}
+
+impl ExecPlan {
+    /// Compile the layer program for batches up to `max_batch`.
+    pub(crate) fn build(
+        layers: Arc<Vec<IntLayer>>,
+        retained: &BTreeSet<usize>,
+        input_shape: [usize; 3],
+        max_batch: usize,
+    ) -> Result<ExecPlan> {
+        ensure!(max_batch >= 1, "ExecPlan needs max_batch >= 1");
+        let mut slot_caps = vec![0usize; 2];
+        slot_caps[0] = max_batch * numel3(input_shape);
+        let mut retained_slots: BTreeMap<usize, (Slot, [usize; 3])> = BTreeMap::new();
+        let mut steps: Vec<Step> = Vec::new();
+        let mut cur = Slot(0);
+        let mut cur_dim = input_shape;
+        let (mut patch_len, mut wide_len, mut chan_len) = (0usize, 0usize, 0usize);
+
+        let mut li = 0usize;
+        while li < layers.len() {
+            // (kind, out_dim, group_end, in_place_ok); None = shape-only
+            let planned: Option<(StepKind, [usize; 3], usize, bool)> = match &layers[li] {
+                IntLayer::Conv { w, bias, stride, pad_same } => {
+                    let [h, ww, c] = cur_dim;
+                    let [kh, kw, wcin, cout] = w.dims;
+                    ensure!(c == wcin, "plan: conv channel mismatch at layer {li}");
+                    let (oh, ow, pad_h, pad_w) =
+                        gemm::conv_geometry(h, ww, kh, kw, *stride, *pad_same);
+                    let geom =
+                        ConvGeom { kh, kw, cin: c, cout, stride: *stride, pad_h, pad_w, oh, ow };
+                    patch_len = patch_len.max(oh * ow * kh * kw * c);
+                    let _ = gemm::cached_plan(w, kh * kw * c, cout); // warm ternary plan
+                    let (bn, relu, group_end) = absorb(&layers, retained, li);
+                    check_bn(&layers, bn, cout, li)?;
+                    if bias.is_some() || bn.is_some() {
+                        chan_len = chan_len.max(cout);
+                    }
+                    let kind = StepKind::MatMul {
+                        li,
+                        geom: Some(geom),
+                        bn,
+                        relu,
+                        bias: bias.is_some(),
+                        ternary: w.is_ternary(),
+                        macs_per_img: (oh * ow * cout * kh * kw * c) as u64,
+                    };
+                    Some((kind, [oh, ow, cout], group_end, false))
+                }
+                IntLayer::Dense { w, bias } => {
+                    let f_in = numel3(cur_dim);
+                    ensure!(f_in == w.dims[0], "plan: dense shape mismatch at layer {li}");
+                    let f_out = w.dims[1];
+                    let _ = gemm::cached_plan(w, f_in, f_out); // warm ternary plan
+                    let (bn, relu, group_end) = absorb(&layers, retained, li);
+                    check_bn(&layers, bn, f_out, li)?;
+                    if bias.is_some() || bn.is_some() {
+                        chan_len = chan_len.max(f_out);
+                    }
+                    let kind = StepKind::MatMul {
+                        li,
+                        geom: None,
+                        bn,
+                        relu,
+                        bias: bias.is_some(),
+                        ternary: w.is_ternary(),
+                        macs_per_img: (f_in * f_out) as u64,
+                    };
+                    Some((kind, [1, 1, f_out], group_end, false))
+                }
+                IntLayer::Bn(a) => {
+                    ensure!(
+                        a.a_mant.len() == cur_dim[2],
+                        "plan: BN channel mismatch at layer {li}"
+                    );
+                    chan_len = chan_len.max(cur_dim[2]);
+                    Some((StepKind::Affine { li }, cur_dim, li, true))
+                }
+                IntLayer::Relu => Some((StepKind::Relu, cur_dim, li, true)),
+                IntLayer::MaxPool { k, stride } => {
+                    let [h, ww, c] = cur_dim;
+                    let out = [h / stride, ww / stride, c];
+                    Some((StepKind::MaxPool { k: *k, stride: *stride }, out, li, false))
+                }
+                IntLayer::AvgPool { k, stride } => {
+                    let [h, ww, c] = cur_dim;
+                    let out = [h / stride, ww / stride, c];
+                    wide_len = wide_len.max(max_batch * numel3(out));
+                    Some((StepKind::AvgPool { k: *k, stride: *stride }, out, li, false))
+                }
+                IntLayer::GlobalAvgPool => {
+                    let out = [1, 1, cur_dim[2]];
+                    wide_len = wide_len.max(max_batch * cur_dim[2]);
+                    Some((StepKind::GlobalAvgPool, out, li, false))
+                }
+                IntLayer::Flatten => {
+                    let out = [1, 1, numel3(cur_dim)];
+                    if retained.contains(&li) {
+                        // shape-only layer whose output must outlive the
+                        // stream: materialize it into a retained slot
+                        Some((StepKind::Copy, out, li, false))
+                    } else {
+                        cur_dim = out;
+                        li += 1;
+                        None
+                    }
+                }
+                IntLayer::Concat { from } => {
+                    let (a_slot, a_dim) = *retained_slots
+                        .get(from)
+                        .with_context(|| format!("plan: concat source {from} not retained"))?;
+                    let [h, ww, c] = cur_dim;
+                    ensure!(
+                        a_dim[0] == h && a_dim[1] == ww,
+                        "plan: concat spatial mismatch at layer {li}"
+                    );
+                    let out = [h, ww, a_dim[2] + c];
+                    Some((StepKind::Concat { a: a_slot, a_dim }, out, li, false))
+                }
+            };
+            let Some((kind, out_dim, group_end, in_place_ok)) = planned else { continue };
+            let total = max_batch * numel3(out_dim);
+            let dst = if retained.contains(&group_end) {
+                slot_caps.push(total);
+                let s = Slot(slot_caps.len() - 1);
+                retained_slots.insert(group_end, (s, out_dim));
+                s
+            } else if in_place_ok && cur.0 < 2 {
+                slot_caps[cur.0] = slot_caps[cur.0].max(total);
+                cur
+            } else {
+                let s = if cur.0 == 0 { Slot(1) } else { Slot(0) };
+                slot_caps[s.0] = slot_caps[s.0].max(total);
+                s
+            };
+            steps.push(Step { kind, src: cur, dst, in_dim: cur_dim, out_dim });
+            cur = dst;
+            cur_dim = out_dim;
+            li = group_end + 1;
+        }
+
+        Ok(ExecPlan {
+            id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed),
+            layers,
+            steps,
+            max_batch,
+            workers: pool::default_workers(),
+            in_dim: input_shape,
+            in_slot: Slot(0),
+            out_slot: cur,
+            out_per_img: numel3(cur_dim),
+            slot_caps,
+            patch_len,
+            wide_len,
+            chan_len,
+        })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Number of fused execution steps (< layer count when epilogues fused).
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Total activation-arena footprint in bytes.
+    pub fn arena_bytes(&self) -> usize {
+        self.slot_caps.iter().sum::<usize>() * std::mem::size_of::<i32>()
+    }
+
+    /// Override the worker-thread count (results are bit-identical for any
+    /// value; this tunes wall-clock only). Returns a new plan identity, so
+    /// existing `Scratch` values cannot be mixed in by accident.
+    pub fn with_workers(mut self, workers: usize) -> ExecPlan {
+        self.workers = workers.clamp(1, 64);
+        self.id = NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed);
+        self
+    }
+
+    /// Allocate the mutable per-thread state for `run`. Steady-state runs
+    /// never grow it (see `Scratch::fingerprint`).
+    pub fn scratch(&self) -> Scratch {
+        Scratch::sized(
+            self.id,
+            &self.slot_caps,
+            self.workers,
+            self.patch_len,
+            self.wide_len,
+            self.chan_len,
+        )
+    }
+
+    /// Analytic operation counts for one forward of `batch` images —
+    /// exactly what the counted interpreter reports, computed from shapes
+    /// alone (shift accounting is deterministic; see `ops::finish_matmul`).
+    pub fn op_counts(&self, batch: usize) -> OpCounts {
+        let mut c = OpCounts::default();
+        let b = batch as u64;
+        for step in &self.steps {
+            let out = (numel3(step.out_dim) * batch) as u64;
+            match &step.kind {
+                StepKind::MatMul { bn, relu, bias, ternary, macs_per_img, .. } => {
+                    let macs = macs_per_img * b;
+                    c.acc_adds += macs;
+                    if !ternary {
+                        c.int_mults += macs;
+                    }
+                    c.shifts += out; // matmul requantize
+                    if *bias {
+                        c.acc_adds += out;
+                    }
+                    if bn.is_some() {
+                        c.int_mults += out;
+                        c.acc_adds += out;
+                        c.shifts += out; // BN requantize
+                    }
+                    if *relu {
+                        c.compares += out;
+                    }
+                }
+                StepKind::Affine { .. } => {
+                    c.int_mults += out;
+                    c.acc_adds += out;
+                    c.shifts += out;
+                }
+                StepKind::Relu => c.compares += out,
+                StepKind::MaxPool { k, .. } => c.compares += out * (k * k) as u64,
+                StepKind::AvgPool { k, .. } => {
+                    c.acc_adds += out * (k * k) as u64;
+                    if !((k * k) as u32).is_power_of_two() {
+                        c.int_mults += out;
+                    }
+                    c.shifts += out;
+                }
+                StepKind::GlobalAvgPool => {
+                    c.acc_adds += (numel3(step.in_dim) * batch) as u64;
+                    if !((step.in_dim[0] * step.in_dim[1]) as u32).is_power_of_two() {
+                        c.int_mults += out;
+                    }
+                    c.shifts += out;
+                }
+                StepKind::Concat { .. } => c.shifts += out,
+                StepKind::Copy => {}
+            }
+        }
+        c
+    }
+
+    /// Execute the plan on a float batch (encoded to 8-bit fixed point at
+    /// the input, like the interpreter). `batch` may be smaller than
+    /// `max_batch` (ragged final batch); logits come back as f32.
+    pub fn run(&self, images: &[f32], batch: usize, s: &mut Scratch) -> Result<Vec<f32>> {
+        ensure!(s.plan_id == self.id, "Scratch was built for a different ExecPlan");
+        ensure!(
+            batch >= 1 && batch <= self.max_batch,
+            "batch {batch} outside 1..={}",
+            self.max_batch
+        );
+        let in_elems = numel3(self.in_dim);
+        ensure!(images.len() == batch * in_elems, "bad input size");
+        let frac_in =
+            ops::encode_f32_into(images, 8, &mut s.bufs[self.in_slot.0][..batch * in_elems]);
+        s.fracs[self.in_slot.0] = frac_in;
+        for step in &self.steps {
+            self.exec_step(step, batch, s)?;
+        }
+        let scale = (2f32).powi(-s.fracs[self.out_slot.0]);
+        Ok(s.bufs[self.out_slot.0][..batch * self.out_per_img]
+            .iter()
+            .map(|&m| m as f32 * scale)
+            .collect())
+    }
+
+    fn exec_step(&self, step: &Step, batch: usize, s: &mut Scratch) -> Result<()> {
+        let in_total = batch * numel3(step.in_dim);
+        let out_total = batch * numel3(step.out_dim);
+        match &step.kind {
+            StepKind::MatMul { .. } => self.exec_matmul(step, batch, s),
+            StepKind::Affine { li } => {
+                let IntLayer::Bn(a) = &self.layers[*li] else {
+                    unreachable!("affine step on non-BN layer")
+                };
+                let Scratch { bufs, fracs, amax, bn_enc, .. } = s;
+                if step.src != step.dst {
+                    let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                    dv[..out_total].copy_from_slice(&sv[..in_total]);
+                    fracs[step.dst.0] = fracs[step.src.0];
+                }
+                let c = step.out_dim[2];
+                let x_frac = fracs[step.dst.0];
+                let prod_frac = a.a_frac + x_frac;
+                for (e, &bm) in bn_enc.iter_mut().zip(a.b_mant.iter()) {
+                    *e = ops::shift_to(bm, a.b_frac, prod_frac);
+                }
+                let data = &mut bufs[step.dst.0][..out_total];
+                let (a_m, bn_b): (&[i32], &[i64]) = (&a.a_mant, &bn_enc[..c]);
+                let amax2 = par_map_amax(data, amax, self.workers, |i, v| {
+                    let ch = i % c;
+                    clamp_i32(v as i64 * a_m[ch] as i64 + bn_b[ch])
+                });
+                let shift = ops::shift_for_amax(amax2, 16);
+                if shift > 0 {
+                    par_map_elems(data, self.workers, |_, v| {
+                        fxp_round_shift(v as i64, shift) as i32
+                    });
+                }
+                fracs[step.dst.0] = prod_frac - shift;
+                Ok(())
+            }
+            StepKind::Relu => {
+                let Scratch { bufs, fracs, .. } = s;
+                if step.src == step.dst {
+                    for v in &mut bufs[step.dst.0][..out_total] {
+                        if *v < 0 {
+                            *v = 0;
+                        }
+                    }
+                } else {
+                    let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                    for (o, &v) in dv[..out_total].iter_mut().zip(&sv[..in_total]) {
+                        *o = v.max(0);
+                    }
+                    fracs[step.dst.0] = fracs[step.src.0];
+                }
+                Ok(())
+            }
+            StepKind::MaxPool { k, stride } => {
+                let Scratch { bufs, fracs, .. } = s;
+                let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                let (src, dst) = (&sv[..in_total], &mut dv[..out_total]);
+                let [h, w, c] = step.in_dim;
+                let [oh, ow, _] = step.out_dim;
+                ops::maxpool_slice(src, (batch, h, w, c), *k, *stride, (oh, ow), dst);
+                fracs[step.dst.0] = fracs[step.src.0];
+                Ok(())
+            }
+            StepKind::AvgPool { k, stride } => {
+                let Scratch { bufs, fracs, wide, .. } = s;
+                let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                let (src, dst) = (&sv[..in_total], &mut dv[..out_total]);
+                let acc = &mut wide[..out_total];
+                let [h, w, c] = step.in_dim;
+                let [oh, ow, _] = step.out_dim;
+                ops::avgpool_acc_slice(src, (batch, h, w, c), *k, *stride, (oh, ow), acc);
+                ops::divide_slice(acc, (k * k) as u32, dst);
+                fracs[step.dst.0] = fracs[step.src.0];
+                Ok(())
+            }
+            StepKind::GlobalAvgPool => {
+                let Scratch { bufs, fracs, wide, .. } = s;
+                let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                let (src, dst) = (&sv[..in_total], &mut dv[..out_total]);
+                let acc = &mut wide[..out_total];
+                let [h, w, c] = step.in_dim;
+                ops::global_avg_acc_slice(src, (batch, h, w, c), acc);
+                ops::divide_slice(acc, (h * w) as u32, dst);
+                fracs[step.dst.0] = fracs[step.src.0];
+                Ok(())
+            }
+            StepKind::Concat { a: a_slot, a_dim } => {
+                let Scratch { bufs, fracs, .. } = s;
+                let (fa, fb) = (fracs[a_slot.0], fracs[step.src.0]);
+                let frac = fa.min(fb);
+                let [h, w, cb] = step.in_dim;
+                let ca = a_dim[2];
+                let rows = batch * h * w;
+                if *a_slot == step.src {
+                    // self-concat: both halves read the same slot
+                    let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                    let both = &sv[..in_total];
+                    ops::concat_rows(both, fa, both, fb, frac, ca, cb, rows, dv);
+                } else {
+                    let (av, sv, dv) =
+                        arena::three_mut(bufs, a_slot.0, step.src.0, step.dst.0);
+                    let a_total = batch * numel3(*a_dim);
+                    let (a, b) = (&av[..a_total], &sv[..in_total]);
+                    ops::concat_rows(a, fa, b, fb, frac, ca, cb, rows, dv);
+                }
+                fracs[step.dst.0] = frac;
+                Ok(())
+            }
+            StepKind::Copy => {
+                let Scratch { bufs, fracs, .. } = s;
+                let (sv, dv) = arena::two_mut(bufs, step.src.0, step.dst.0);
+                dv[..out_total].copy_from_slice(&sv[..in_total]);
+                fracs[step.dst.0] = fracs[step.src.0];
+                Ok(())
+            }
+        }
+    }
+
+    /// Matmul step: GEMM workers accumulate into the arena and co-reduce
+    /// the batch-global |max|, then the fused epilogue (requantize + bias +
+    /// folded BN + ReLU) sweeps the output in at most two parallel passes.
+    fn exec_matmul(&self, step: &Step, batch: usize, s: &mut Scratch) -> Result<()> {
+        let StepKind::MatMul { li, geom, bn, relu, bias: has_bias, .. } = &step.kind else {
+            unreachable!("exec_matmul on non-matmul step")
+        };
+        let (w, bias): (&QWeight, Option<&Vec<f32>>) = match &self.layers[*li] {
+            IntLayer::Conv { w, bias, .. } => (w, bias.as_ref()),
+            IntLayer::Dense { w, bias } => (w, bias.as_ref()),
+            _ => unreachable!("matmul step on non-matmul layer"),
+        };
+        let Scratch { bufs, fracs, patches, amax, bias_enc, bn_enc, .. } = s;
+        let (src_v, dst_v) = arena::two_mut(bufs, step.src.0, step.dst.0);
+        let in_total = batch * numel3(step.in_dim);
+        let out_total = batch * numel3(step.out_dim);
+        let src_buf: &[i32] = &src_v[..in_total];
+        let dst_buf: &mut [i32] = &mut dst_v[..out_total];
+        let workers = self.workers.clamp(1, batch);
+        let per = batch.div_ceil(workers);
+
+        // --- phase 1: integer GEMM + per-worker |max| reduction ----------
+        struct Item<'a> {
+            img0: usize,
+            out: &'a mut [i32],
+            patches: &'a mut [i32],
+            amax: &'a mut i64,
+        }
+        let n_cells;
+        match geom {
+            Some(g) => {
+                let m_dim = g.oh * g.ow;
+                let k_dim = g.kh * g.kw * g.cin;
+                let img_out = m_dim * g.cout;
+                let tplan = gemm::cached_plan(w, k_dim, g.cout);
+                let hwc = (step.in_dim[0], step.in_dim[1], g.cin);
+                let mut items: Vec<Item> = dst_buf
+                    .chunks_mut(per * img_out)
+                    .zip(patches.chunks_mut(self.patch_len))
+                    .zip(amax.iter_mut())
+                    .enumerate()
+                    .map(|(wi, ((out, p), m))| {
+                        let (panel, _) = p.split_at_mut(m_dim * k_dim);
+                        Item { img0: wi * per, out, patches: panel, amax: m }
+                    })
+                    .collect();
+                n_cells = items.len();
+                pool::par_chunks_mut(&mut items, n_cells, |_, its| {
+                    for it in its.iter_mut() {
+                        let mut lm = 0i64;
+                        for (i, out_img) in it.out.chunks_mut(img_out).enumerate() {
+                            out_img.fill(0);
+                            gemm::im2col(
+                                src_buf,
+                                hwc,
+                                it.img0 + i,
+                                g.kh,
+                                g.kw,
+                                g.stride,
+                                g.pad_h,
+                                g.pad_w,
+                                g.oh,
+                                g.ow,
+                                it.patches,
+                            );
+                            match tplan {
+                                Some(p) => gemm::gemm_ternary(
+                                    it.patches, p, out_img, m_dim, k_dim, g.cout,
+                                ),
+                                None => gemm::gemm_i32(
+                                    it.patches,
+                                    &w.mantissa_i32,
+                                    out_img,
+                                    m_dim,
+                                    k_dim,
+                                    g.cout,
+                                ),
+                            }
+                            for &v in out_img.iter() {
+                                lm = lm.max((v as i64).abs());
+                            }
+                        }
+                        *it.amax = lm;
+                    }
+                });
+            }
+            None => {
+                let f_in = numel3(step.in_dim);
+                let f_out = step.out_dim[2];
+                let tplan = gemm::cached_plan(w, f_in, f_out);
+                let mut items: Vec<Item> = dst_buf
+                    .chunks_mut(per * f_out)
+                    .zip(amax.iter_mut())
+                    .enumerate()
+                    .map(|(wi, (out, m))| Item { img0: wi * per, out, patches: &mut [], amax: m })
+                    .collect();
+                n_cells = items.len();
+                pool::par_chunks_mut(&mut items, n_cells, |_, its| {
+                    for it in its.iter_mut() {
+                        it.out.fill(0);
+                        let rows = it.out.len() / f_out;
+                        let a = &src_buf[it.img0 * f_in..(it.img0 + rows) * f_in];
+                        match tplan {
+                            Some(p) => gemm::gemm_ternary(a, p, it.out, rows, f_in, f_out),
+                            None => gemm::gemm_i32(a, &w.mantissa_i32, it.out, rows, f_in, f_out),
+                        }
+                        let mut lm = 0i64;
+                        for &v in it.out.iter() {
+                            lm = lm.max((v as i64).abs());
+                        }
+                        *it.amax = lm;
+                    }
+                });
+            }
+        }
+        let amax1 = amax[..n_cells].iter().copied().max().unwrap_or(0);
+
+        // --- fused epilogue ---------------------------------------------
+        let cout = step.out_dim[2];
+        let shift1 = ops::shift_for_amax(amax1, 16);
+        let frac1 = fracs[step.src.0] + w.frac - shift1;
+        if let Some(b) = bias {
+            for (e, &v) in bias_enc.iter_mut().zip(b.iter()) {
+                *e = ops::enc32(v, frac1) as i64;
+            }
+        }
+        let bias_s: Option<&[i64]> = has_bias.then(|| &bias_enc[..cout]);
+        let bn_aff: Option<&QAffine> = bn.map(|bi| match &self.layers[bi] {
+            IntLayer::Bn(a) => a,
+            _ => unreachable!("absorbed BN index is not a BN layer"),
+        });
+        let rl = *relu;
+        let final_frac = if let Some(a) = bn_aff {
+            let prod_frac = a.a_frac + frac1;
+            for (e, &bm) in bn_enc.iter_mut().zip(a.b_mant.iter()) {
+                *e = ops::shift_to(bm, a.b_frac, prod_frac);
+            }
+            let (a_m, bn_b): (&[i32], &[i64]) = (&a.a_mant, &bn_enc[..cout]);
+            let amax2 = par_map_amax(dst_buf, amax, workers, |i, v| {
+                let ch = i % cout;
+                let mut t = fxp_round_shift(v as i64, shift1) as i32;
+                if let Some(bs) = bias_s {
+                    t = clamp_i32(t as i64 + bs[ch]);
+                }
+                clamp_i32(t as i64 * a_m[ch] as i64 + bn_b[ch])
+            });
+            let shift2 = ops::shift_for_amax(amax2, 16);
+            if shift2 > 0 || rl {
+                par_map_elems(dst_buf, workers, |_, v| {
+                    let t = fxp_round_shift(v as i64, shift2) as i32;
+                    if rl {
+                        t.max(0)
+                    } else {
+                        t
+                    }
+                });
+            }
+            prod_frac - shift2
+        } else {
+            if shift1 > 0 || *has_bias || rl {
+                par_map_elems(dst_buf, workers, |i, v| {
+                    let mut t = fxp_round_shift(v as i64, shift1) as i32;
+                    if let Some(bs) = bias_s {
+                        t = clamp_i32(t as i64 + bs[i % cout]);
+                    }
+                    if rl {
+                        t.max(0)
+                    } else {
+                        t
+                    }
+                });
+            }
+            frac1
+        };
+        fracs[step.dst.0] = final_frac;
+        Ok(())
+    }
+}
+
+/// Greedily absorb a BN and/or ReLU immediately following `li` into its
+/// fusion group. Absorption stops at a retention boundary: if the group's
+/// current tail must be kept for a later concat, its exact per-layer value
+/// is the contract, so nothing more may fuse past it.
+fn absorb(
+    layers: &[IntLayer],
+    retained: &BTreeSet<usize>,
+    li: usize,
+) -> (Option<usize>, bool, usize) {
+    let (mut bn, mut relu, mut last) = (None, false, li);
+    loop {
+        if retained.contains(&last) {
+            break;
+        }
+        match layers.get(last + 1) {
+            Some(IntLayer::Bn(_)) if bn.is_none() && !relu => {
+                bn = Some(last + 1);
+                last += 1;
+            }
+            Some(IntLayer::Relu) if !relu => {
+                relu = true;
+                last += 1;
+            }
+            _ => break,
+        }
+    }
+    (bn, relu, last)
+}
+
+fn check_bn(layers: &[IntLayer], bn: Option<usize>, cout: usize, li: usize) -> Result<()> {
+    if let Some(bi) = bn {
+        let IntLayer::Bn(a) = &layers[bi] else { unreachable!() };
+        ensure!(
+            a.a_mant.len() == cout,
+            "plan: BN channel mismatch after matmul layer {li}"
+        );
+    }
+    Ok(())
+}
+
+/// Parallel elementwise map over `data` (global element index passed so
+/// per-channel constants can be looked up with `idx % c`).
+fn par_map_elems<F>(data: &mut [i32], workers: usize, f: F)
+where
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    pool::par_chunks_mut(data, workers.clamp(1, data.len()), |off, chunk| {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = f(off + i, *v);
+        }
+    });
+}
+
+/// Parallel elementwise map that also reduces the |max| of the mapped
+/// values (the requantization statistic) through per-worker cells.
+fn par_map_amax<F>(data: &mut [i32], cells: &mut [i64], workers: usize, f: F) -> i64
+where
+    F: Fn(usize, i32) -> i32 + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return 0;
+    }
+    let workers = workers.clamp(1, n).min(cells.len().max(1));
+    let chunk = n.div_ceil(workers);
+    struct Cell<'a> {
+        off: usize,
+        d: &'a mut [i32],
+        m: &'a mut i64,
+    }
+    let mut items: Vec<Cell> = data
+        .chunks_mut(chunk)
+        .zip(cells.iter_mut())
+        .enumerate()
+        .map(|(wi, (d, m))| Cell { off: wi * chunk, d, m })
+        .collect();
+    let k = items.len();
+    pool::par_chunks_mut(&mut items, k, |_, its| {
+        for it in its.iter_mut() {
+            let mut lm = 0i64;
+            for (i, v) in it.d.iter_mut().enumerate() {
+                let t = f(it.off + i, *v);
+                *v = t;
+                lm = lm.max((t as i64).abs());
+            }
+            *it.m = lm;
+        }
+    });
+    drop(items);
+    cells[..k].iter().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_amax_matches_serial_any_worker_count() {
+        let base: Vec<i32> = (-40..60).collect();
+        let mut want = base.clone();
+        let mut cells = vec![0i64; 8];
+        let want_max = {
+            let mut m = 0i64;
+            for v in &mut want {
+                *v *= 3;
+                m = m.max((*v as i64).abs());
+            }
+            m
+        };
+        for workers in [1, 2, 3, 7] {
+            let mut got = base.clone();
+            let m = par_map_amax(&mut got, &mut cells, workers, |_, v| v * 3);
+            assert_eq!(got, want, "workers={workers}");
+            assert_eq!(m, want_max, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn par_map_elems_uses_global_indices() {
+        let mut data = vec![0i32; 100];
+        par_map_elems(&mut data, 7, |i, _| i as i32);
+        assert_eq!(data, (0..100).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn shared_divide_core_matches_shift_and_reciprocal() {
+        let acc: Vec<i64> = vec![0, 3, -3, 100, -101, 1 << 20];
+        let mut shifted = vec![0i32; acc.len()];
+        ops::divide_slice(&acc, 4, &mut shifted);
+        assert_eq!(shifted[1], 1); // 3/4 rounds half away -> 1
+        assert_eq!(shifted[2], -1);
+        let mut recip = vec![0i32; acc.len()];
+        ops::divide_slice(&acc, 9, &mut recip);
+        assert_eq!(recip[3], 11); // 100/9 = 11.1
+    }
+}

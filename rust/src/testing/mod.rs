@@ -1,5 +1,8 @@
 //! Property-testing helpers (proptest is not vendored; this is a focused
-//! replacement: seeded random-case generation with failure reporting).
+//! replacement: seeded random-case generation with failure reporting) and
+//! the in-code model zoo (`models`) shared by engine tests and benches.
+
+pub mod models;
 
 use crate::util::rng::Rng;
 

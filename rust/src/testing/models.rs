@@ -1,0 +1,380 @@
+//! In-code model zoo for engine tests and benchmarks.
+//!
+//! Builds (Manifest, Checkpoint) pairs directly — no compiled artifacts,
+//! no JSON files — with weights drawn from the exact N-bit codebook
+//! {-qmax..qmax} x delta, so `IntModel::build` round-trips them losslessly.
+//! Used by `tests/planned_exec.rs` and the interpret-vs-planned section of
+//! `benches/hotpath.rs`.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::{Checkpoint, Kind, Tensor};
+use crate::runtime::{LayerDesc, Manifest, ParamMeta, StateMeta};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Incremental (Manifest, Checkpoint) builder. Layer methods append both
+/// the manifest graph entry and the backing checkpoint tensors.
+pub struct ModelBuilder {
+    n_bits: u32,
+    delta: f32,
+    /// probability of the zero code per weight (None = uniform codebook)
+    zero_frac: Option<f32>,
+    input_shape: [usize; 3],
+    num_classes: usize,
+    params: Vec<ParamMeta>,
+    state: Vec<StateMeta>,
+    layers: Vec<LayerDesc>,
+    tensors: Vec<Tensor>,
+    n_quant: usize,
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> LayerDesc {
+    let map: BTreeMap<String, Json> =
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    LayerDesc(Json::Obj(map))
+}
+
+fn num(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+impl ModelBuilder {
+    pub fn new(input_shape: [usize; 3], num_classes: usize, n_bits: u32) -> ModelBuilder {
+        ModelBuilder {
+            n_bits,
+            delta: 0.25,
+            zero_frac: None,
+            input_shape,
+            num_classes,
+            params: Vec::new(),
+            state: Vec::new(),
+            layers: Vec::new(),
+            tensors: Vec::new(),
+            n_quant: 0,
+        }
+    }
+
+    /// Force a given zero-code occupancy (e.g. 0.8 to engage the sparse
+    /// ternary add/sub kernel at 2 bits).
+    pub fn zero_frac(&mut self, f: f32) -> &mut Self {
+        self.zero_frac = Some(f);
+        self
+    }
+
+    /// Index of the layer the next `conv`/`relu`/... call will create —
+    /// capture it before the call to wire a later `concat` to it.
+    pub fn next_layer_idx(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn codebook_weights(&self, rng: &mut Rng, n: usize) -> Vec<f32> {
+        let qmax = (1i32 << (self.n_bits - 1)) - 1;
+        (0..n)
+            .map(|_| {
+                if let Some(zf) = self.zero_frac {
+                    if rng.bool(zf) {
+                        return 0.0;
+                    }
+                    let m = 1 + rng.below(qmax as usize) as i32;
+                    let signed = if rng.bool(0.5) { m } else { -m };
+                    return signed as f32 * self.delta;
+                }
+                (rng.below((2 * qmax + 1) as usize) as i32 - qmax) as f32 * self.delta
+            })
+            .collect()
+    }
+
+    fn add_weight(&mut self, shape: &[usize], fan_in: usize, data: Vec<f32>) -> usize {
+        let idx = self.params.len();
+        let name = format!("p{idx}.w");
+        self.params.push(ParamMeta {
+            name: name.clone(),
+            shape: shape.to_vec(),
+            kind: "weight".into(),
+            qidx: Some(self.n_quant),
+            fan_in,
+        });
+        self.n_quant += 1;
+        self.tensors.push(Tensor { name, kind: Kind::Weight, dims: shape.to_vec(), data });
+        idx
+    }
+
+    fn add_aux(&mut self, kind: &str, ck_kind: Kind, shape: &[usize], data: Vec<f32>) -> usize {
+        let idx = self.params.len();
+        let name = format!("p{idx}.{kind}");
+        self.params.push(ParamMeta {
+            name: name.clone(),
+            shape: shape.to_vec(),
+            kind: kind.into(),
+            qidx: None,
+            fan_in: 0,
+        });
+        self.tensors.push(Tensor { name, kind: ck_kind, dims: shape.to_vec(), data });
+        idx
+    }
+
+    fn add_state(&mut self, tag: &str, c: usize, data: Vec<f32>) -> usize {
+        let idx = self.state.len();
+        let name = format!("s{idx}.{tag}");
+        self.state.push(StateMeta { name: name.clone(), shape: vec![c], init: 0.0 });
+        self.tensors.push(Tensor { name, kind: Kind::State, dims: vec![c], data });
+        idx
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        rng: &mut Rng,
+        k: usize,
+        cin: usize,
+        cout: usize,
+        stride: usize,
+        same: bool,
+        bias: bool,
+    ) -> &mut Self {
+        let data = self.codebook_weights(rng, k * k * cin * cout);
+        let w = self.add_weight(&[k, k, cin, cout], k * k * cin, data);
+        let b = bias.then(|| {
+            let data = (0..cout).map(|_| rng.normal() * 0.1).collect();
+            self.add_aux("bias", Kind::Bias, &[cout], data)
+        });
+        self.layers.push(obj(vec![
+            ("type", Json::Str("conv".into())),
+            ("w", num(w)),
+            ("b", b.map_or(Json::Null, num)),
+            ("stride", num(stride)),
+            ("padding", Json::Str(if same { "SAME" } else { "VALID" }.into())),
+        ]));
+        self
+    }
+
+    pub fn dense(&mut self, rng: &mut Rng, f_in: usize, f_out: usize, bias: bool) -> &mut Self {
+        let data = self.codebook_weights(rng, f_in * f_out);
+        let w = self.add_weight(&[f_in, f_out], f_in, data);
+        let b = bias.then(|| {
+            let data = (0..f_out).map(|_| rng.normal() * 0.1).collect();
+            self.add_aux("bias", Kind::Bias, &[f_out], data)
+        });
+        self.layers.push(obj(vec![
+            ("type", Json::Str("dense".into())),
+            ("w", num(w)),
+            ("b", b.map_or(Json::Null, num)),
+        ]));
+        self
+    }
+
+    pub fn bn(&mut self, rng: &mut Rng, c: usize) -> &mut Self {
+        let gamma: Vec<f32> = (0..c).map(|_| 1.0 + rng.normal() * 0.1).collect();
+        let beta: Vec<f32> = (0..c).map(|_| rng.normal() * 0.1).collect();
+        let mean: Vec<f32> = (0..c).map(|_| rng.normal() * 0.2).collect();
+        let var: Vec<f32> = (0..c).map(|_| 1.0 + rng.f32()).collect();
+        let g = self.add_aux("gamma", Kind::Gamma, &[c], gamma);
+        let b = self.add_aux("beta", Kind::Beta, &[c], beta);
+        let m = self.add_state("mean", c, mean);
+        let v = self.add_state("var", c, var);
+        self.layers.push(obj(vec![
+            ("type", Json::Str("bn".into())),
+            ("gamma", num(g)),
+            ("beta", num(b)),
+            ("mean", num(m)),
+            ("var", num(v)),
+        ]));
+        self
+    }
+
+    pub fn relu(&mut self) -> &mut Self {
+        self.layers.push(obj(vec![("type", Json::Str("relu".into()))]));
+        self
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize) -> &mut Self {
+        self.layers.push(obj(vec![
+            ("type", Json::Str("maxpool".into())),
+            ("k", num(k)),
+            ("stride", num(stride)),
+        ]));
+        self
+    }
+
+    pub fn avgpool(&mut self, k: usize, stride: usize) -> &mut Self {
+        self.layers.push(obj(vec![
+            ("type", Json::Str("avgpool".into())),
+            ("k", num(k)),
+            ("stride", num(stride)),
+        ]));
+        self
+    }
+
+    pub fn global_avgpool(&mut self) -> &mut Self {
+        self.layers.push(obj(vec![("type", Json::Str("global_avgpool".into()))]));
+        self
+    }
+
+    pub fn flatten(&mut self) -> &mut Self {
+        self.layers.push(obj(vec![("type", Json::Str("flatten".into()))]));
+        self
+    }
+
+    pub fn concat(&mut self, from: usize) -> &mut Self {
+        self.layers.push(obj(vec![
+            ("type", Json::Str("concat".into())),
+            ("from", num(from)),
+        ]));
+        self
+    }
+
+    pub fn finish(self, tag: &str) -> (Manifest, Checkpoint) {
+        let n_quant = self.n_quant.max(1);
+        let man = Manifest {
+            tag: tag.into(),
+            model: tag.into(),
+            method: "symog".into(),
+            dataset: "synth-mnist".into(),
+            width_mult: 1.0,
+            batch: 8,
+            n_bits: self.n_bits,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            clip: true,
+            input_shape: self.input_shape,
+            num_classes: self.num_classes,
+            n_quant,
+            params: self.params,
+            state: self.state,
+            layers: self.layers,
+        };
+        let mut ck = Checkpoint { meta: BTreeMap::new(), tensors: self.tensors };
+        ck.tensors.push(Tensor {
+            name: "__deltas__".into(),
+            kind: Kind::Deltas,
+            dims: vec![n_quant],
+            data: vec![self.delta; n_quant],
+        });
+        (man, ck)
+    }
+}
+
+/// LeNet5-shaped stack on a 16x16x1 input: conv5(SAME)+bias / relu /
+/// maxpool / conv5(VALID) / bn / relu / maxpool / flatten / dense / relu /
+/// dense. Exercises both paddings, bias, BN fusion and the dense head.
+pub fn lenet5ish(rng: &mut Rng, n_bits: u32) -> (Manifest, Checkpoint) {
+    let mut b = ModelBuilder::new([16, 16, 1], 10, n_bits);
+    b.conv(rng, 5, 1, 6, 1, true, true)
+        .relu()
+        .maxpool(2, 2)
+        .conv(rng, 5, 6, 16, 1, false, false)
+        .bn(rng, 16)
+        .relu()
+        .maxpool(2, 2)
+        .flatten()
+        .dense(rng, 2 * 2 * 16, 32, true)
+        .relu()
+        .dense(rng, 32, 10, true);
+    b.finish("lenet5ish")
+}
+
+/// DenseNet-shaped growth block on a 6x6x4 input: two channel concats
+/// (one chained off the other), retained relu/concat sources, avg pooling
+/// with a non-power-of-two global area (reciprocal divide path).
+pub fn densenetish(rng: &mut Rng, n_bits: u32) -> (Manifest, Checkpoint) {
+    let mut b = ModelBuilder::new([6, 6, 4], 10, n_bits);
+    b.conv(rng, 3, 4, 8, 1, true, false).bn(rng, 8);
+    let skip1 = b.next_layer_idx();
+    b.relu(); // layer `skip1`: first concat source
+    b.conv(rng, 3, 8, 8, 1, true, true).relu();
+    let skip2 = b.next_layer_idx();
+    b.concat(skip1); // layer `skip2`: 6x6x16, itself a concat source
+    b.conv(rng, 3, 16, 8, 1, true, false).bn(rng, 8).relu();
+    b.concat(skip2); // 6x6x24
+    b.avgpool(2, 2); // 3x3x24
+    b.global_avgpool(); // area 9: non-power-of-two reciprocal divide
+    b.flatten();
+    b.dense(rng, 24, 10, true);
+    b.finish("densenetish")
+}
+
+/// Deliberately awkward layer placements that defeat epilogue fusion:
+/// BN after a pool (standalone affine, in place), a *retained* flatten
+/// (concat source with no compute of its own), BN reading a retained
+/// concat output (standalone affine via copy), and ReLUs after BN and
+/// after concat (standalone, in-place and out-of-place). Exercises every
+/// non-fused step kind of the planned executor.
+pub fn oddball(rng: &mut Rng, n_bits: u32) -> (Manifest, Checkpoint) {
+    let mut b = ModelBuilder::new([6, 6, 4], 10, n_bits);
+    b.conv(rng, 3, 4, 6, 1, true, true); // 6x6x6
+    b.maxpool(2, 2); // 3x3x6
+    b.bn(rng, 6); // standalone affine after a pool
+    b.relu(); // standalone relu after a BN
+    let skip_flat = b.next_layer_idx();
+    b.flatten(); // [1,1,54], retained: pure Copy step
+    b.dense(rng, 54, 16, true); // [1,1,16]
+    let skip_cat = b.next_layer_idx();
+    b.concat(skip_flat); // [1,1,70], itself retained
+    b.bn(rng, 70); // affine reading a retained slot (copy branch)
+    b.relu(); // standalone relu, in place
+    b.dense(rng, 70, 16, true);
+    b.concat(skip_cat); // [1,1,86]
+    b.relu(); // standalone relu straight after a concat
+    b.dense(rng, 86, 10, true);
+    b.finish("oddball")
+}
+
+/// VGG7-shaped conv stack (width-scaled) for the interpret-vs-planned
+/// benchmark: 2x conv3-w / pool / 2x conv3-2w / pool / dense head, BN+ReLU
+/// after every conv.
+pub fn vgg7ish(rng: &mut Rng, n_bits: u32, width: usize) -> (Manifest, Checkpoint) {
+    let w = width;
+    let mut b = ModelBuilder::new([16, 16, 3], 10, n_bits);
+    b.conv(rng, 3, 3, w, 1, true, false)
+        .bn(rng, w)
+        .relu()
+        .conv(rng, 3, w, w, 1, true, false)
+        .bn(rng, w)
+        .relu()
+        .maxpool(2, 2)
+        .conv(rng, 3, w, 2 * w, 1, true, false)
+        .bn(rng, 2 * w)
+        .relu()
+        .conv(rng, 3, 2 * w, 2 * w, 1, true, false)
+        .bn(rng, 2 * w)
+        .relu()
+        .maxpool(2, 2)
+        .flatten()
+        .dense(rng, 4 * 4 * 2 * w, 128, true)
+        .relu()
+        .dense(rng, 128, 10, true);
+    b.finish("vgg7ish")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::IntModel;
+
+    #[test]
+    fn zoo_models_build_and_run() {
+        let mut rng = Rng::new(7);
+        for (man, ck) in [
+            lenet5ish(&mut rng, 2),
+            densenetish(&mut rng, 4),
+            oddball(&mut rng, 2),
+            vgg7ish(&mut rng, 2, 4),
+        ] {
+            let model = IntModel::build(&man, &ck).unwrap();
+            let [h, w, c] = man.input_shape;
+            let images: Vec<f32> = (0..2 * h * w * c).map(|_| rng.normal()).collect();
+            let (logits, counts) = model.forward(&images, 2).unwrap();
+            assert_eq!(logits.len(), 2 * man.num_classes);
+            assert!(counts.acc_adds > 0);
+        }
+    }
+
+    #[test]
+    fn two_bit_codebook_is_ternary() {
+        let mut rng = Rng::new(3);
+        let (man, ck) = lenet5ish(&mut rng, 2);
+        let model = IntModel::build(&man, &ck).unwrap();
+        assert!(model.all_ternary);
+    }
+}

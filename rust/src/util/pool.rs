@@ -4,9 +4,23 @@
 //! uses `std::thread::scope` chunking. The entry point is `par_chunks_mut`,
 //! which splits a mutable slice into one contiguous chunk per worker.
 
-/// Number of workers to use for host-side data parallelism.
+/// Number of workers to use for host-side data parallelism. Overridable
+/// with `SYMOG_WORKERS` (serving deployments pin this to their core
+/// budget; results never depend on it — only wall-clock does). The env
+/// var is read once per process — this sits on per-op hot paths.
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        if let Some(n) = std::env::var("SYMOG_WORKERS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            if n >= 1 {
+                return n.min(64);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    })
 }
 
 /// Run `f(offset, chunk)` over contiguous chunks of `data` on up to

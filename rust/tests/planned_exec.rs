@@ -1,0 +1,184 @@
+//! Planned-execution test suite: races `ExecPlan` (compile-then-execute,
+//! arena buffers, fused integer epilogues) against the interpreted
+//! `Backend::Naive` oracle and checks the planned executor's contracts:
+//!
+//! * bit-identical logits and identical `OpCounts` across n_bits, worker
+//!   counts, a concat/DenseNet-shaped model, and ragged final batches;
+//! * analytic `OpCounts` (no dummy forward) exactly equal to the counted
+//!   interpreter on LeNet5- and DenseNet-shaped models;
+//! * allocation discipline: zero arena growth across steady-state runs.
+
+use symog::inference::{Backend, IntModel};
+use symog::runtime::Manifest;
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+type ModelFn = fn(&mut Rng, u32) -> (Manifest, symog::coordinator::Checkpoint);
+
+const ZOO: &[(&str, ModelFn)] = &[
+    ("lenet5ish", models::lenet5ish as ModelFn),
+    ("densenetish", models::densenetish as ModelFn),
+    // fusion-hostile placements: post-pool BN, retained flatten, BN/ReLU
+    // on retained slots — covers every non-fused planned step kind
+    ("oddball", models::oddball as ModelFn),
+];
+
+fn input_elems(man: &Manifest) -> usize {
+    man.input_shape.iter().product()
+}
+
+#[test]
+fn planned_bit_identical_to_naive_across_bits_threads_and_models() {
+    for (name, build) in ZOO {
+        for n_bits in [2u32, 4, 8] {
+            let mut rng = Rng::new(0x9E3 ^ ((n_bits as u64) << 8));
+            let (man, ck) = build(&mut rng, n_bits);
+            let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+            let planned = IntModel::build(&man, &ck).unwrap();
+            assert_eq!(planned.backend, Backend::Planned);
+
+            let batch = 6usize;
+            let e = input_elems(&man);
+            let images: Vec<f32> = (0..batch * e).map(|_| rng.normal()).collect();
+            let (logits_n, counts_n) = naive.forward(&images, batch).unwrap();
+
+            for workers in [1usize, 2, 4] {
+                let plan = planned.plan(batch).unwrap().with_workers(workers);
+                let mut scratch = plan.scratch();
+                let logits_p = plan.run(&images, batch, &mut scratch).unwrap();
+                assert_eq!(
+                    logits_p, logits_n,
+                    "{name} n_bits={n_bits} workers={workers}: logits diverged"
+                );
+                assert_eq!(
+                    plan.op_counts(batch),
+                    counts_n,
+                    "{name} n_bits={n_bits} workers={workers}: OpCounts diverged"
+                );
+            }
+
+            // the public forward() routes through the cached plan and must
+            // agree too (logits AND counts)
+            let (logits_f, counts_f) = planned.forward(&images, batch).unwrap();
+            assert_eq!(logits_f, logits_n, "{name} n_bits={n_bits}: forward() diverged");
+            assert_eq!(counts_f, counts_n);
+
+            // and the per-call interpreted GEMM backend stays on the oracle
+            let gemm = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Gemm);
+            let (logits_g, counts_g) = gemm.forward(&images, batch).unwrap();
+            assert_eq!(logits_g, logits_n);
+            assert_eq!(counts_g, counts_n);
+        }
+    }
+}
+
+#[test]
+fn ragged_final_batch_smaller_than_max_batch() {
+    let mut rng = Rng::new(0x5EED);
+    let (man, ck) = models::densenetish(&mut rng, 2);
+    let planned = IntModel::build(&man, &ck).unwrap();
+    let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+    let e = input_elems(&man);
+    let images: Vec<f32> = (0..8 * e).map(|_| rng.normal()).collect();
+
+    let plan = planned.plan(8).unwrap();
+    let mut scratch = plan.scratch();
+    for batch in [8usize, 5, 1] {
+        let logits_p = plan.run(&images[..batch * e], batch, &mut scratch).unwrap();
+        let (logits_n, counts_n) = naive.forward(&images[..batch * e], batch).unwrap();
+        assert_eq!(logits_p, logits_n, "batch={batch}");
+        assert_eq!(plan.op_counts(batch), counts_n, "batch={batch}");
+    }
+
+    // through the public API: 7 images at batch 4 ends on a ragged 3
+    let labels: Vec<i32> = (0..7).map(|i| i % 10).collect();
+    let acc_p = planned.accuracy(&images[..7 * e], &labels, 4).unwrap();
+    let acc_n = naive.accuracy(&images[..7 * e], &labels, 4).unwrap();
+    assert_eq!(acc_p, acc_n);
+}
+
+#[test]
+fn analytic_op_counts_match_counted_forward_exactly() {
+    for (name, build) in ZOO {
+        let mut rng = Rng::new(0xC057);
+        let (man, ck) = build(&mut rng, 2);
+        let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+        let planned = IntModel::build(&man, &ck).unwrap();
+        let e = input_elems(&man);
+        for batch in [1usize, 4] {
+            let images: Vec<f32> = (0..batch * e).map(|_| rng.normal()).collect();
+            let (_, counted) = naive.forward(&images, batch).unwrap();
+            // cost_report executes NO forward — its counts come from the plan
+            let report = planned.cost_report(batch).unwrap();
+            assert_eq!(
+                report.counts, counted,
+                "{name} batch={batch}: analytic OpCounts != counted forward"
+            );
+            assert_eq!(report.float_macs, counted.acc_adds);
+        }
+    }
+}
+
+#[test]
+fn steady_state_runs_never_grow_the_arena() {
+    let mut rng = Rng::new(0xA110C);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let plan = model.plan(8).unwrap();
+    let mut scratch = plan.scratch();
+    let e = input_elems(&man);
+    let images: Vec<f32> = (0..8 * e).map(|_| rng.normal()).collect();
+
+    plan.run(&images, 8, &mut scratch).unwrap();
+    let fingerprint = scratch.fingerprint();
+    assert!(scratch.arena_bytes() > 0);
+    for batch in [8usize, 8, 3, 8, 1] {
+        plan.run(&images[..batch * e], batch, &mut scratch).unwrap();
+        assert_eq!(
+            fingerprint,
+            scratch.fingerprint(),
+            "arena reallocated on a steady-state run (batch={batch})"
+        );
+    }
+}
+
+#[test]
+fn scratch_is_bound_to_its_plan() {
+    let mut rng = Rng::new(0xB0);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let plan_a = model.plan(2).unwrap();
+    let plan_b = model.plan(2).unwrap();
+    let e = input_elems(&man);
+    let images: Vec<f32> = (0..2 * e).map(|_| rng.normal()).collect();
+    let mut scratch_b = plan_b.scratch();
+    assert!(plan_a.run(&images, 2, &mut scratch_b).is_err());
+    assert!(plan_b.run(&images, 2, &mut scratch_b).is_ok());
+}
+
+#[test]
+fn plan_metadata_reports_fusion_and_arena() {
+    let mut rng = Rng::new(0xF0);
+    let (man, ck) = models::vgg7ish(&mut rng, 2, 4);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let plan = model.plan(4).unwrap();
+    // 19 layers fuse into: 4 conv groups + 2 pools + 2 dense groups = 8
+    assert!(plan.num_steps() < 19, "no fusion happened: {}", plan.num_steps());
+    assert_eq!(plan.max_batch(), 4);
+    assert!(plan.arena_bytes() > 0);
+    // sparse 2-bit weights engage the ternary path; logits must still
+    // match the oracle
+    let mut rng = Rng::new(0xF1);
+    let mut b = models::ModelBuilder::new([8, 8, 2], 10, 2);
+    b.zero_frac(0.8);
+    b.conv(&mut rng, 3, 2, 8, 1, true, true).relu().flatten().dense(&mut rng, 512, 10, true);
+    let (man, ck) = b.finish("sparse");
+    let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+    let planned = IntModel::build(&man, &ck).unwrap();
+    let images: Vec<f32> = (0..3 * 128).map(|_| rng.normal()).collect();
+    let (ln, cn) = naive.forward(&images, 3).unwrap();
+    let (lp, cp) = planned.forward(&images, 3).unwrap();
+    assert_eq!(lp, ln);
+    assert_eq!(cp, cn);
+    assert_eq!(cn.int_mults, 0, "sparse ternary model must be multiply-free");
+}

@@ -1,7 +1,7 @@
 //! CI smoke test: build a tiny `IntModel` from an in-code manifest +
 //! checkpoint (no compiled artifacts needed), run a forward pass on a
-//! synthetic batch, and assert the naive and GEMM conv/dense paths produce
-//! bit-identical logits and identical op counts.
+//! synthetic batch, and assert the planned, interpreted-GEMM and naive
+//! paths produce bit-identical logits and identical op counts.
 
 use symog::coordinator::{Checkpoint, Kind, Tensor};
 use symog::inference::{Backend, IntModel};
@@ -70,23 +70,27 @@ fn smoke_checkpoint(rng: &mut Rng) -> Checkpoint {
 }
 
 #[test]
-fn gemm_and_naive_paths_bit_identical() {
+fn planned_gemm_and_naive_paths_bit_identical() {
     let man = Manifest::parse(MANIFEST).unwrap();
     let mut rng = Rng::new(0xBEEF);
     let ck = smoke_checkpoint(&mut rng);
 
-    let gemm = IntModel::build(&man, &ck).unwrap();
-    assert_eq!(gemm.backend, Backend::Gemm, "GEMM must be the default backend");
-    assert!(gemm.all_ternary, "2-bit smoke weights must be ternary");
+    let planned = IntModel::build(&man, &ck).unwrap();
+    assert_eq!(planned.backend, Backend::Planned, "planned must be the default backend");
+    assert!(planned.all_ternary, "2-bit smoke weights must be ternary");
+    let gemm = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Gemm);
     let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
 
     let batch = 8usize;
     let images: Vec<f32> = (0..batch * 8 * 8 * 2).map(|_| rng.normal()).collect();
+    let (logits_p, counts_p) = planned.forward(&images, batch).unwrap();
     let (logits_g, counts_g) = gemm.forward(&images, batch).unwrap();
     let (logits_n, counts_n) = naive.forward(&images, batch).unwrap();
 
     assert_eq!(logits_g.len(), batch * 10);
+    assert_eq!(logits_p, logits_n, "planned and naive logits must be bit-identical");
     assert_eq!(logits_g, logits_n, "GEMM and naive logits must be bit-identical");
+    assert_eq!(counts_p, counts_n, "analytic op accounting must match the counted oracle");
     assert_eq!(counts_g, counts_n, "op accounting must not depend on the backend");
     // ternary conv/dense count zero multiplies; the only remaining ones
     // come from the folded-BN affine (one per activation: 8 x 2 x 2 x 6)
@@ -94,8 +98,10 @@ fn gemm_and_naive_paths_bit_identical() {
     assert!(counts_g.acc_adds > 0);
 
     // predictions agree too (same logits => same argmax)
+    let pp = planned.predict(&images, batch).unwrap();
     let pg = gemm.predict(&images, batch).unwrap();
     let pn = naive.predict(&images, batch).unwrap();
+    assert_eq!(pp, pn);
     assert_eq!(pg, pn);
 }
 
