@@ -6,9 +6,11 @@
 //! Sections:
 //!   1. integer conv/dense: naive loops vs im2col + blocked GEMM on
 //!      VGG7-shaped layers, plus interpret-vs-planned whole-model forwards
-//!      (`ExecPlan` arena + fused epilogues vs the per-call GEMM walk).
-//!      Bit-identity asserted; emits BENCH_hotpath.json at the repo root
-//!      so the perf trajectory is tracked PR over PR.
+//!      (`ExecPlan` arena + fused epilogues vs the per-call GEMM walk),
+//!      plus f32 training steps (conv fwd+bwd) naive-vs-GEMM on the same
+//!      shapes. Bit-identity asserted for the integer kernels; emits
+//!      BENCH_hotpath.json at the repo root so the perf trajectory is
+//!      tracked PR over PR.
 //!   2. train-step latency breakdown (batch assembly / literal upload /
 //!      execute) for the lenet5 artifact — the L3 coordinator target is
 //!      <10% of step time outside `execute`.
@@ -28,6 +30,7 @@ use symog::inference::{
 };
 use symog::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Runtime};
 use symog::testing::models;
+use symog::train::ops as tops;
 use symog::util::json::Json;
 use symog::util::rng::Rng;
 
@@ -278,6 +281,8 @@ fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
         report.push(s_p);
     }
 
+    train_step_benches(report, &mut cases_json);
+
     let min = conv_speedups.iter().copied().fold(f64::INFINITY, f64::min);
     let geomean =
         (conv_speedups.iter().map(|s| s.ln()).sum::<f64>() / conv_speedups.len() as f64).exp();
@@ -296,6 +301,92 @@ fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
     std::fs::write(&out, Json::Obj(top).to_string() + "\n")?;
     println!("-> {}", out.display());
     Ok(())
+}
+
+/// One f32 training-step comparison case (stride-1 SAME conv, VGG7-shaped).
+struct TrainCase {
+    name: &'static str,
+    batch: usize,
+    h: usize,
+    cin: usize,
+    cout: usize,
+}
+
+const TRAIN_CASES: &[TrainCase] = &[
+    // VGG7 mid-stack shape
+    TrainCase { name: "train conv3 16x16 64->64 b8", batch: 8, h: 16, cin: 64, cout: 64 },
+    // VGG7 top-stack shape
+    TrainCase { name: "train conv5 8x8 128->128 b8", batch: 8, h: 8, cin: 128, cout: 128 },
+];
+
+/// Native-training hot path: sequential naive conv fwd+bwd vs the shared
+/// packed-panel GEMM path (im2col GEMM forward; dy·Wᵀ + col2im and
+/// patchesᵀ·dy backward, batch-parallel with the deterministic cell
+/// reduction). Gradient agreement is asserted before timing; the speedup
+/// ratio feeds the `train_step` bench_check floor cases.
+fn train_step_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) {
+    println!("--- native training hot path (naive loops vs shared GEMM core) ---");
+    for case in TRAIN_CASES {
+        let mut rng = Rng::new(0x7261);
+        let s = tops::Conv2dShape {
+            h: case.h,
+            w: case.h,
+            cin: case.cin,
+            k: 3,
+            stride: 1,
+            cout: case.cout,
+        };
+        let batch = case.batch;
+        // post-ReLU-shaped activations: exact zeros exercise both skips
+        let x: Vec<f32> = (0..s.in_elems(batch))
+            .map(|_| if rng.bool(0.4) { 0.0 } else { rng.normal() })
+            .collect();
+        let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal() * 0.1).collect();
+        let b: Vec<f32> = (0..s.cout).map(|_| rng.normal() * 0.1).collect();
+        let dy: Vec<f32> = (0..s.out_elems(batch)).map(|_| rng.normal() * 0.1).collect();
+        let macs = (s.out_elems(batch) * s.k * s.k * s.cin) as u64 * 3; // fwd + dx + dw
+
+        // correctness gate before timing anything (coarse here — the
+        // 2048-term reductions amplify f32 ordering noise; the tight
+        // epsilon races live in the train::ops property tests)
+        let yg = tops::conv2d_forward(&x, &w, &b, batch, &s);
+        let yn = tops::conv2d_forward_naive(&x, &w, &b, batch, &s);
+        symog::testing::assert_allclose_rel(&yg, &yn, 1e-3, 1e-3);
+        let (dxg, dwg, dbg) = tops::conv2d_backward(&x, &w, &dy, batch, &s);
+        let (dxn, dwn, dbn) = tops::conv2d_backward_naive(&x, &w, &dy, batch, &s);
+        symog::testing::assert_allclose_rel(&dxg, &dxn, 1e-3, 1e-3);
+        symog::testing::assert_allclose_rel(&dwg, &dwn, 1e-3, 1e-3);
+        symog::testing::assert_allclose_rel(&dbg, &dbn, 1e-3, 1e-3);
+
+        let naive = bench(&format!("naive {}", case.name), 1, 3, || {
+            std::hint::black_box(tops::conv2d_forward_naive(&x, &w, &b, batch, &s));
+            std::hint::black_box(tops::conv2d_backward_naive(&x, &w, &dy, batch, &s));
+        });
+        let gemm = bench(&format!("gemm  {}", case.name), 1, 6, || {
+            std::hint::black_box(tops::conv2d_forward(&x, &w, &b, batch, &s));
+            std::hint::black_box(tops::conv2d_backward(&x, &w, &dy, batch, &s));
+        });
+        let speedup = naive.median_s / gemm.median_s;
+        println!(
+            "{}\n{}\n  -> {:.1} GMAC/s vs {:.1} GMAC/s: {:.2}x speedup (target >= 3x)",
+            naive.row(),
+            gemm.row(),
+            macs as f64 / naive.median_s / 1e9,
+            macs as f64 / gemm.median_s / 1e9,
+            speedup,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(case.name.to_string()));
+        o.insert("kind".to_string(), Json::Str("train_step".to_string()));
+        o.insert("batch".to_string(), json_num(batch as f64));
+        o.insert("macs".to_string(), json_num(macs as f64));
+        o.insert("naive_s".to_string(), json_num(naive.median_s));
+        o.insert("gemm_s".to_string(), json_num(gemm.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        cases_json.push(Json::Obj(o));
+        report.push(naive);
+        report.push(gemm);
+    }
 }
 
 fn substrate_benches(report: &mut Vec<Stats>) {

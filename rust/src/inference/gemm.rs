@@ -3,21 +3,24 @@
 //! The direct convolution loops (kept as `ops::conv2d_naive` for
 //! cross-checking and benchmarking) walk the input once per kernel tap and
 //! re-stream the whole weight tensor for every output pixel. This module
-//! restructures conv/dense as matrix multiplication:
+//! restructures conv/dense as matrix multiplication on top of the shared
+//! scalar-generic core in [`crate::kernels`]:
 //!
 //! * **im2col**: each image's receptive fields are gathered into a dense
-//!   patch matrix `A[oh*ow, kh*kw*cin]` (padding becomes literal zeros, so
-//!   the inner loops are branch-free);
-//! * **blocked GEMM**: `C += A * B` with `B = `HWIO mantissas reshaped to
-//!   `[kh*kw*cin, cout]` (no copy needed — that IS the HWIO layout). The
-//!   kernel processes `MR = 4` output rows at a time so each loaded weight
-//!   row is reused fourfold from registers, and blocks the depth dimension
-//!   to keep the active weight panel cache-resident;
+//!   patch matrix `A[oh*ow, kh*kw*cin]` (`kernels::im2col` — padding
+//!   becomes literal zeros, and the memset is skipped entirely for
+//!   unpadded geometries);
+//! * **packed-panel GEMM**: the HWIO mantissas reshaped to
+//!   `[kh*kw*cin, cout]` are packed once per weight into `NR`-column
+//!   panels ([`cached_packed`], warmed at `ExecPlan` build time) and
+//!   `kernels::gemm_packed` runs the `MR x NR` register-blocked,
+//!   depth-blocked kernel over them;
 //! * **ternary fast path**: when every mantissa is in {-1, 0, +1} *and* the
 //!   zero mode is well occupied, the weight matrix is transposed once into
 //!   sign-separated index lists and each MAC degenerates to a pure integer
 //!   add or subtract — the paper's fixed-point hardware claim, executed
-//!   literally;
+//!   literally. The add/sub kernel is register-blocked over `MR` rows too,
+//!   so each walk of the index lists feeds four images' worth of output;
 //! * **batch parallelism**: images are independent, so the batch dimension
 //!   is fanned out over `util::pool::par_chunks_mut`.
 //!
@@ -25,95 +28,17 @@
 //! results are bit-identical (asserted by property tests here and the
 //! `smoke_engine` integration test).
 
+pub(crate) use crate::kernels::{conv_geometry, im2col};
+
+use crate::kernels::{self, MR, PackedB};
 use crate::util::pool;
 
 use super::ops::{QTensor, QWeight};
-
-/// Rows of `C` processed together by the register-blocked micro-kernel.
-const MR: usize = 4;
-
-/// Depth-block size: the active `B` panel is `KC * cols` i32 wide.
-const KC: usize = 256;
 
 /// Engage the add/sub ternary kernel only when at least this fraction of
 /// the weight mantissas is zero — below that, the vectorized multiply
 /// kernel wins on contemporary SIMD hardware.
 const TERNARY_MIN_ZERO_FRAC: f32 = 0.5;
-
-/// `C[rows, cols] += A[rows, depth] * B[depth, cols]`, all row-major.
-pub(crate) fn gemm_i32(
-    a: &[i32],
-    b: &[i32],
-    c: &mut [i32],
-    rows: usize,
-    depth: usize,
-    cols: usize,
-) {
-    debug_assert_eq!(a.len(), rows * depth);
-    debug_assert_eq!(b.len(), depth * cols);
-    debug_assert_eq!(c.len(), rows * cols);
-    for d0 in (0..depth).step_by(KC) {
-        let d1 = (d0 + KC).min(depth);
-        for (ab, cb) in a.chunks(MR * depth).zip(c.chunks_mut(MR * cols)) {
-            if cb.len() == MR * cols {
-                micro_kernel_4(ab, b, cb, depth, cols, d0, d1);
-            } else {
-                // remainder rows (< MR)
-                for (a_row, c_row) in ab.chunks(depth).zip(cb.chunks_mut(cols)) {
-                    accumulate_row(a_row, b, c_row, cols, d0, d1);
-                }
-            }
-        }
-    }
-}
-
-/// One `C` row: `c += sum_k a[k] * B[k, :]` over the depth block.
-#[inline]
-fn accumulate_row(a_row: &[i32], b: &[i32], c_row: &mut [i32], cols: usize, d0: usize, d1: usize) {
-    for (kk, &xv) in a_row[d0..d1].iter().enumerate() {
-        if xv == 0 {
-            continue;
-        }
-        let b_row = &b[(d0 + kk) * cols..(d0 + kk + 1) * cols];
-        for (cv, &bv) in c_row.iter_mut().zip(b_row) {
-            *cv += xv * bv;
-        }
-    }
-}
-
-/// Four `C` rows at once: each loaded `B` row is reused from registers for
-/// all four activations, quartering weight-panel memory traffic.
-#[inline]
-fn micro_kernel_4(
-    ab: &[i32],
-    b: &[i32],
-    cb: &mut [i32],
-    depth: usize,
-    cols: usize,
-    d0: usize,
-    d1: usize,
-) {
-    let (a0, rest) = ab.split_at(depth);
-    let (a1, rest) = rest.split_at(depth);
-    let (a2, a3) = rest.split_at(depth);
-    let (c0, rest) = cb.split_at_mut(cols);
-    let (c1, rest) = rest.split_at_mut(cols);
-    let (c2, c3) = rest.split_at_mut(cols);
-    for kk in d0..d1 {
-        let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-        if (x0 | x1 | x2 | x3) == 0 {
-            continue;
-        }
-        let b_row = &b[kk * cols..(kk + 1) * cols];
-        for j in 0..cols {
-            let bv = b_row[j];
-            c0[j] += x0 * bv;
-            c1[j] += x1 * bv;
-            c2[j] += x2 * bv;
-            c3[j] += x3 * bv;
-        }
-    }
-}
 
 /// Sign-separated sparse view of a ternary weight matrix: per depth row,
 /// the column indices holding +1 and -1. A MAC against it is an add or a
@@ -159,7 +84,11 @@ impl TernaryPlan {
     }
 }
 
-/// `C += A * B` where `B` is ternary, as pure adds/subtracts.
+/// `C += A * B` where `B` is ternary, as pure adds/subtracts. Register-
+/// blocked over `MR = 4` A-rows: the +1/-1 index lists of a depth row are
+/// walked once and applied to four output rows, instead of re-walked per
+/// row. Adding `xv = 0` is the integer identity, so no per-row zero test
+/// is needed inside the list walk.
 pub(crate) fn gemm_ternary(
     a: &[i32],
     plan: &TernaryPlan,
@@ -170,80 +99,65 @@ pub(crate) fn gemm_ternary(
 ) {
     debug_assert_eq!(a.len(), rows * depth);
     debug_assert_eq!(c.len(), rows * cols);
-    for (a_row, c_row) in a.chunks(depth).zip(c.chunks_mut(cols)) {
-        for (kk, &xv) in a_row.iter().enumerate() {
-            if xv == 0 {
-                continue;
-            }
-            let p = plan.plus_off[kk] as usize..plan.plus_off[kk + 1] as usize;
-            for &j in &plan.plus[p] {
-                c_row[j as usize] += xv;
-            }
-            let m = plan.minus_off[kk] as usize..plan.minus_off[kk + 1] as usize;
-            for &j in &plan.minus[m] {
-                c_row[j as usize] -= xv;
+    for (ab, cb) in a.chunks(MR * depth).zip(c.chunks_mut(MR * cols)) {
+        if ab.len() == MR * depth {
+            ternary_kernel_4(ab, plan, cb, depth, cols);
+        } else {
+            // remainder rows (< MR)
+            for (a_row, c_row) in ab.chunks(depth).zip(cb.chunks_mut(cols)) {
+                ternary_row(a_row, plan, c_row);
             }
         }
     }
 }
 
-/// SAME/VALID output geometry shared by the naive and GEMM conv paths.
-pub(crate) fn conv_geometry(
-    h: usize,
-    w: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad_same: bool,
-) -> (usize, usize, usize, usize) {
-    if pad_same {
-        let oh = h.div_ceil(stride);
-        let ow = w.div_ceil(stride);
-        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
-        let pw = ((ow - 1) * stride + kw).saturating_sub(w);
-        (oh, ow, ph / 2, pw / 2)
-    } else {
-        ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0)
+/// Four output rows per index-list walk.
+#[inline]
+fn ternary_kernel_4(ab: &[i32], plan: &TernaryPlan, cb: &mut [i32], depth: usize, cols: usize) {
+    let (a0, rest) = ab.split_at(depth);
+    let (a1, rest) = rest.split_at(depth);
+    let (a2, a3) = rest.split_at(depth);
+    let (c0, rest) = cb.split_at_mut(cols);
+    let (c1, rest) = rest.split_at_mut(cols);
+    let (c2, c3) = rest.split_at_mut(cols);
+    for kk in 0..depth {
+        let (x0, x1, x2, x3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+        if (x0 | x1 | x2 | x3) == 0 {
+            continue;
+        }
+        let p = plan.plus_off[kk] as usize..plan.plus_off[kk + 1] as usize;
+        for &j in &plan.plus[p] {
+            let j = j as usize;
+            c0[j] += x0;
+            c1[j] += x1;
+            c2[j] += x2;
+            c3[j] += x3;
+        }
+        let m = plan.minus_off[kk] as usize..plan.minus_off[kk + 1] as usize;
+        for &j in &plan.minus[m] {
+            let j = j as usize;
+            c0[j] -= x0;
+            c1[j] -= x1;
+            c2[j] -= x2;
+            c3[j] -= x3;
+        }
     }
 }
 
-/// Gather one image's receptive fields into the patch matrix
-/// `patches[oh*ow, kh*kw*cin]`. Out-of-range taps stay zero. Takes raw
-/// slices so the planned executor can feed arena buffers directly.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn im2col(
-    x: &[i32],
-    (h, w, cin): (usize, usize, usize),
-    batch: usize,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad_h: usize,
-    pad_w: usize,
-    oh: usize,
-    ow: usize,
-    patches: &mut [i32],
-) {
-    let k_dim = kh * kw * cin;
-    patches.fill(0);
-    for oy in 0..oh {
-        for ox in 0..ow {
-            let row = (oy * ow + ox) * k_dim;
-            for ky in 0..kh {
-                let iy = (oy * stride + ky) as isize - pad_h as isize;
-                if !(0..h as isize).contains(&iy) {
-                    continue;
-                }
-                for kx in 0..kw {
-                    let ix = (ox * stride + kx) as isize - pad_w as isize;
-                    if !(0..w as isize).contains(&ix) {
-                        continue;
-                    }
-                    let src = ((batch * h + iy as usize) * w + ix as usize) * cin;
-                    let dst = row + (ky * kw + kx) * cin;
-                    patches[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
-                }
-            }
+/// Single-row add/sub walk (remainder rows).
+#[inline]
+fn ternary_row(a_row: &[i32], plan: &TernaryPlan, c_row: &mut [i32]) {
+    for (kk, &xv) in a_row.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        let p = plan.plus_off[kk] as usize..plan.plus_off[kk + 1] as usize;
+        for &j in &plan.plus[p] {
+            c_row[j as usize] += xv;
+        }
+        let m = plan.minus_off[kk] as usize..plan.minus_off[kk + 1] as usize;
+        for &j in &plan.minus[m] {
+            c_row[j as usize] -= xv;
         }
     }
 }
@@ -269,8 +183,17 @@ pub(crate) fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&Ter
         .as_ref()
 }
 
-/// Raw conv accumulators via im2col + GEMM, parallel over the batch.
-/// Returns `[n, oh, ow, cout]` i32 sums — bit-identical to the naive loops.
+/// The weight's packed `B` panels, built once per `QWeight` and cached —
+/// inference weights are immutable, so the pack happens at most once per
+/// process (`ExecPlan` warms it at plan-build time for every non-ternary
+/// matmul so no forward ever pays for it).
+pub(crate) fn cached_packed(w: &QWeight, depth: usize, cols: usize) -> &PackedB<i32> {
+    w.packed_b.get_or_init(|| kernels::pack_b(&w.mantissa_i32, depth, cols))
+}
+
+/// Raw conv accumulators via im2col + packed-panel GEMM, parallel over the
+/// batch. Returns `[n, oh, ow, cout]` i32 sums — bit-identical to the
+/// naive loops.
 pub(crate) fn conv2d_acc(
     x: &QTensor,
     w: &QWeight,
@@ -289,6 +212,7 @@ pub(crate) fn conv2d_acc(
         return acc;
     }
     let plan = cached_plan(w, k_dim, cout);
+    let packed = plan.is_none().then(|| cached_packed(w, k_dim, cout));
     let mut views: Vec<&mut [i32]> = acc.chunks_mut(m_dim * cout).collect();
     let workers = pool::default_workers().clamp(1, views.len());
     pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
@@ -299,15 +223,15 @@ pub(crate) fn conv2d_acc(
             im2col(&x.data, hwc, b, kh, kw, stride, pad_h, pad_w, oh, ow, &mut patches);
             match plan {
                 Some(p) => gemm_ternary(&patches, p, out_img, m_dim, k_dim, cout),
-                None => gemm_i32(&patches, &w.mantissa_i32, out_img, m_dim, k_dim, cout),
+                None => kernels::gemm_packed(&patches, packed.unwrap(), out_img, m_dim),
             }
         }
     });
     acc
 }
 
-/// Raw dense accumulators `[n, f_out]` via blocked GEMM, parallel over
-/// batch-row blocks. Bit-identical to the naive loops.
+/// Raw dense accumulators `[n, f_out]` via packed-panel GEMM, parallel
+/// over batch-row blocks. Bit-identical to the naive loops.
 pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
     let n = x.dims[0];
     let f_in = x.numel() / n.max(1);
@@ -317,6 +241,7 @@ pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
         return acc;
     }
     let plan = cached_plan(w, f_in, f_out);
+    let packed = plan.is_none().then(|| cached_packed(w, f_in, f_out));
     let workers = pool::default_workers().clamp(1, n);
     let rows_per_block = n.div_ceil(workers);
     let mut views: Vec<&mut [i32]> = acc.chunks_mut(rows_per_block * f_out).collect();
@@ -327,7 +252,7 @@ pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
             let a = &x.data[row0 * f_in..(row0 + rows) * f_in];
             match plan {
                 Some(p) => gemm_ternary(a, p, out_block, rows, f_in, f_out),
-                None => gemm_i32(a, &w.mantissa_i32, out_block, rows, f_in, f_out),
+                None => kernels::gemm_packed(a, packed.unwrap(), out_block, rows),
             }
         }
     });
@@ -355,23 +280,9 @@ mod tests {
     }
 
     #[test]
-    fn prop_blocked_gemm_matches_schoolbook() {
-        forall(24, |rng: &mut Rng| {
-            let rows = 1 + rng.below(13);
-            let depth = 1 + rng.below(300);
-            let cols = 1 + rng.below(40);
-            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(21) as i32 - 10).collect();
-            let b: Vec<i32> = (0..depth * cols).map(|_| rng.below(7) as i32 - 3).collect();
-            let mut c = vec![0i32; rows * cols];
-            gemm_i32(&a, &b, &mut c, rows, depth, cols);
-            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols));
-        });
-    }
-
-    #[test]
     fn prop_ternary_plan_matches_dense() {
         forall(24, |rng: &mut Rng| {
-            let rows = 1 + rng.below(9);
+            let rows = 1 + rng.below(11);
             let depth = 1 + rng.below(120);
             let cols = 1 + rng.below(33);
             let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(31) as i32 - 15).collect();
@@ -380,7 +291,7 @@ mod tests {
             assert_eq!(plan.nonzeros(), b.iter().filter(|&&m| m != 0).count());
             let mut c = vec![0i32; rows * cols];
             gemm_ternary(&a, &plan, &mut c, rows, depth, cols);
-            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols));
+            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols), "{rows}x{depth}x{cols}");
         });
     }
 
@@ -466,5 +377,16 @@ mod tests {
         if qw.mantissa.iter().filter(|&&m| m == 0).count() * 2 < qw.mantissa.len() {
             assert!(!use_ternary_plan(&qw));
         }
+    }
+
+    #[test]
+    fn packed_panels_cached_once_per_weight() {
+        let mut rng = Rng::new(9);
+        let ws: Vec<f32> = (0..32 * 20).map(|_| rng.normal() * 0.4).collect();
+        let qw = QWeight::encode(&ws, [32, 20, 1, 1], 0.25, 8);
+        let p1 = cached_packed(&qw, 32, 20) as *const PackedB<i32>;
+        let p2 = cached_packed(&qw, 32, 20) as *const PackedB<i32>;
+        assert_eq!(p1, p2, "pack must happen once and be cached");
+        assert_eq!(cached_packed(&qw, 32, 20).cols, 20);
     }
 }

@@ -90,6 +90,9 @@ pub struct QWeight {
     /// lazily-built sign-separated index plan for the ternary add/sub
     /// GEMM kernel (None once built = "use the multiply kernel")
     pub(crate) ternary_plan: std::sync::OnceLock<Option<super::gemm::TernaryPlan>>,
+    /// lazily-built packed B panels for the multiply kernel — weights are
+    /// immutable, so the pack cost is paid at most once (ExecPlan warms it)
+    pub(crate) packed_b: std::sync::OnceLock<crate::kernels::PackedB<i32>>,
 }
 
 impl QWeight {
@@ -107,7 +110,14 @@ impl QWeight {
             })
             .collect();
         let mantissa_i32 = mantissa.iter().map(|&m| m as i32).collect();
-        QWeight { mantissa, mantissa_i32, frac, dims, ternary_plan: std::sync::OnceLock::new() }
+        QWeight {
+            mantissa,
+            mantissa_i32,
+            frac,
+            dims,
+            ternary_plan: std::sync::OnceLock::new(),
+            packed_b: std::sync::OnceLock::new(),
+        }
     }
 
     /// Are all mantissas in {-1, 0, 1}? (True for 2-bit SYMOG — multiplies

@@ -1,0 +1,512 @@
+//! Shared blocked-GEMM core — one register-blocked kernel, two scalar types.
+//!
+//! The integer inference engine and the f32 native trainer run the same
+//! matrix shapes (im2col patches x HWIO weight panels), so the blocked
+//! kernel lives here once, generic over [`GemmScalar`]:
+//!
+//! * **packed B panels** ([`PackedB`]): the `[depth, cols]` operand is
+//!   repacked once into `NR`-column panels (`[panel][k][NR]`, zero-padded
+//!   at the ragged edge) so the micro-kernel streams one contiguous,
+//!   cache-resident panel instead of striding whole `B` rows. Inference
+//!   packs at `ExecPlan` build time (weights are immutable); training
+//!   packs per layer call (O(|B|) against the O(rows x |B|) GEMM it
+//!   feeds, and weights change every step).
+//! * **register blocking**: `MR = 4` A-rows x `NR = 16` panel columns of
+//!   accumulators per micro-kernel step — each loaded panel row is reused
+//!   `MR`-fold from registers, each A value `NR`-fold.
+//! * **depth blocking**: `KC`-deep slabs keep the active panel slice
+//!   small; per output element the depth summation order is ascending
+//!   within a slab and slabs ascend, so results are reproducible run to
+//!   run for f32 and bit-exact (order-free) for i32.
+//! * zero A values are skipped (ReLU sparsity on both the integer
+//!   activations and the f32 training activations).
+//!
+//! `im2col`/`col2im`/`conv_geometry` sit next to the kernel because both
+//! hot paths lower convolution through them: forward as patches x weights,
+//! the training backward as dy x Wᵀ followed by a `col2im` scatter (dx)
+//! and patchesᵀ x dy (dw).
+
+/// A-rows processed together by the micro-kernel.
+pub const MR: usize = 4;
+
+/// Panel width: columns of `C` accumulated together in registers.
+pub const NR: usize = 16;
+
+/// Depth-block size: the active panel slab is `KC * NR` scalars.
+pub const KC: usize = 256;
+
+/// Scalar a GEMM can run on. Implementations must keep `madd`/`add` the
+/// plain `acc + a * b` / `a + b` of the type — the kernels rely on
+/// nothing else, so i32 stays exact and f32 matches the naive loops up
+/// to summation order.
+pub trait GemmScalar: Copy + Send + Sync + PartialEq + 'static {
+    const ZERO: Self;
+    /// `acc + a * b`.
+    fn madd(a: Self, b: Self, acc: Self) -> Self;
+    fn add(a: Self, b: Self) -> Self;
+    #[inline]
+    fn is_zero(self) -> bool {
+        self == Self::ZERO
+    }
+}
+
+impl GemmScalar for i32 {
+    const ZERO: i32 = 0;
+    #[inline]
+    fn madd(a: i32, b: i32, acc: i32) -> i32 {
+        acc + a * b
+    }
+    #[inline]
+    fn add(a: i32, b: i32) -> i32 {
+        a + b
+    }
+}
+
+impl GemmScalar for f32 {
+    const ZERO: f32 = 0.0;
+    #[inline]
+    fn madd(a: f32, b: f32, acc: f32) -> f32 {
+        acc + a * b
+    }
+    #[inline]
+    fn add(a: f32, b: f32) -> f32 {
+        a + b
+    }
+}
+
+/// A `[depth, cols]` GEMM operand repacked into `NR`-column panels:
+/// `data[panel][k][0..NR]`, the ragged last panel zero-padded. The
+/// micro-kernel reads `NR` consecutive scalars per depth step regardless
+/// of the original `cols` stride.
+#[derive(Clone, Debug)]
+pub struct PackedB<T> {
+    data: Vec<T>,
+    pub depth: usize,
+    pub cols: usize,
+}
+
+impl<T: GemmScalar> PackedB<T> {
+    fn panels(&self) -> std::slice::Chunks<'_, T> {
+        self.data.chunks(self.depth * NR)
+    }
+
+    /// (Re)fill from a row-major `[depth, cols]` matrix, reusing the
+    /// allocation — hot loops that repack a *changing* operand (the
+    /// training dw GEMM's per-image dy panels) pay no per-call Vec.
+    pub fn repack(&mut self, b: &[T], depth: usize, cols: usize) {
+        debug_assert_eq!(b.len(), depth * cols);
+        self.depth = depth;
+        self.cols = cols;
+        self.data.clear();
+        if depth == 0 || cols == 0 {
+            return;
+        }
+        let n_panels = cols.div_ceil(NR);
+        // clear-then-resize zeroes everything, so ragged-edge panel
+        // padding is ZERO no matter what the buffer held before
+        self.data.resize(n_panels * depth * NR, T::ZERO);
+        for (pi, panel) in self.data.chunks_mut(depth * NR).enumerate() {
+            let j0 = pi * NR;
+            let jn = NR.min(cols - j0);
+            for k in 0..depth {
+                panel[k * NR..k * NR + jn].copy_from_slice(&b[k * cols + j0..k * cols + j0 + jn]);
+            }
+        }
+    }
+}
+
+/// Pack a row-major `[depth, cols]` matrix into panels.
+pub fn pack_b<T: GemmScalar>(b: &[T], depth: usize, cols: usize) -> PackedB<T> {
+    let mut p = PackedB { data: Vec::new(), depth, cols };
+    p.repack(b, depth, cols);
+    p
+}
+
+/// Pack the *transpose* of a row-major `[rows, cols]` matrix: the result
+/// is `bᵀ` as a `[cols, rows]` operand (`depth = cols`, `cols = rows`).
+/// The strided reads happen once here so the GEMM inner loop never does.
+pub fn pack_b_transposed<T: GemmScalar>(b: &[T], rows: usize, cols: usize) -> PackedB<T> {
+    debug_assert_eq!(b.len(), rows * cols);
+    let (depth, pcols) = (cols, rows);
+    if depth == 0 || pcols == 0 {
+        return PackedB { data: Vec::new(), depth, cols: pcols };
+    }
+    let n_panels = pcols.div_ceil(NR);
+    let mut data = vec![T::ZERO; n_panels * depth * NR];
+    for (pi, panel) in data.chunks_mut(depth * NR).enumerate() {
+        let j0 = pi * NR;
+        let jn = NR.min(pcols - j0);
+        for k in 0..depth {
+            let prow = &mut panel[k * NR..k * NR + jn];
+            for (j, pv) in prow.iter_mut().enumerate() {
+                *pv = b[(j0 + j) * cols + k];
+            }
+        }
+    }
+    PackedB { data, depth, cols: pcols }
+}
+
+/// `C[rows, b.cols] += A[rows, b.depth] * B` with `B` pre-packed. Row-major
+/// `A`/`C`; accumulates into `C` so callers can pre-fill bias rows or chain
+/// partial products.
+pub fn gemm_packed<T: GemmScalar>(a: &[T], b: &PackedB<T>, c: &mut [T], rows: usize) {
+    debug_assert_eq!(a.len(), rows * b.depth);
+    debug_assert_eq!(c.len(), rows * b.cols);
+    let depth = b.depth;
+    if depth == 0 || b.cols == 0 || rows == 0 {
+        return;
+    }
+    for k0 in (0..depth).step_by(KC) {
+        let k1 = (k0 + KC).min(depth);
+        let mut i0 = 0;
+        while i0 < rows {
+            let rm = MR.min(rows - i0);
+            for (pi, panel) in b.panels().enumerate() {
+                let j0 = pi * NR;
+                let jn = NR.min(b.cols - j0);
+                micro_kernel(a, i0, rm, depth, panel, k0, k1, c, j0, jn, b.cols);
+            }
+            i0 += rm;
+        }
+    }
+}
+
+/// `rm x NR` accumulator tile over one depth slab of one panel. `acc` is
+/// always full `MR x NR` (the panel's zero padding makes the extra lanes
+/// no-ops); the write-back trims to the live `rm` rows and `jn` columns.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel<T: GemmScalar>(
+    a: &[T],
+    i0: usize,
+    rm: usize,
+    depth: usize,
+    panel: &[T],
+    k0: usize,
+    k1: usize,
+    c: &mut [T],
+    j0: usize,
+    jn: usize,
+    cols: usize,
+) {
+    let mut acc = [[T::ZERO; NR]; MR];
+    let mut arows: [&[T]; MR] = [&[]; MR];
+    for (i, ar) in arows.iter_mut().enumerate().take(rm) {
+        *ar = &a[(i0 + i) * depth..(i0 + i + 1) * depth];
+    }
+    for k in k0..k1 {
+        let brow = &panel[k * NR..(k + 1) * NR];
+        for (ar, row) in arows.iter().zip(acc.iter_mut()).take(rm) {
+            let av = ar[k];
+            if av.is_zero() {
+                continue;
+            }
+            for (r, &bv) in row.iter_mut().zip(brow) {
+                *r = T::madd(av, bv, *r);
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate().take(rm) {
+        let crow = &mut c[(i0 + i) * cols + j0..(i0 + i) * cols + j0 + jn];
+        for (cv, &av) in crow.iter_mut().zip(row) {
+            *cv = T::add(*cv, av);
+        }
+    }
+}
+
+/// `dst[cols, rows] = src[rows, cols]ᵀ` — scratch transpose for the
+/// training dw GEMM (patchesᵀ x dy).
+pub fn transpose<T: GemmScalar>(src: &[T], rows: usize, cols: usize, dst: &mut [T]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for i in 0..rows {
+        for (j, &v) in src[i * cols..(i + 1) * cols].iter().enumerate() {
+            dst[j * rows + i] = v;
+        }
+    }
+}
+
+/// SAME/VALID output geometry shared by every conv path (integer naive,
+/// integer GEMM, planned executor, f32 training): `(oh, ow, pad_top,
+/// pad_left)`. TF convention — excess SAME padding goes after.
+pub fn conv_geometry(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_same: bool,
+) -> (usize, usize, usize, usize) {
+    if pad_same {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let ph = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pw = ((ow - 1) * stride + kw).saturating_sub(w);
+        (oh, ow, ph / 2, pw / 2)
+    } else {
+        ((h - kh) / stride + 1, (w - kw) / stride + 1, 0, 0)
+    }
+}
+
+/// Gather image `img`'s receptive fields from NHWC `x` into the patch
+/// matrix `patches[oh*ow, kh*kw*cin]`. Out-of-range taps are zeroed up
+/// front — but only when some tap actually falls outside the image: when
+/// every receptive field lies fully inside (VALID convs and
+/// stride-aligned SAME convs), every patch element is overwritten and the
+/// full-buffer memset is skipped. The coverage test must also check the
+/// bottom/right edge: SAME padding is asymmetric (TF convention), so
+/// `pad == 0` alone does not prove taps cannot run past `h`/`w`.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col<T: GemmScalar>(
+    x: &[T],
+    (h, w, cin): (usize, usize, usize),
+    img: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+    patches: &mut [T],
+) {
+    let k_dim = kh * kw * cin;
+    debug_assert!(patches.len() >= oh * ow * k_dim);
+    let fully_covered = pad_h == 0
+        && pad_w == 0
+        && oh.saturating_sub(1) * stride + kh <= h
+        && ow.saturating_sub(1) * stride + kw <= w;
+    if !fully_covered {
+        patches.fill(T::ZERO);
+    }
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k_dim;
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - pad_h as isize;
+                if !(0..h as isize).contains(&iy) {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as isize - pad_w as isize;
+                    if !(0..w as isize).contains(&ix) {
+                        continue;
+                    }
+                    let src = ((img * h + iy as usize) * w + ix as usize) * cin;
+                    let dst = row + (ky * kw + kx) * cin;
+                    patches[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`] for a single image: scatter-add the patch-matrix
+/// gradient `dpatches[oh*ow, kh*kw*cin]` back into the image gradient
+/// `dx[h*w*cin]` (one image's slice). Taps that fell in the padding are
+/// simply not scattered. Scatter order is the fixed (oy, ox, ky, kx)
+/// walk, so results never depend on thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im<T: GemmScalar>(
+    dpatches: &[T],
+    (h, w, cin): (usize, usize, usize),
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad_h: usize,
+    pad_w: usize,
+    oh: usize,
+    ow: usize,
+    dx: &mut [T],
+) {
+    let k_dim = kh * kw * cin;
+    debug_assert!(dpatches.len() >= oh * ow * k_dim);
+    debug_assert_eq!(dx.len(), h * w * cin);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * k_dim;
+            for ky in 0..kh {
+                let iy = (oy * stride + ky) as isize - pad_h as isize;
+                if !(0..h as isize).contains(&iy) {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * stride + kx) as isize - pad_w as isize;
+                    if !(0..w as isize).contains(&ix) {
+                        continue;
+                    }
+                    let dst = (iy as usize * w + ix as usize) * cin;
+                    let src = row + (ky * kw + kx) * cin;
+                    for (d, &g) in dx[dst..dst + cin].iter_mut().zip(&dpatches[src..src + cin]) {
+                        *d = T::add(*d, g);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Schoolbook `C += A * B` reference, generic like the kernel.
+    fn gemm_ref<T: GemmScalar>(a: &[T], b: &[T], rows: usize, depth: usize, cols: usize) -> Vec<T> {
+        let mut c = vec![T::ZERO; rows * cols];
+        for i in 0..rows {
+            for kk in 0..depth {
+                for j in 0..cols {
+                    c[i * cols + j] = T::madd(a[i * depth + kk], b[kk * cols + j], c[i * cols + j]);
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn prop_packed_gemm_i32_matches_schoolbook_exactly() {
+        crate::testing::forall(24, |rng: &mut Rng| {
+            let rows = 1 + rng.below(13);
+            let depth = 1 + rng.below(300);
+            let cols = 1 + rng.below(40);
+            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(21) as i32 - 10).collect();
+            let b: Vec<i32> = (0..depth * cols).map(|_| rng.below(7) as i32 - 3).collect();
+            let bp = pack_b(&b, depth, cols);
+            let mut c = vec![0i32; rows * cols];
+            gemm_packed(&a, &bp, &mut c, rows);
+            assert_eq!(c, gemm_ref(&a, &b, rows, depth, cols), "{rows}x{depth}x{cols}");
+        });
+    }
+
+    #[test]
+    fn prop_packed_gemm_f32_matches_schoolbook() {
+        crate::testing::forall(24, |rng: &mut Rng| {
+            let rows = 1 + rng.below(10);
+            let depth = 1 + rng.below(280);
+            let cols = 1 + rng.below(37);
+            // mix in exact zeros so the sparsity skip is exercised
+            let a: Vec<f32> = (0..rows * depth)
+                .map(|_| if rng.bool(0.3) { 0.0 } else { rng.normal() })
+                .collect();
+            let b: Vec<f32> = (0..depth * cols).map(|_| rng.normal() * 0.5).collect();
+            let bp = pack_b(&b, depth, cols);
+            let mut c = vec![0f32; rows * cols];
+            gemm_packed(&a, &bp, &mut c, rows);
+            let want = gemm_ref(&a, &b, rows, depth, cols);
+            crate::testing::assert_allclose_rel(&c, &want, 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let a = [1i32, 2, 3, 4];
+        let b = [1i32, 0, 0, 1];
+        let bp = pack_b(&b, 2, 2);
+        let mut c = vec![10i32; 4];
+        gemm_packed(&a, &bp, &mut c, 2);
+        assert_eq!(c, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn prop_transposed_pack_equals_packing_the_transpose() {
+        crate::testing::forall(12, |rng: &mut Rng| {
+            let rows = 1 + rng.below(30);
+            let cols = 1 + rng.below(30);
+            let b: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let mut bt = vec![0f32; rows * cols];
+            transpose(&b, rows, cols, &mut bt);
+            let via_transpose = pack_b(&bt, cols, rows);
+            let direct = pack_b_transposed(&b, rows, cols);
+            assert_eq!(direct.depth, via_transpose.depth);
+            assert_eq!(direct.cols, via_transpose.cols);
+            assert_eq!(direct.data, via_transpose.data);
+        });
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let src: Vec<i32> = (0..12).collect();
+        let mut t = vec![0i32; 12];
+        transpose(&src, 3, 4, &mut t);
+        assert_eq!(t[0], 0); // [0,0]
+        assert_eq!(t[1], 4); // [0,1] = src[1,0]
+        let mut back = vec![0i32; 12];
+        transpose(&t, 4, 3, &mut back);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn im2col_memset_skip_never_leaks_stale_data() {
+        // the memset skip is only sound if every element is written: run
+        // im2col into a poisoned buffer and compare against a fresh one.
+        // Cases cover VALID, zero-pad SAME, and the treacherous
+        // asymmetric-SAME shapes (pad_top == 0 but bottom/right taps run
+        // past the image — e.g. k=3 s=2 on even h, the native convnet's
+        // downsampling conv) where the fill MUST still happen.
+        let mut rng = Rng::new(41);
+        for (h, w, k, stride, pad_same) in [
+            (7usize, 5usize, 3usize, 1usize, false), // VALID
+            (8, 6, 2, 2, true),                      // SAME, zero pad, full coverage
+            (4, 4, 1, 1, true),                      // SAME 1x1
+            (8, 8, 3, 2, true),                      // SAME, pad_top 0, bottom tap out of range
+            (6, 6, 3, 1, true),                      // SAME, symmetric pad 1
+        ] {
+            let cin = 3;
+            let x: Vec<i32> = (0..2 * h * w * cin).map(|_| rng.below(100) as i32 - 50).collect();
+            let (oh, ow, ph, pw) = conv_geometry(h, w, k, k, stride, pad_same);
+            let len = oh * ow * k * k * cin;
+            let mut fresh = vec![0i32; len];
+            im2col(&x, (h, w, cin), 1, k, k, stride, ph, pw, oh, ow, &mut fresh);
+            let mut dirty = vec![i32::MIN; len];
+            im2col(&x, (h, w, cin), 1, k, k, stride, ph, pw, oh, ow, &mut dirty);
+            assert_eq!(fresh, dirty, "stale data leaked at {h}x{w} k{k} s{stride}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), p> == <x, col2im(p)> for random x, p — the defining
+        // property of the scatter, covering padded and unpadded geometry
+        let mut rng = Rng::new(7);
+        for pad_same in [false, true] {
+            let (h, w, cin, k, stride) = (6usize, 5usize, 2usize, 3usize, 2usize);
+            let (oh, ow, ph, pw) = conv_geometry(h, w, k, k, stride, pad_same);
+            let k_dim = k * k * cin;
+            let x: Vec<f32> = (0..h * w * cin).map(|_| rng.normal()).collect();
+            let p: Vec<f32> = (0..oh * ow * k_dim).map(|_| rng.normal()).collect();
+            let mut gathered = vec![0f32; oh * ow * k_dim];
+            im2col(&x, (h, w, cin), 0, k, k, stride, ph, pw, oh, ow, &mut gathered);
+            let lhs: f64 =
+                gathered.iter().zip(&p).map(|(&g, &pv)| g as f64 * pv as f64).sum();
+            let mut scattered = vec![0f32; h * w * cin];
+            col2im(&p, (h, w, cin), k, k, stride, ph, pw, oh, ow, &mut scattered);
+            let rhs: f64 = x.iter().zip(&scattered).map(|(&xv, &s)| xv as f64 * s as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn repack_reuses_buffer_and_matches_fresh_pack() {
+        let mut rng = Rng::new(5);
+        let big: Vec<f32> = (0..6 * 40).map(|_| rng.normal()).collect();
+        let mut p = pack_b(&big, 6, 40);
+        // shrink onto a smaller ragged shape: stale data must not leak
+        // into the new panels' zero padding
+        let small: Vec<f32> = (0..3 * 5).map(|_| rng.normal()).collect();
+        p.repack(&small, 3, 5);
+        let fresh = pack_b(&small, 3, 5);
+        assert_eq!(p.data, fresh.data);
+        assert_eq!((p.depth, p.cols), (3, 5));
+    }
+
+    #[test]
+    fn ragged_panel_edges_are_zero_padded() {
+        let b: Vec<i32> = (1..=2 * 5).collect(); // depth 2, cols 5 (< NR)
+        let bp = pack_b(&b, 2, 5);
+        assert_eq!(bp.data.len(), 2 * NR);
+        assert_eq!(&bp.data[..5], &[1, 2, 3, 4, 5]);
+        assert!(bp.data[5..NR].iter().all(|&v| v == 0));
+        assert_eq!(&bp.data[NR..NR + 5], &[6, 7, 8, 9, 10]);
+    }
+}

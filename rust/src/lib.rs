@@ -16,6 +16,7 @@ pub mod config;
 pub mod driver;
 pub mod fixedpoint;
 pub mod inference;
+pub mod kernels;
 pub mod quant;
 pub mod report;
 pub mod runtime;

@@ -8,7 +8,9 @@
 //! "the learning task and the quantization are solved simultaneously"
 //! loop executable with nothing but this crate.
 //!
-//! * `ops`     — forward + backward primitives (NHWC / HWIO layouts)
+//! * `ops`     — forward + backward primitives (NHWC / HWIO layouts) on
+//!   the shared `crate::kernels` packed-panel GEMM core, batch-parallel
+//!   with a deterministic fixed-cell `dw`/`db` reduction
 //! * `model`   — sequential model, He init, checkpoint interop
 //! * `sgd`     — Nesterov + fused SYMOG update (Alg. 1 lines 14-17)
 //! * `symog`   — regularizer value/gradient + mode-concentration probes

@@ -1,10 +1,96 @@
 //! f32 forward/backward primitives for the native training backend.
 //!
 //! Layouts match the AOT side: activations are NHWC, conv weights are HWIO,
-//! dense weights are [in, out] row-major. All loops are plain sequential
-//! Rust — deterministic regardless of thread count, and fast enough for the
-//! tiny-to-small models the native backend targets (the integer GEMM hot
-//! path stays the inference engine's job).
+//! dense weights are [in, out] row-major. Since the shared-GEMM refactor
+//! the hot paths run through `crate::kernels` — the same `MR x NR`
+//! register-blocked, packed-panel GEMM core the integer inference engine
+//! uses — batch-parallel over `util::pool` (worker count from
+//! `SYMOG_WORKERS` / `pool::default_workers`):
+//!
+//! * `dense_forward` / `conv2d_forward`: (im2col +) GEMM against packed
+//!   weight panels, images/row-blocks fanned out across workers;
+//! * `dense_backward` / `conv2d_backward`: `dx` as a GEMM against packed
+//!   transposed weights (conv adds a `col2im` scatter), `dw` as
+//!   patchesᵀ x dy GEMMs, `db` as row sums;
+//! * **determinism**: `dw`/`db` are reduced through a *fixed* number of
+//!   partial-sum cells ([`REDUCE_CELLS`], a function of the batch only)
+//!   that are combined serially in cell order — results are bit-identical
+//!   for every worker count, which the worker-invariance tests (and the
+//!   PR-2 seed-calibrated smoke margins) rely on.
+//!
+//! The original sequential triple loops are retained as `*_naive` oracles;
+//! property tests race the two families (tight epsilon — f32 summation
+//! order differs under blocking) and the finite-difference gradient checks
+//! run against the GEMM path.
+
+use crate::kernels;
+use crate::util::pool;
+
+/// Fixed partial-sum cell count for the `dw`/`db` reductions. Parallelism
+/// for the weight gradient is capped here, but the cell population and the
+/// serial cell-order reduce depend only on the batch — never on the worker
+/// count — so gradients are bit-reproducible on any machine configuration.
+const REDUCE_CELLS: usize = 8;
+
+/// Contiguous image ranges of the fixed reduction cells (empty cells
+/// dropped). A pure function of `batch`.
+fn cell_ranges(batch: usize) -> Vec<(usize, usize)> {
+    let cells = batch.min(REDUCE_CELLS).max(1);
+    let per = batch.div_ceil(cells);
+    (0..cells)
+        .map(|c| (c * per, ((c + 1) * per).min(batch)))
+        .filter(|(b0, b1)| b0 < b1)
+        .collect()
+}
+
+/// Serially combine per-cell `(dw, db)` partials in cell order — the
+/// determinism-critical half of the reduction, defined once for the dense
+/// and conv backward paths.
+fn sum_cells(partials: &[(Vec<f32>, Vec<f32>)], dw: &mut [f32], db: &mut [f32]) {
+    for (dw_c, db_c) in partials {
+        for (d, &v) in dw.iter_mut().zip(dw_c) {
+            *d += v;
+        }
+        for (d, &v) in db.iter_mut().zip(db_c) {
+            *d += v;
+        }
+    }
+}
+
+/// `db += ` column sums of a row-major `rows x cols` block, row order.
+fn add_row_sums(dy: &[f32], cols: usize, db: &mut [f32]) {
+    for row in dy.chunks(cols) {
+        for (d, &v) in db.iter_mut().zip(row) {
+            *d += v;
+        }
+    }
+}
+
+/// `C[batch, bp.cols] += A[batch, bp.depth] * B`, fanned out over
+/// contiguous row blocks (one per worker). Per-row results are independent
+/// of the blocking, so any worker count yields identical bits.
+fn par_gemm_rows(
+    a: &[f32],
+    bp: &kernels::PackedB<f32>,
+    c: &mut [f32],
+    batch: usize,
+    workers: usize,
+) {
+    if batch == 0 || bp.cols == 0 {
+        return;
+    }
+    let width = bp.cols;
+    let workers = workers.clamp(1, batch);
+    let rows_per = batch.div_ceil(workers);
+    let mut views: Vec<&mut [f32]> = c.chunks_mut(rows_per * width).collect();
+    pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
+        for (bi, block) in chunk.iter_mut().enumerate() {
+            let r0 = (offset + bi) * rows_per;
+            let rows = block.len() / width;
+            kernels::gemm_packed(&a[r0 * bp.depth..(r0 + rows) * bp.depth], bp, block, rows);
+        }
+    });
+}
 
 /// Static geometry of one conv layer (batch is supplied per call).
 #[derive(Clone, Copy, Debug)]
@@ -22,11 +108,8 @@ impl Conv2dShape {
     /// (out_h, out_w, pad_top, pad_left), delegating to the single SAME
     /// geometry implementation shared with the integer inference engine —
     /// a trained checkpoint and the engine can never disagree on shapes.
-    fn geometry(&self) -> (usize, usize, i64, i64) {
-        let (oh, ow, pt, pl) = crate::inference::gemm::conv_geometry(
-            self.h, self.w, self.k, self.k, self.stride, true,
-        );
-        (oh, ow, pt as i64, pl as i64)
+    fn geometry(&self) -> (usize, usize, usize, usize) {
+        kernels::conv_geometry(self.h, self.w, self.k, self.k, self.stride, true)
     }
 
     /// SAME-padding output height: ceil(h / stride).
@@ -36,15 +119,6 @@ impl Conv2dShape {
 
     pub fn out_w(&self) -> usize {
         self.geometry().1
-    }
-
-    /// SAME padding before the top row (TF convention: excess goes after).
-    fn pad_top(&self) -> i64 {
-        self.geometry().2
-    }
-
-    fn pad_left(&self) -> i64 {
-        self.geometry().3
     }
 
     pub fn in_elems(&self, batch: usize) -> usize {
@@ -60,8 +134,50 @@ impl Conv2dShape {
     }
 }
 
-/// y[b, out] = x[b, in] · w[in, out] + bias[out].
+// ---------------------------------------------------------------------------
+// dense
+
+/// y[b, out] = x[b, in] · w[in, out] + bias[out] — packed-panel GEMM,
+/// batch-row-parallel with `pool::default_workers()` workers.
 pub fn dense_forward(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+) -> Vec<f32> {
+    dense_forward_with(x, w, bias, batch, fin, fout, pool::default_workers())
+}
+
+/// [`dense_forward`] with an explicit worker count (results are
+/// bit-identical for any value; this tunes wall-clock only).
+pub fn dense_forward_with(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+    workers: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * fin);
+    debug_assert_eq!(w.len(), fin * fout);
+    debug_assert_eq!(bias.len(), fout);
+    let mut y = vec![0f32; batch * fout];
+    if batch == 0 || fout == 0 {
+        return y;
+    }
+    for row in y.chunks_mut(fout) {
+        row.copy_from_slice(bias);
+    }
+    let bp = kernels::pack_b(w, fin, fout);
+    par_gemm_rows(x, &bp, &mut y, batch, workers);
+    y
+}
+
+/// Reference loops for [`dense_forward`] (the oracle the GEMM path races).
+pub fn dense_forward_naive(
     x: &[f32],
     w: &[f32],
     bias: &[f32],
@@ -90,8 +206,63 @@ pub fn dense_forward(
     y
 }
 
-/// Gradients of `dense_forward`: returns (dx, dw, dbias).
+/// Gradients of `dense_forward`: returns (dx, dw, dbias). `dx = dy · wᵀ`
+/// batch-parallel; `dw = xᵀ · dy` and `db` through the fixed reduction
+/// cells (bit-identical for any worker count).
 pub fn dense_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dense_backward_with(x, w, dy, batch, fin, fout, pool::default_workers())
+}
+
+/// [`dense_backward`] with an explicit worker count.
+pub fn dense_backward_with(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    batch: usize,
+    fin: usize,
+    fout: usize,
+    workers: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), batch * fin);
+    debug_assert_eq!(w.len(), fin * fout);
+    debug_assert_eq!(dy.len(), batch * fout);
+    let workers = workers.max(1);
+    let mut dx = vec![0f32; batch * fin];
+    let mut dw = vec![0f32; fin * fout];
+    let mut db = vec![0f32; fout];
+    if batch == 0 || fout == 0 {
+        return (dx, dw, db);
+    }
+    // dx = dy · wᵀ, independent per batch row
+    let wt = kernels::pack_b_transposed(w, fin, fout); // depth fout, cols fin
+    par_gemm_rows(dy, &wt, &mut dx, batch, workers);
+    // dw/db: per-cell partials in image order, then a serial cell-order sum
+    let ranges = cell_ranges(batch);
+    let partials = pool::par_map(ranges.len(), workers, |ci| {
+        let (b0, b1) = ranges[ci];
+        let bc = b1 - b0;
+        let mut dw_c = vec![0f32; fin * fout];
+        let mut db_c = vec![0f32; fout];
+        let mut xt = vec![0f32; fin * bc];
+        kernels::transpose(&x[b0 * fin..b1 * fin], bc, fin, &mut xt);
+        let dyp = kernels::pack_b(&dy[b0 * fout..b1 * fout], bc, fout);
+        kernels::gemm_packed(&xt, &dyp, &mut dw_c, fin);
+        add_row_sums(&dy[b0 * fout..b1 * fout], fout, &mut db_c);
+        (dw_c, db_c)
+    });
+    sum_cells(&partials, &mut dw, &mut db);
+    (dx, dw, db)
+}
+
+/// Reference loops for [`dense_backward`].
+pub fn dense_backward_naive(
     x: &[f32],
     w: &[f32],
     dy: &[f32],
@@ -129,8 +300,71 @@ pub fn dense_backward(
     (dx, dw, db)
 }
 
-/// NHWC conv with HWIO weights, SAME padding, square stride.
+// ---------------------------------------------------------------------------
+// conv2d
+
+/// NHWC conv with HWIO weights, SAME padding, square stride — im2col +
+/// packed-panel GEMM, parallel over the batch.
 pub fn conv2d_forward(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+) -> Vec<f32> {
+    conv2d_forward_with(x, wt, bias, batch, s, pool::default_workers())
+}
+
+/// [`conv2d_forward`] with an explicit worker count.
+pub fn conv2d_forward_with(
+    x: &[f32],
+    wt: &[f32],
+    bias: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+    workers: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), s.in_elems(batch));
+    debug_assert_eq!(wt.len(), s.weight_elems());
+    debug_assert_eq!(bias.len(), s.cout);
+    let (oh, ow, ph, pw) = s.geometry();
+    let k_dim = s.k * s.k * s.cin;
+    let m_dim = oh * ow;
+    let mut y = vec![0f32; s.out_elems(batch)];
+    if batch == 0 || m_dim == 0 || s.cout == 0 {
+        return y;
+    }
+    let bp = kernels::pack_b(wt, k_dim, s.cout);
+    let mut views: Vec<&mut [f32]> = y.chunks_mut(m_dim * s.cout).collect();
+    let workers = workers.clamp(1, views.len());
+    pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
+        let mut patches = vec![0f32; m_dim * k_dim];
+        for (bi, y_img) in chunk.iter_mut().enumerate() {
+            let img = offset + bi;
+            kernels::im2col(
+                x,
+                (s.h, s.w, s.cin),
+                img,
+                s.k,
+                s.k,
+                s.stride,
+                ph,
+                pw,
+                oh,
+                ow,
+                &mut patches,
+            );
+            for row in y_img.chunks_mut(s.cout) {
+                row.copy_from_slice(bias);
+            }
+            kernels::gemm_packed(&patches, &bp, y_img, m_dim);
+        }
+    });
+    y
+}
+
+/// Reference loops for [`conv2d_forward`] (the oracle the GEMM path races).
+pub fn conv2d_forward_naive(
     x: &[f32],
     wt: &[f32],
     bias: &[f32],
@@ -140,8 +374,8 @@ pub fn conv2d_forward(
     debug_assert_eq!(x.len(), s.in_elems(batch));
     debug_assert_eq!(wt.len(), s.weight_elems());
     debug_assert_eq!(bias.len(), s.cout);
-    let (oh, ow) = (s.out_h(), s.out_w());
-    let (pt, pl) = (s.pad_top(), s.pad_left());
+    let (oh, ow, pt, pl) = s.geometry();
+    let (pt, pl) = (pt as i64, pl as i64);
     let mut y = vec![0f32; s.out_elems(batch)];
     for im in 0..batch {
         for oy in 0..oh {
@@ -179,7 +413,11 @@ pub fn conv2d_forward(
     y
 }
 
-/// Gradients of `conv2d_forward`: returns (dx, dw, dbias).
+/// Gradients of `conv2d_forward`: returns (dx, dw, dbias). `dx` is a
+/// per-image `dy · Wᵀ` GEMM followed by a `col2im` scatter (batch-parallel,
+/// no cross-image writes); `dw` is a patchesᵀ x dy GEMM and `db` a row sum,
+/// both reduced through the fixed cells — bit-identical for any worker
+/// count.
 pub fn conv2d_backward(
     x: &[f32],
     wt: &[f32],
@@ -187,9 +425,107 @@ pub fn conv2d_backward(
     batch: usize,
     s: &Conv2dShape,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    conv2d_backward_with(x, wt, dy, batch, s, pool::default_workers())
+}
+
+/// [`conv2d_backward`] with an explicit worker count.
+pub fn conv2d_backward_with(
+    x: &[f32],
+    wt: &[f32],
+    dy: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+    workers: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), s.in_elems(batch));
+    debug_assert_eq!(wt.len(), s.weight_elems());
     debug_assert_eq!(dy.len(), s.out_elems(batch));
-    let (oh, ow) = (s.out_h(), s.out_w());
-    let (pt, pl) = (s.pad_top(), s.pad_left());
+    let (oh, ow, ph, pw) = s.geometry();
+    let k_dim = s.k * s.k * s.cin;
+    let m_dim = oh * ow;
+    let workers = workers.max(1);
+    let mut dx = vec![0f32; s.in_elems(batch)];
+    let mut dw = vec![0f32; s.weight_elems()];
+    let mut db = vec![0f32; s.cout];
+    let img_in = s.h * s.w * s.cin;
+    if batch == 0 || m_dim == 0 || s.cout == 0 || img_in == 0 {
+        return (dx, dw, db);
+    }
+    // dx: dpatches = dy_img · Wᵀ, then scatter — each image owns its slice
+    let wtp = kernels::pack_b_transposed(wt, k_dim, s.cout); // depth cout, cols k_dim
+    let img_out = m_dim * s.cout;
+    let mut views: Vec<&mut [f32]> = dx.chunks_mut(img_in).collect();
+    pool::par_chunks_mut(&mut views, workers.min(batch), |offset, chunk| {
+        let mut dpatches = vec![0f32; m_dim * k_dim];
+        for (bi, dx_img) in chunk.iter_mut().enumerate() {
+            let img = offset + bi;
+            dpatches.fill(0.0);
+            kernels::gemm_packed(
+                &dy[img * img_out..(img + 1) * img_out],
+                &wtp,
+                &mut dpatches,
+                m_dim,
+            );
+            kernels::col2im(
+                &dpatches,
+                (s.h, s.w, s.cin),
+                s.k,
+                s.k,
+                s.stride,
+                ph,
+                pw,
+                oh,
+                ow,
+                dx_img,
+            );
+        }
+    });
+    // dw/db: per-cell partials in image order, then a serial cell-order sum
+    let ranges = cell_ranges(batch);
+    let partials = pool::par_map(ranges.len(), workers, |ci| {
+        let (b0, b1) = ranges[ci];
+        let mut dw_c = vec![0f32; k_dim * s.cout];
+        let mut db_c = vec![0f32; s.cout];
+        let mut patches = vec![0f32; m_dim * k_dim];
+        let mut patches_t = vec![0f32; m_dim * k_dim];
+        let mut dyp = kernels::pack_b(&[], 0, 0);
+        for img in b0..b1 {
+            kernels::im2col(
+                x,
+                (s.h, s.w, s.cin),
+                img,
+                s.k,
+                s.k,
+                s.stride,
+                ph,
+                pw,
+                oh,
+                ow,
+                &mut patches,
+            );
+            kernels::transpose(&patches, m_dim, k_dim, &mut patches_t);
+            let dy_img = &dy[img * img_out..(img + 1) * img_out];
+            dyp.repack(dy_img, m_dim, s.cout);
+            kernels::gemm_packed(&patches_t, &dyp, &mut dw_c, k_dim);
+            add_row_sums(dy_img, s.cout, &mut db_c);
+        }
+        (dw_c, db_c)
+    });
+    sum_cells(&partials, &mut dw, &mut db);
+    (dx, dw, db)
+}
+
+/// Reference loops for [`conv2d_backward`].
+pub fn conv2d_backward_naive(
+    x: &[f32],
+    wt: &[f32],
+    dy: &[f32],
+    batch: usize,
+    s: &Conv2dShape,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(dy.len(), s.out_elems(batch));
+    let (oh, ow, pt, pl) = s.geometry();
+    let (pt, pl) = (pt as i64, pl as i64);
     let mut dx = vec![0f32; s.in_elems(batch)];
     let mut dw = vec![0f32; s.weight_elems()];
     let mut db = vec![0f32; s.cout];
@@ -232,6 +568,9 @@ pub fn conv2d_backward(
     }
     (dx, dw, db)
 }
+
+// ---------------------------------------------------------------------------
+// elementwise + loss
 
 pub fn relu_forward(x: &[f32]) -> Vec<f32> {
     x.iter().map(|&v| v.max(0.0)).collect()
@@ -290,7 +629,13 @@ pub fn softmax_xent(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::{assert_allclose_rel, forall};
     use crate::util::rng::Rng;
+
+    /// Random activations with exact zeros mixed in (post-ReLU shape).
+    fn acts(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| if rng.bool(0.4) { 0.0 } else { rng.normal() }).collect()
+    }
 
     #[test]
     fn dense_forward_known_values() {
@@ -341,6 +686,149 @@ mod tests {
         let s0: f32 = d[..4].iter().sum();
         assert!(s0.abs() < 1e-6);
     }
+
+    #[test]
+    fn cell_ranges_cover_batch_exactly() {
+        for batch in [1usize, 2, 7, 8, 9, 31, 64] {
+            let r = cell_ranges(batch);
+            assert!(r.len() <= REDUCE_CELLS);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, batch);
+            for win in r.windows(2) {
+                assert_eq!(win[0].1, win[1].0, "cells must tile the batch");
+            }
+        }
+    }
+
+    // --- GEMM vs naive races (tight epsilon: blocking reorders f32 sums) --
+
+    #[test]
+    fn prop_dense_forward_matches_naive() {
+        forall(16, |rng: &mut Rng| {
+            let batch = 1 + rng.below(9);
+            let fin = 1 + rng.below(150);
+            let fout = 1 + rng.below(40);
+            let x = acts(rng, batch * fin);
+            let w: Vec<f32> = (0..fin * fout).map(|_| rng.normal() * 0.5).collect();
+            let b: Vec<f32> = (0..fout).map(|_| rng.normal() * 0.1).collect();
+            let got = dense_forward(&x, &w, &b, batch, fin, fout);
+            let want = dense_forward_naive(&x, &w, &b, batch, fin, fout);
+            assert_allclose_rel(&got, &want, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn prop_dense_backward_matches_naive() {
+        forall(16, |rng: &mut Rng| {
+            let batch = 1 + rng.below(12);
+            let fin = 1 + rng.below(90);
+            let fout = 1 + rng.below(30);
+            let x = acts(rng, batch * fin);
+            let w: Vec<f32> = (0..fin * fout).map(|_| rng.normal() * 0.5).collect();
+            let dy: Vec<f32> = (0..batch * fout).map(|_| rng.normal() * 0.2).collect();
+            let (dx, dw, db) = dense_backward(&x, &w, &dy, batch, fin, fout);
+            let (dxn, dwn, dbn) = dense_backward_naive(&x, &w, &dy, batch, fin, fout);
+            assert_allclose_rel(&dx, &dxn, 1e-4, 5e-5);
+            assert_allclose_rel(&dw, &dwn, 1e-4, 5e-5);
+            assert_allclose_rel(&db, &dbn, 1e-4, 5e-5);
+        });
+    }
+
+    #[test]
+    fn prop_conv_forward_matches_naive() {
+        forall(12, |rng: &mut Rng| {
+            let s = Conv2dShape {
+                h: 3 + rng.below(8),
+                w: 3 + rng.below(8),
+                cin: 1 + rng.below(5),
+                k: 1 + 2 * rng.below(2), // 1 or 3
+                stride: 1 + rng.below(2),
+                cout: 1 + rng.below(8),
+            };
+            let batch = 1 + rng.below(5);
+            let x = acts(rng, s.in_elems(batch));
+            let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal() * 0.3).collect();
+            let b: Vec<f32> = (0..s.cout).map(|_| rng.normal() * 0.1).collect();
+            let got = conv2d_forward(&x, &w, &b, batch, &s);
+            let want = conv2d_forward_naive(&x, &w, &b, batch, &s);
+            assert_allclose_rel(&got, &want, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn prop_conv_backward_matches_naive() {
+        forall(12, |rng: &mut Rng| {
+            let s = Conv2dShape {
+                h: 3 + rng.below(7),
+                w: 3 + rng.below(7),
+                cin: 1 + rng.below(4),
+                k: 1 + 2 * rng.below(2),
+                stride: 1 + rng.below(2),
+                cout: 1 + rng.below(6),
+            };
+            let batch = 1 + rng.below(10);
+            let x = acts(rng, s.in_elems(batch));
+            let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal() * 0.3).collect();
+            let dy: Vec<f32> = (0..s.out_elems(batch)).map(|_| rng.normal() * 0.2).collect();
+            let (dx, dw, db) = conv2d_backward(&x, &w, &dy, batch, &s);
+            let (dxn, dwn, dbn) = conv2d_backward_naive(&x, &w, &dy, batch, &s);
+            assert_allclose_rel(&dx, &dxn, 1e-4, 5e-5);
+            assert_allclose_rel(&dw, &dwn, 1e-4, 5e-5);
+            assert_allclose_rel(&db, &dbn, 1e-4, 5e-5);
+        });
+    }
+
+    // --- worker-count invariance: gradients must be bit-identical --------
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_grads_invariant_across_worker_counts() {
+        let mut rng = Rng::new(21);
+        let (batch, fin, fout) = (9usize, 37usize, 11usize);
+        let x = acts(&mut rng, batch * fin);
+        let w: Vec<f32> = (0..fin * fout).map(|_| rng.normal() * 0.5).collect();
+        let dy: Vec<f32> = (0..batch * fout).map(|_| rng.normal()).collect();
+        let (dx1, dw1, db1) = dense_backward_with(&x, &w, &dy, batch, fin, fout, 1);
+        for workers in [2usize, 4, 7] {
+            let (dx, dw, db) = dense_backward_with(&x, &w, &dy, batch, fin, fout, workers);
+            assert_bits_eq(&dx1, &dx, "dx");
+            assert_bits_eq(&dw1, &dw, "dw");
+            assert_bits_eq(&db1, &db, "db");
+        }
+        let bias = vec![0.1f32; fout];
+        let y1 = dense_forward_with(&x, &w, &bias, batch, fin, fout, 1);
+        let y4 = dense_forward_with(&x, &w, &bias, batch, fin, fout, 4);
+        assert_bits_eq(&y1, &y4, "y");
+    }
+
+    #[test]
+    fn conv_grads_invariant_across_worker_counts() {
+        let mut rng = Rng::new(23);
+        let s = Conv2dShape { h: 6, w: 5, cin: 3, k: 3, stride: 2, cout: 4 };
+        let batch = 9usize;
+        let x = acts(&mut rng, s.in_elems(batch));
+        let w: Vec<f32> = (0..s.weight_elems()).map(|_| rng.normal() * 0.3).collect();
+        let b: Vec<f32> = (0..s.cout).map(|_| rng.normal() * 0.1).collect();
+        let dy: Vec<f32> = (0..s.out_elems(batch)).map(|_| rng.normal()).collect();
+        let (dx1, dw1, db1) = conv2d_backward_with(&x, &w, &dy, batch, &s, 1);
+        for workers in [2usize, 4, 7] {
+            let (dx, dw, db) = conv2d_backward_with(&x, &w, &dy, batch, &s, workers);
+            assert_bits_eq(&dx1, &dx, "dx");
+            assert_bits_eq(&dw1, &dw, "dw");
+            assert_bits_eq(&db1, &db, "db");
+        }
+        let y1 = conv2d_forward_with(&x, &w, &b, batch, &s, 1);
+        let y4 = conv2d_forward_with(&x, &w, &b, batch, &s, 4);
+        assert_bits_eq(&y1, &y4, "y");
+    }
+
+    // --- finite differences (run against the GEMM path) ------------------
 
     /// Central finite difference of a scalar-valued closure at params[i].
     fn num_grad<F: FnMut(&[f32]) -> f32>(params: &[f32], i: usize, mut f: F) -> f32 {

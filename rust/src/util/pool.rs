@@ -1,11 +1,15 @@
 //! Tiny scoped thread pool for data-parallel host work.
 //!
-//! rayon is not vendored, so batch assembly / dataset generation parallelism
-//! uses `std::thread::scope` chunking. The entry point is `par_chunks_mut`,
-//! which splits a mutable slice into one contiguous chunk per worker.
+//! rayon is not vendored, so batch assembly / dataset generation, the
+//! integer inference GEMM, and the native training forward/backward all
+//! fan out through `std::thread::scope` chunking here. The entry points
+//! are `par_chunks_mut` (one contiguous mutable chunk per worker) and
+//! `par_map` (index-ordered results — the training `dw`/`db` reduction
+//! cells ride on this).
 
 /// Number of workers to use for host-side data parallelism. Overridable
-/// with `SYMOG_WORKERS` (serving deployments pin this to their core
+/// with `SYMOG_WORKERS`, honored by both the inference and the native
+/// training hot paths (serving/CI deployments pin this to their core
 /// budget; results never depend on it — only wall-clock does). The env
 /// var is read once per process — this sits on per-op hot paths.
 pub fn default_workers() -> usize {
