@@ -1,0 +1,115 @@
+//! Closed-loop serving benchmark driver: N client threads hammer one
+//! `serve::Server` with single-image requests and the wall clock is
+//! compared against the same corpus pushed through solo batch-1 planned
+//! forwards on one thread. Every served response is bit-identical to the
+//! solo forward (spot-checked here; pinned exhaustively by
+//! `tests/serve_conformance.rs` / `tests/serve_concurrency.rs`).
+//!
+//!     cargo run --release --example serve_bench -- \
+//!         --model vgg7 --bits 2 --width 16 --clients 4 --requests 64 \
+//!         --batch 8 --workers 0 --seed 1453
+//!
+//! `--workers 0` resolves to the host default (`SYMOG_WORKERS` honored).
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+use symog::cli::Args;
+use symog::inference::IntModel;
+use symog::serve::{Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let model_name = args.str_or("model", "vgg7");
+    let bits = args.usize_or("bits", 2)? as u32;
+    let width = args.usize_or("width", 16)?;
+    let clients = args.usize_or("clients", 4)?.max(1);
+    let requests = args.usize_or("requests", 64)?.max(1);
+    let batch = args.usize_or("batch", 8)?.max(1);
+    let workers = args.usize_or("workers", 0)?;
+    let seed = args.u64_or("seed", 0x1453)?;
+    args.finish()?;
+
+    let mut rng = Rng::new(seed);
+    let (man, ck) = match model_name.as_str() {
+        "vgg7" => models::vgg7ish(&mut rng, bits, width),
+        "lenet5" => models::lenet5ish(&mut rng, bits),
+        "densenet" => models::densenetish(&mut rng, bits),
+        other => bail!("unknown --model {other:?} (vgg7|lenet5|densenet)"),
+    };
+    let model = IntModel::build(&man, &ck)?;
+    let solo = IntModel::build(&man, &ck)?;
+    let elems: usize = man.input_shape.iter().product();
+
+    let mut reg = Registry::new();
+    let key = reg.register(&model_name, &model, batch)?;
+    let server = Server::new(reg, ServeConfig { workers });
+    println!(
+        "== serve_bench == model {key}  input {:?}  micro-batch cap {batch}  \
+         clients {clients} x {requests} requests",
+        man.input_shape
+    );
+
+    // deterministic request corpus
+    let total = clients * requests;
+    let images: Vec<f32> = (0..total * elems).map(|_| rng.normal()).collect();
+
+    // --- solo baseline: one thread, batch-1 planned forwards -------------
+    let plan = solo.shared_plan(batch)?;
+    println!(
+        "plan: {} fused steps, {} KiB full-batch arena ({} B per row scratch)",
+        plan.num_steps(),
+        plan.arena_bytes() / 1024,
+        plan.scratch_for(1).arena_bytes()
+    );
+    let mut scratch = plan.scratch_for(1);
+    let mut out = vec![0f32; plan.out_per_img()];
+    let t0 = Instant::now();
+    for r in 0..total {
+        plan.run_into(&images[r * elems..(r + 1) * elems], 1, &mut scratch, &mut out)?;
+        std::hint::black_box(&out);
+    }
+    let solo_s = t0.elapsed().as_secs_f64();
+
+    // --- served: closed-loop client threads ------------------------------
+    let t0 = Instant::now();
+    std::thread::scope(|sc| {
+        for t in 0..clients {
+            let (server, key, images) = (&server, &key, &images);
+            sc.spawn(move || {
+                for i in 0..requests {
+                    let r = t * requests + i;
+                    let got = server
+                        .infer(key, &images[r * elems..(r + 1) * elems])
+                        .expect("serve request failed");
+                    std::hint::black_box(got);
+                }
+            });
+        }
+    });
+    let serve_s = t0.elapsed().as_secs_f64();
+
+    // --- bit-exactness spot check ----------------------------------------
+    for r in [0usize, total / 2, total - 1] {
+        let img = &images[r * elems..(r + 1) * elems];
+        let got = server.infer(&key, img)?;
+        let (want, _) = solo.forward(img, 1)?;
+        ensure!(got == want, "request {r}: served logits diverged from solo forward");
+    }
+    println!("bit-exactness: served logits == solo planned forwards (spot checks passed)");
+
+    let stats = server.stats(&key)?;
+    println!("stats: {}", stats.render());
+    println!(
+        "solo   : {total} requests in {solo_s:.3}s  ({:.1} req/s)",
+        total as f64 / solo_s
+    );
+    println!(
+        "served : {total} requests in {serve_s:.3}s  ({:.1} req/s)  -> {:.2}x vs solo",
+        total as f64 / serve_s,
+        solo_s / serve_s
+    );
+    Ok(())
+}

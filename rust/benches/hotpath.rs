@@ -3,19 +3,23 @@
 //!
 //!   cargo bench --bench hotpath
 //!
-//! Sections:
-//!   1. integer conv/dense: naive loops vs im2col + blocked GEMM on
-//!      VGG7-shaped layers, plus interpret-vs-planned whole-model forwards
-//!      (`ExecPlan` arena + fused epilogues vs the per-call GEMM walk),
-//!      plus f32 training steps (conv fwd+bwd) naive-vs-GEMM on the same
-//!      shapes. Bit-identity asserted for the integer kernels; emits
-//!      BENCH_hotpath.json at the repo root so the perf trajectory is
-//!      tracked PR over PR.
-//!   2. train-step latency breakdown (batch assembly / literal upload /
-//!      execute) for the lenet5 artifact — the L3 coordinator target is
-//!      <10% of step time outside `execute`.
-//!   3. eval + integer-engine throughput.
-//!   4. substrate microbenches: quantizer, solver, mode tracking, synth-data.
+//! Sections (SYMOG_HOTPATH picks them; comma-separated lists compose):
+//!   1. `gemm` — integer conv/dense: naive loops vs im2col + blocked GEMM
+//!      on VGG7-shaped layers, plus interpret-vs-planned whole-model
+//!      forwards (`ExecPlan` arena + fused epilogues vs the per-call GEMM
+//!      walk), plus f32 training steps (conv fwd+bwd) naive-vs-GEMM on
+//!      the same shapes. Bit-identity asserted for the integer kernels.
+//!   2. `serve` — serving throughput: closed-loop client threads through
+//!      `serve::Server` (dynamic micro-batching, per-request isolation)
+//!      vs solo batch-1 planned forwards of the identical corpus
+//!      (bit-identity asserted before timing).
+//!      Sections 1+2 emit BENCH_hotpath.json at the repo root so the perf
+//!      trajectory is tracked PR over PR (CI gates on "gemm,serve").
+//!   3. `runtime` — train-step latency breakdown (batch assembly /
+//!      literal upload / execute) for the lenet5 artifact (the L3 target
+//!      is <10% of step time outside `execute`) plus eval and
+//!      integer-engine throughput (`engine` for just the latter).
+//!   4. `substrates` — quantizer, solver, mode tracking, synth-data.
 
 use std::collections::BTreeMap;
 
@@ -36,18 +40,40 @@ use symog::util::rng::Rng;
 
 fn main() -> Result<()> {
     println!("== SYMOG hot-path benchmarks ==\n");
-    // SYMOG_HOTPATH=gemm|substrates|runtime|engine runs one section only
+    // SYMOG_HOTPATH=gemm|serve|substrates|runtime|engine picks sections;
+    // comma-separated lists compose (CI gates on "gemm,serve")
     let section = std::env::var("SYMOG_HOTPATH").unwrap_or_default();
+    let want = |name: &str| section.is_empty() || section.split(',').any(|s| s.trim() == name);
     let mut report: Vec<Stats> = Vec::new();
+    let mut cases_json: Vec<Json> = Vec::new();
+    let mut top: BTreeMap<String, Json> = BTreeMap::new();
 
-    if section.is_empty() || section == "gemm" {
-        gemm_benches(&mut report)?;
+    if want("gemm") {
+        gemm_benches(&mut report, &mut cases_json, &mut top)?;
     }
-    if section.is_empty() || section == "substrates" {
+    if want("serve") {
+        serve_benches(&mut report, &mut cases_json)?;
+    }
+    if want("gemm") || want("serve") {
+        // one report for every gated ratio family (bench_check reads this)
+        top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+        let workers = symog::util::pool::default_workers();
+        top.insert("workers".to_string(), json_num(workers as f64));
+        top.insert("cases".to_string(), Json::Arr(std::mem::take(&mut cases_json)));
+        let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_hotpath.json");
+        std::fs::write(&out, Json::Obj(std::mem::take(&mut top)).to_string() + "\n")?;
+        println!("-> {}", out.display());
+    }
+    if want("substrates") {
         substrate_benches(&mut report);
     }
-    if section.is_empty() || section == "runtime" || section == "engine" {
-        if let Err(e) = runtime_benches(&mut report, &section) {
+    if want("runtime") || want("engine") {
+        // "engine" alone (or composed, e.g. "gemm,engine") runs only the
+        // integer-engine throughput part; "runtime" runs the full section
+        let engine_only = want("engine") && !want("runtime");
+        if let Err(e) = runtime_benches(&mut report, engine_only) {
             println!("(runtime benches skipped: {e:#})");
         }
     }
@@ -137,12 +163,16 @@ fn json_num(v: f64) -> Json {
 }
 
 /// Naive vs im2col+GEMM integer kernels; asserts bit-identity, reports
-/// throughput, and writes BENCH_hotpath.json at the repo root.
-fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
+/// throughput, and appends its cases to the BENCH_hotpath.json report
+/// that `main` writes at the repo root.
+fn gemm_benches(
+    report: &mut Vec<Stats>,
+    cases_json: &mut Vec<Json>,
+    top: &mut BTreeMap<String, Json>,
+) -> Result<()> {
     println!("--- integer GEMM hot path (naive vs im2col+blocked GEMM) ---");
     let workers = symog::util::pool::default_workers();
     let delta = 0.25f32;
-    let mut cases_json: Vec<Json> = Vec::new();
     let mut conv_speedups: Vec<f64> = Vec::new();
 
     for case in CONV_CASES {
@@ -281,25 +311,167 @@ fn gemm_benches(report: &mut Vec<Stats>) -> Result<()> {
         report.push(s_p);
     }
 
-    train_step_benches(report, &mut cases_json);
+    train_step_benches(report, cases_json);
 
     let min = conv_speedups.iter().copied().fold(f64::INFINITY, f64::min);
     let geomean =
         (conv_speedups.iter().map(|s| s.ln()).sum::<f64>() / conv_speedups.len() as f64).exp();
     println!("\nconv speedup: min {min:.2}x, geomean {geomean:.2}x over {workers} workers\n");
 
-    let mut top = BTreeMap::new();
-    top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
-    top.insert("workers".to_string(), json_num(workers as f64));
     top.insert("conv_speedup_min".to_string(), json_num(min));
     top.insert("conv_speedup_geomean".to_string(), json_num(geomean));
     top.insert("dense_speedup".to_string(), json_num(dense_speedup));
-    top.insert("cases".to_string(), Json::Arr(cases_json));
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("..")
-        .join("BENCH_hotpath.json");
-    std::fs::write(&out, Json::Obj(top).to_string() + "\n")?;
-    println!("-> {}", out.display());
+    Ok(())
+}
+
+/// One closed-loop serving case: N client threads through `serve::Server`
+/// vs the same request corpus as solo batch-1 planned forwards on a
+/// single thread.
+struct ServeCase {
+    name: &'static str,
+    model: &'static str,
+    clients: usize,
+    per_client: usize,
+    max_batch: usize,
+}
+
+const SERVE_CASES: &[ServeCase] = &[
+    // VGG7-shaped: real per-request compute, batching amortizes well
+    ServeCase {
+        name: "serve vgg7 c4 w2",
+        model: "vgg7",
+        clients: 4,
+        per_client: 24,
+        max_batch: 8,
+    },
+    // LeNet5-shaped: tiny requests, queue/scatter overhead dominates —
+    // the stress case for the serving layer itself
+    ServeCase {
+        name: "serve lenet5 c4 w2",
+        model: "lenet5",
+        clients: 4,
+        per_client: 48,
+        max_batch: 8,
+    },
+];
+
+/// Serving throughput: closed-loop client threads hammering one `Server`
+/// vs solo planned forwards of the identical corpus. Bit-identity of every
+/// served response against the solo oracle is asserted before timing; the
+/// solo/served wall-clock ratio lands in BENCH_hotpath.json as kind
+/// `serve_throughput` and is gated by bench_check like the kernel ratios
+/// (same-host ratio, so the gate stays machine-invariant).
+fn serve_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<()> {
+    use symog::serve::{Registry, ServeConfig, Server};
+
+    println!("--- serving throughput (closed-loop clients vs solo planned forwards) ---");
+    for case in SERVE_CASES {
+        let mut rng = Rng::new(0x5E21);
+        let (man, ck) = match case.model {
+            "vgg7" => models::vgg7ish(&mut rng, 2, 16),
+            _ => models::lenet5ish(&mut rng, 2),
+        };
+        let model = IntModel::build(&man, &ck)?;
+        let solo = IntModel::build(&man, &ck)?;
+        let elems: usize = man.input_shape.iter().product();
+        let total = case.clients * case.per_client;
+        let images: Vec<f32> = (0..total * elems).map(|_| rng.normal()).collect();
+
+        let mut reg = Registry::new();
+        let key = reg.register(case.model, &model, case.max_batch)?;
+        let server = Server::new(reg, ServeConfig::default());
+        let plan = solo.shared_plan(case.max_batch)?;
+        let out_per = plan.out_per_img();
+
+        // correctness gate before timing anything: every served response
+        // must equal the solo planned forward of its request
+        let mut scratch = plan.scratch_for(1);
+        let solos: Vec<Vec<f32>> = (0..total)
+            .map(|r| plan.run(&images[r * elems..(r + 1) * elems], 1, &mut scratch))
+            .collect::<Result<_>>()?;
+        std::thread::scope(|sc| {
+            for t in 0..case.clients {
+                let (server, key, images, solos) = (&server, &key, &images, &solos);
+                sc.spawn(move || {
+                    for i in 0..case.per_client {
+                        let r = t * case.per_client + i;
+                        let got = server
+                            .infer(key, &images[r * elems..(r + 1) * elems])
+                            .expect("serve request failed");
+                        assert_eq!(
+                            got, solos[r],
+                            "{}: request {r} diverged from solo forward",
+                            case.name
+                        );
+                    }
+                });
+            }
+        });
+
+        let mut row_out = vec![0f32; out_per];
+        let s_solo = bench(&format!("solo  {}", case.name), 1, 5, || {
+            for r in 0..total {
+                plan.run_into(
+                    &images[r * elems..(r + 1) * elems],
+                    1,
+                    &mut scratch,
+                    &mut row_out,
+                )
+                .unwrap();
+                std::hint::black_box(&row_out);
+            }
+        });
+        let mut hammer = || {
+            std::thread::scope(|sc| {
+                for t in 0..case.clients {
+                    let (server, key, images) = (&server, &key, &images);
+                    sc.spawn(move || {
+                        for i in 0..case.per_client {
+                            let r = t * case.per_client + i;
+                            let got = server
+                                .infer(key, &images[r * elems..(r + 1) * elems])
+                                .expect("serve request failed");
+                            std::hint::black_box(got);
+                        }
+                    });
+                }
+            });
+        };
+        // warm up outside bench() so the stats delta below covers exactly
+        // the timed reps (the correctness gate above has a different
+        // per-request cost profile and would dilute the occupancy number)
+        hammer();
+        let pre = server.stats(&key)?;
+        let s_serve = bench(&format!("serve {}", case.name), 0, 5, &mut hammer);
+        let post = server.stats(&key)?;
+        let timed_occ = (post.requests - pre.requests) as f64
+            / (post.batches - pre.batches).max(1) as f64;
+        let speedup = s_solo.median_s / s_serve.median_s;
+        println!(
+            "{}\n{}\n  -> {:.2}x served-vs-solo ({:.0} req/s served, \
+             mean occupancy {:.2} over the timed reps)",
+            s_solo.row(),
+            s_serve.row(),
+            speedup,
+            total as f64 / s_serve.median_s,
+            timed_occ,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(case.name.to_string()));
+        o.insert("kind".to_string(), Json::Str("serve_throughput".to_string()));
+        o.insert("clients".to_string(), json_num(case.clients as f64));
+        o.insert("requests".to_string(), json_num(total as f64));
+        o.insert("max_batch".to_string(), json_num(case.max_batch as f64));
+        o.insert("n_bits".to_string(), json_num(2.0));
+        o.insert("solo_s".to_string(), json_num(s_solo.median_s));
+        o.insert("serve_s".to_string(), json_num(s_serve.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        o.insert("bit_identical".to_string(), Json::Bool(true));
+        o.insert("mean_occupancy".to_string(), json_num(timed_occ));
+        cases_json.push(Json::Obj(o));
+        report.push(s_solo);
+        report.push(s_serve);
+    }
     Ok(())
 }
 
@@ -444,7 +616,7 @@ fn substrate_benches(report: &mut Vec<Stats>) {
     report.push(s);
 }
 
-fn runtime_benches(report: &mut Vec<Stats>, section: &str) -> Result<()> {
+fn runtime_benches(report: &mut Vec<Stats>, engine_only: bool) -> Result<()> {
     println!("\n--- runtime hot path (lenet5 symog artifact) ---");
     let rt = Runtime::cpu()?;
     let tag = std::env::var("SYMOG_HOTPATH_TAG")
@@ -456,7 +628,7 @@ fn runtime_benches(report: &mut Vec<Stats>, section: &str) -> Result<()> {
     let batch = man.batch;
     let (train, test) = Preset::SynthMnist.load(2048, 512, 0);
     let mut trainer = Trainer::from_init(&art)?;
-    if section == "engine" {
+    if engine_only {
         let ck = trainer.to_checkpoint()?;
         let model = IntModel::build(man, &ck)?;
         let s = bench_budgeted("integer engine 64 imgs", 1, 15.0, 50, || {

@@ -70,6 +70,14 @@ impl Args {
         }
     }
 
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        self.mark(name);
+        match self.flags.get(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         self.mark(name);
         match self.flags.get(name) {
@@ -140,6 +148,14 @@ mod tests {
         let a = Args::parse(&sv(&["x"]), &[]).unwrap();
         assert_eq!(a.str_or("name", "d"), "d");
         assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.u64_or("seed", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn u64_parses_large_seeds() {
+        let a = Args::parse(&sv(&["x", "--seed", "18446744073709551615"]), &[]).unwrap();
+        assert_eq!(a.u64_or("seed", 0).unwrap(), u64::MAX);
+        a.finish().unwrap();
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod synthetic;
 
 pub use augment::{augment_batch, AugmentConfig};
 pub use batch::{Batch, BatchIter};
-pub use synthetic::{synth_dataset, SynthSpec};
+pub use synthetic::{synth_dataset, synth_dataset_with, SynthSpec};
 
 /// An in-memory image-classification dataset, NHWC f32 + i32 labels.
 #[derive(Clone)]

@@ -83,8 +83,19 @@ fn render_prototype(rng: &mut Rng, spec: &SynthSpec) -> Vec<f32> {
 
 /// Generate `n` samples of the synthetic distribution with root `seed`.
 /// Prototypes depend only on (seed, class); samples add translation jitter,
-/// per-sample gain, and pixel noise. Generation is host-parallel.
+/// per-sample gain, and pixel noise. Generation is host-parallel with the
+/// default worker count.
 pub fn synth_dataset(spec: &SynthSpec, n: usize, seed: u64) -> Dataset {
+    synth_dataset_with(spec, n, seed, pool::default_workers())
+}
+
+/// [`synth_dataset`] with an explicit worker count. Output is a pure
+/// function of `(spec, n, seed)`: every sample draws from its own
+/// `Rng::new(seed ^ f(i))` stream, so the chunking — and therefore the
+/// worker count — is bit-irrelevant. `tests/determinism.rs` pins this
+/// (serving benches and the serve test suites rely on reproducible
+/// request data whatever `SYMOG_WORKERS` says).
+pub fn synth_dataset_with(spec: &SynthSpec, n: usize, seed: u64, workers: usize) -> Dataset {
     let [h, w, c] = spec.shape;
     let elems = h * w * c;
 
@@ -113,7 +124,6 @@ pub fn synth_dataset(spec: &SynthSpec, n: usize, seed: u64) -> Dataset {
     // --- samples (parallel over a contiguous image buffer)
     let mut images = vec![0f32; n * elems];
     let chunk_items: Vec<(usize, i32)> = labels.iter().copied().enumerate().collect();
-    let workers = pool::default_workers();
     let per = n.div_ceil(workers.max(1)).max(1);
     std::thread::scope(|s| {
         for (img_chunk, item_chunk) in images.chunks_mut(per * elems).zip(chunk_items.chunks(per)) {

@@ -17,6 +17,14 @@
 //! `ExecPlan::run` never grows again: steady-state forwards perform zero
 //! allocation inside the arena (asserted by `Scratch::fingerprint` in the
 //! allocation-discipline test).
+//!
+//! `ScratchPool` is the one checkout/return implementation sitting on top:
+//! both `IntModel`'s internal forward pooling and the serving layer
+//! (`serve::Server`) draw warm scratches from it. The pool is bounded (it
+//! never holds, nor creates through [`ScratchPool::checkout`], more than
+//! `cap` scratches over its lifetime), so a warmed pool is a *fixed set*
+//! of allocations — `ScratchPool::fingerprints` exposes that set and the
+//! serve concurrency test asserts it is stable under load.
 
 /// Index of one preallocated activation buffer in the arena.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,14 +51,19 @@ pub struct Scratch {
     pub(crate) bn_enc: Vec<i64>,
     /// the plan this scratch was sized for
     pub(crate) plan_id: u64,
+    /// largest batch the activation slots can hold (full-size scratches
+    /// carry the plan's `max_batch`; serving row scratches carry 1)
+    pub(crate) cap_batch: usize,
 }
 
 impl Scratch {
     /// Allocate a scratch sized by the plan's capacity table. All buffers
     /// get their final length here; `run` only ever writes into them.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn sized(
         plan_id: u64,
         slot_caps: &[usize],
+        cap_batch: usize,
         workers: usize,
         patch_len: usize,
         wide_len: usize,
@@ -66,6 +79,7 @@ impl Scratch {
             bias_enc: vec![0i64; chan_len],
             bn_enc: vec![0i64; chan_len],
             plan_id,
+            cap_batch,
         }
     }
 
@@ -90,6 +104,98 @@ impl Scratch {
     /// Total bytes held by the activation slots (reported by examples/docs).
     pub fn arena_bytes(&self) -> usize {
         self.bufs.iter().map(|b| b.capacity() * std::mem::size_of::<i32>()).sum()
+    }
+}
+
+/// Bounded checkout/return pool of warm `Scratch` values for one plan.
+///
+/// Two usage styles share this type:
+/// * `IntModel::forward` pops with [`try_take`](ScratchPool::try_take) and
+///   falls back to a transient scratch when the pool runs dry (unbounded
+///   concurrency, bounded *pooling*);
+/// * the serving layer checks out with [`checkout`](ScratchPool::checkout),
+///   which lazily creates scratches until the lifetime bound `cap` is
+///   reached and never past it — so after warmup the pool is a fixed,
+///   fingerprint-stable set of allocations (zero steady-state growth).
+pub struct ScratchPool {
+    inner: std::sync::Mutex<PoolInner>,
+    cap: usize,
+}
+
+struct PoolInner {
+    free: Vec<Scratch>,
+    /// scratches ever created *through* `checkout` (the serve-side bound)
+    created: usize,
+}
+
+impl ScratchPool {
+    pub fn new(cap: usize) -> ScratchPool {
+        ScratchPool {
+            inner: std::sync::Mutex::new(PoolInner { free: Vec::new(), created: 0 }),
+            cap: cap.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Pop one warm scratch if any is free (never creates).
+    pub fn try_take(&self) -> Option<Scratch> {
+        self.lock().free.pop()
+    }
+
+    /// Check out up to `want` scratches: pops free ones first, then creates
+    /// via `mk` while the lifetime-created count is below the pool bound.
+    /// May return fewer than `want` (even zero) when the pool is saturated.
+    pub fn checkout(&self, want: usize, mk: &mut dyn FnMut() -> Scratch) -> Vec<Scratch> {
+        let mut g = self.lock();
+        let mut out = Vec::with_capacity(want.min(self.cap));
+        while out.len() < want {
+            if let Some(s) = g.free.pop() {
+                out.push(s);
+            } else if g.created < self.cap {
+                g.created += 1;
+                out.push(mk());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Return one scratch; dropped silently once `cap` are already free.
+    pub fn put(&self, s: Scratch) {
+        let mut g = self.lock();
+        if g.free.len() < self.cap {
+            g.free.push(s);
+        }
+    }
+
+    /// Return a batch of scratches (see [`put`](ScratchPool::put)).
+    pub fn put_all(&self, scratches: impl IntoIterator<Item = Scratch>) {
+        let mut g = self.lock();
+        for s in scratches {
+            if g.free.len() < self.cap {
+                g.free.push(s);
+            }
+        }
+    }
+
+    /// Scratches created through `checkout` over the pool's lifetime.
+    pub fn created(&self) -> usize {
+        self.lock().created
+    }
+
+    /// Fingerprints of every currently-free scratch, sorted so the result
+    /// is a canonical *set* snapshot: if no scratch is in flight, two equal
+    /// snapshots mean the pool neither grew nor reallocated in between.
+    pub fn fingerprints(&self) -> Vec<Vec<(usize, usize)>> {
+        let g = self.lock();
+        let mut fps: Vec<Vec<(usize, usize)>> =
+            g.free.iter().map(|s| s.fingerprint()).collect();
+        fps.sort();
+        fps
     }
 }
 
@@ -150,11 +256,33 @@ mod tests {
 
     #[test]
     fn fingerprint_stable_without_growth() {
-        let mut s = Scratch::sized(1, &[16, 8], 2, 4, 4, 4);
+        let mut s = Scratch::sized(1, &[16, 8], 4, 2, 4, 4, 4);
         let fp = s.fingerprint();
         s.bufs[0][..16].fill(7);
         s.patches.fill(3);
         assert_eq!(fp, s.fingerprint());
+    }
+
+    #[test]
+    fn scratch_pool_bounds_creation_and_is_fingerprint_stable() {
+        let pool = ScratchPool::new(2);
+        let mut mk = || Scratch::sized(9, &[8], 1, 1, 2, 2, 2);
+        // saturating checkout: creation stops at the bound
+        let got = pool.checkout(5, &mut mk);
+        assert_eq!(got.len(), 2);
+        assert_eq!(pool.created(), 2);
+        assert!(pool.try_take().is_none());
+        pool.put_all(got);
+        let fp = pool.fingerprints();
+        assert_eq!(fp.len(), 2);
+        // steady state: checkout/return cycles reuse the same allocations
+        for want in [1usize, 2, 2, 1] {
+            let got = pool.checkout(want, &mut mk);
+            assert_eq!(got.len(), want);
+            pool.put_all(got);
+        }
+        assert_eq!(pool.created(), 2, "pool grew past its bound");
+        assert_eq!(fp, pool.fingerprints(), "pool reallocated in steady state");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::Checkpoint;
 use crate::runtime::Manifest;
 
-use super::arena::Scratch;
+use super::arena::{Scratch, ScratchPool};
 use super::ops::{self, QAffine, QWeight};
 use super::plan::ExecPlan;
 use super::{CostModel, CostReport, OpCounts};
@@ -59,10 +59,11 @@ pub enum Backend {
     Naive,
 }
 
-/// A compiled plan plus its pool of reusable per-call scratches.
+/// A compiled plan plus its pool of reusable per-call scratches (the same
+/// checkout/return `ScratchPool` the serving layer uses).
 struct PlanCache {
     plan: Arc<ExecPlan>,
-    scratch: Vec<Scratch>,
+    pool: ScratchPool,
 }
 
 /// The integer model: quantized weights + the layer program.
@@ -228,7 +229,9 @@ impl IntModel {
 
     /// The cache-backed shared plan — the exact instance `forward`/
     /// `predict`/`accuracy` execute on (compiled at most once per
-    /// `max_batch` high-water mark).
+    /// `max_batch` high-water mark). `serve::Registry::register` draws its
+    /// per-model plan from here, so a served model and its direct
+    /// `forward()` path share one compiled artifact.
     pub fn shared_plan(&self, max_batch: usize) -> Result<Arc<ExecPlan>> {
         self.plan_for(max_batch)
     }
@@ -242,23 +245,26 @@ impl IntModel {
             }
         }
         let plan = Arc::new(self.plan(batch)?);
-        *guard = Some(PlanCache { plan: Arc::clone(&plan), scratch: Vec::new() });
+        *guard = Some(PlanCache {
+            plan: Arc::clone(&plan),
+            pool: ScratchPool::new(MAX_POOLED_SCRATCH),
+        });
         Ok(plan)
     }
 
     fn take_scratch(&self, plan: &Arc<ExecPlan>) -> Option<Scratch> {
-        let mut guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
-        match guard.as_mut() {
-            Some(c) if Arc::ptr_eq(&c.plan, plan) => c.scratch.pop(),
+        let guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(c) if Arc::ptr_eq(&c.plan, plan) => c.pool.try_take(),
             _ => None,
         }
     }
 
     fn put_scratch(&self, plan: &Arc<ExecPlan>, scratch: Scratch) {
-        let mut guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(c) = guard.as_mut() {
-            if Arc::ptr_eq(&c.plan, plan) && c.scratch.len() < MAX_POOLED_SCRATCH {
-                c.scratch.push(scratch);
+        let guard = self.cache.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(c) = guard.as_ref() {
+            if Arc::ptr_eq(&c.plan, plan) {
+                c.pool.put(scratch);
             }
         }
     }

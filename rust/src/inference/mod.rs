@@ -32,7 +32,7 @@ pub(crate) mod gemm;
 mod ops;
 mod plan;
 
-pub use arena::Scratch;
+pub use arena::{Scratch, ScratchPool};
 pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};
 pub use engine::{Backend, IntModel, QTensor};
 pub use ops::{conv2d, conv2d_naive, dense, dense_naive, QWeight};

@@ -27,7 +27,11 @@
 //!
 //! Execution state lives in a per-thread `Scratch`; the plan itself is
 //! `Sync` and meant to be shared behind an `Arc` — that split is the seam
-//! a serving layer sits on (N workers, one plan, one scratch each).
+//! the serving layer (`serve::Server`) sits on: it coalesces requests into
+//! micro-batches and drives them through [`ExecPlan::run_rows`], which
+//! fans gathered rows over pooled `scratch_for(1)` row scratches with
+//! per-request requantization isolation (see `run_rows` for why serving
+//! must not share batch-global shift statistics between requests).
 //!
 //! Everything here replays the interpreter's integer arithmetic
 //! *bit-for-bit* (same kernels, same requantize decisions, same rounding),
@@ -319,14 +323,41 @@ impl ExecPlan {
     /// Allocate the mutable per-thread state for `run`. Steady-state runs
     /// never grow it (see `Scratch::fingerprint`).
     pub fn scratch(&self) -> Scratch {
+        self.scratch_for(self.max_batch)
+    }
+
+    /// Allocate a scratch whose activation slots hold at most `cap_batch`
+    /// images (clamped to `1..=max_batch`). The serving layer pools
+    /// `scratch_for(1)` row scratches: per-request isolation executes every
+    /// request at batch 1, so sizing each pooled scratch for `max_batch`
+    /// would multiply the arena footprint by the micro-batch cap for no
+    /// benefit. `run` rejects batches larger than the scratch's capacity.
+    pub fn scratch_for(&self, cap_batch: usize) -> Scratch {
+        let cb = cap_batch.clamp(1, self.max_batch);
+        // every capacity in the table is an exact max_batch multiple (they
+        // are all computed as max_batch * per-image numel), so per-image
+        // rescaling is lossless
+        let scale = |c: usize| c / self.max_batch * cb;
+        let caps: Vec<usize> = self.slot_caps.iter().map(|&c| scale(c)).collect();
         Scratch::sized(
             self.id,
-            &self.slot_caps,
-            self.workers,
+            &caps,
+            cb,
+            self.workers.clamp(1, cb),
             self.patch_len,
-            self.wide_len,
+            scale(self.wide_len),
             self.chan_len,
         )
+    }
+
+    /// Elements of one input image (H*W*C at the plan's input shape).
+    pub fn in_elems(&self) -> usize {
+        numel3(self.in_dim)
+    }
+
+    /// Logits per image produced by `run` / `run_rows`.
+    pub fn out_per_img(&self) -> usize {
+        self.out_per_img
     }
 
     /// Analytic operation counts for one forward of `batch` images —
@@ -389,14 +420,34 @@ impl ExecPlan {
     /// the input, like the interpreter). `batch` may be smaller than
     /// `max_batch` (ragged final batch); logits come back as f32.
     pub fn run(&self, images: &[f32], batch: usize, s: &mut Scratch) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; batch * self.out_per_img];
+        self.run_into(images, batch, s, &mut out)?;
+        Ok(out)
+    }
+
+    /// `run` writing logits into a caller-owned buffer (`batch *
+    /// out_per_img` long) — the allocation-free serving entry point.
+    pub fn run_into(
+        &self,
+        images: &[f32],
+        batch: usize,
+        s: &mut Scratch,
+        out: &mut [f32],
+    ) -> Result<()> {
         ensure!(s.plan_id == self.id, "Scratch was built for a different ExecPlan");
         ensure!(
             batch >= 1 && batch <= self.max_batch,
             "batch {batch} outside 1..={}",
             self.max_batch
         );
+        ensure!(
+            batch <= s.cap_batch,
+            "batch {batch} exceeds this Scratch's capacity {} (see scratch_for)",
+            s.cap_batch
+        );
         let in_elems = numel3(self.in_dim);
         ensure!(images.len() == batch * in_elems, "bad input size");
+        ensure!(out.len() == batch * self.out_per_img, "bad output size");
         let frac_in =
             ops::encode_f32_into(images, 8, &mut s.bufs[self.in_slot.0][..batch * in_elems]);
         s.fracs[self.in_slot.0] = frac_in;
@@ -404,10 +455,76 @@ impl ExecPlan {
             self.exec_step(step, batch, s)?;
         }
         let scale = (2f32).powi(-s.fracs[self.out_slot.0]);
-        Ok(s.bufs[self.out_slot.0][..batch * self.out_per_img]
-            .iter()
-            .map(|&m| m as f32 * scale)
-            .collect())
+        for (o, &m) in out.iter_mut().zip(&s.bufs[self.out_slot.0][..batch * self.out_per_img]) {
+            *o = m as f32 * scale;
+        }
+        Ok(())
+    }
+
+    /// Serving gather/scatter entry: execute `batch` single-request rows
+    /// (`images` is the caller-assembled gather, row-major) with
+    /// **per-request requantization isolation** — row `r`'s logits land at
+    /// `out[r * out_per_img ..]` and are bit-identical to
+    /// `run(&images[r * in_elems ..][..in_elems], 1, ..)`, i.e. to a solo
+    /// forward of that request, *whatever the batch composition*.
+    ///
+    /// This is deliberately not `run(images, batch, ..)`: the engine's
+    /// requantization statistics (input exponent, every matmul/BN shift)
+    /// are batch-global, so a whole-batch forward lets one outlier request
+    /// coarsen its batchmates' shift decisions — results would depend on
+    /// which requests happened to be coalesced together. Serving instead
+    /// runs each row through the identical batch-1 path and takes its
+    /// parallelism *across* rows: `scratches` (each from `scratch_for` on
+    /// this plan) defines the worker fan-out, and any count yields the
+    /// same bits.
+    pub fn run_rows(
+        &self,
+        images: &[f32],
+        batch: usize,
+        scratches: &mut [Scratch],
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(batch >= 1, "run_rows needs at least one row");
+        ensure!(!scratches.is_empty(), "run_rows needs at least one scratch");
+        let in_elems = numel3(self.in_dim);
+        ensure!(images.len() == batch * in_elems, "bad input size");
+        ensure!(out.len() == batch * self.out_per_img, "bad output size");
+        for s in scratches.iter() {
+            ensure!(s.plan_id == self.id, "Scratch was built for a different ExecPlan");
+        }
+        let workers = scratches.len().min(batch);
+        let per = batch.div_ceil(workers);
+        struct RowItem<'a> {
+            rows: &'a [f32],
+            out: &'a mut [f32],
+            scratch: &'a mut Scratch,
+            err: Option<anyhow::Error>,
+        }
+        let mut items: Vec<RowItem> = images
+            .chunks(per * in_elems)
+            .zip(out.chunks_mut(per * self.out_per_img))
+            .zip(scratches.iter_mut())
+            .map(|((rows, out), scratch)| RowItem { rows, out, scratch, err: None })
+            .collect();
+        let k = items.len();
+        pool::par_chunks_mut(&mut items, k, |_, its| {
+            for it in its.iter_mut() {
+                for (row, row_out) in
+                    it.rows.chunks(in_elems).zip(it.out.chunks_mut(self.out_per_img))
+                {
+                    if let Err(e) = self.run_into(row, 1, it.scratch, row_out) {
+                        it.err = Some(e);
+                        break;
+                    }
+                }
+            }
+        });
+        for it in items {
+            if let Some(e) = it.err {
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 
     fn exec_step(&self, step: &Step, batch: usize, s: &mut Scratch) -> Result<()> {
@@ -433,13 +550,16 @@ impl ExecPlan {
                 }
                 let data = &mut bufs[step.dst.0][..out_total];
                 let (a_m, bn_b): (&[i32], &[i64]) = (&a.a_mant, &bn_enc[..c]);
-                let amax2 = par_map_amax(data, amax, self.workers, |i, v| {
+                // clamp like exec_matmul so batch-1 serving rows stay on
+                // the single-chunk inline path (no spawn per step per row)
+                let workers = self.workers.clamp(1, batch);
+                let amax2 = par_map_amax(data, amax, workers, |i, v| {
                     let ch = i % c;
                     clamp_i32(v as i64 * a_m[ch] as i64 + bn_b[ch])
                 });
                 let shift = ops::shift_for_amax(amax2, 16);
                 if shift > 0 {
-                    par_map_elems(data, self.workers, |_, v| {
+                    par_map_elems(data, workers, |_, v| {
                         fxp_round_shift(v as i64, shift) as i32
                     });
                 }

@@ -4,7 +4,8 @@
 //! a Rust training coordinator with two backends — AOT-compiled
 //! JAX/Pallas compute (HLO via PJRT) and a pure-Rust native trainer
 //! (`train::NativeBackend`) — plus a pure integer fixed-point inference
-//! engine.
+//! engine and a batched multi-model serving layer (`serve`) on its
+//! compiled-plan seam.
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
@@ -20,6 +21,7 @@ pub mod kernels;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod train;
 pub mod util;

@@ -1,0 +1,35 @@
+//! Batched serving layer on the compile-then-execute seam.
+//!
+//! PR 3 split inference into an immutable, `Sync` [`ExecPlan`] and
+//! per-thread `Scratch` state precisely so a serving layer could fan
+//! request threads out over one compiled plan — this module is that
+//! layer. It is synchronous at the API (`Server::infer` blocks until the
+//! request's logits are ready) and batched internally:
+//!
+//! * [`Registry`] — multi-model catalog keyed by `(name, n_bits)`; each
+//!   entry reuses the model's cache-backed shared plan;
+//! * [`Server`] — per-model FIFO submission queues whose pending requests
+//!   coalesce into dynamic micro-batches (up to the registered
+//!   `max_batch`), flushed on a size or queue-empty watermark — never a
+//!   timer, so batching behavior is deterministic and testable;
+//! * bounded per-model scratch pools (checkout/return, zero steady-state
+//!   growth) and per-model running [`ModelStats`] with analytic op
+//!   accounting.
+//!
+//! The load-bearing numeric contract: every response is bit-identical to
+//! a solo `Backend::Planned` forward of that request, regardless of
+//! arrival order, micro-batch composition, or client thread count. The
+//! engine's requantization statistics are batch-global, so this requires
+//! executing coalesced rows with per-request isolation — see
+//! [`ExecPlan::run_rows`] and DESIGN.md §"The serving layer".
+//!
+//! [`ExecPlan`]: crate::inference::ExecPlan
+//! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
+
+mod registry;
+mod server;
+mod stats;
+
+pub use registry::{ModelKey, Registry};
+pub use server::{ServeConfig, Server};
+pub use stats::ModelStats;

@@ -1,0 +1,141 @@
+//! Multi-model registry: named, bit-width-qualified handles to compiled
+//! execution plans.
+//!
+//! A deployment typically serves several hard-quantized variants of the
+//! same architecture side by side (the paper's Table 1 sweeps n_bits ∈
+//! {2, 4, 8} over one net), so the registry key is `(name, n_bits)` — the
+//! same network quantized at two widths is two distinct served models
+//! with distinct plans, stats, and scratch pools.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::inference::{ExecPlan, IntModel};
+
+/// Registry key: model name + quantization bit width.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelKey {
+    pub name: String,
+    pub n_bits: u32,
+}
+
+impl ModelKey {
+    pub fn new(name: impl Into<String>, n_bits: u32) -> ModelKey {
+        ModelKey { name: name.into(), n_bits }
+    }
+}
+
+impl fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@w{}", self.name, self.n_bits)
+    }
+}
+
+/// One registered model: the shared compiled plan plus the static facts
+/// the server needs per request (resolved once at registration).
+pub(crate) struct ModelEntry {
+    pub(crate) plan: Arc<ExecPlan>,
+    pub(crate) in_elems: usize,
+    pub(crate) out_per_img: usize,
+    /// micro-batch cap: the `max_batch` this model was registered with
+    /// (the cached shared plan may have been compiled for a larger batch
+    /// by an earlier `forward`; the server still honors the registered cap)
+    pub(crate) max_batch: usize,
+}
+
+/// Name → plan registry a [`Server`](super::Server) is built from.
+///
+/// `register` pulls the model's *cache-backed* shared plan
+/// ([`IntModel::shared_plan`]), so serving a model and calling its
+/// `forward()` directly execute one and the same compiled artifact — no
+/// second plan compilation, no drift between the two paths.
+#[derive(Default)]
+pub struct Registry {
+    models: BTreeMap<ModelKey, ModelEntry>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register `model` under `name` (keyed together with its bit width).
+    /// `max_batch` becomes the model's micro-batch cap: the server never
+    /// coalesces more requests than the plan was compiled for.
+    pub fn register(&mut self, name: &str, model: &IntModel, max_batch: usize) -> Result<ModelKey> {
+        ensure!(max_batch >= 1, "register needs max_batch >= 1");
+        let key = ModelKey::new(name, model.n_bits);
+        ensure!(
+            !self.models.contains_key(&key),
+            "model {key} is already registered"
+        );
+        let plan = model
+            .shared_plan(max_batch)
+            .with_context(|| format!("compiling plan for {key}"))?;
+        let entry = ModelEntry {
+            in_elems: plan.in_elems(),
+            out_per_img: plan.out_per_img(),
+            max_batch: max_batch.min(plan.max_batch()),
+            plan,
+        };
+        self.models.insert(key.clone(), entry);
+        Ok(key)
+    }
+
+    /// Registered keys, in deterministic (sorted) order.
+    pub fn keys(&self) -> Vec<ModelKey> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub(crate) fn into_entries(self) -> BTreeMap<ModelKey, ModelEntry> {
+        self.models
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::models;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn same_name_different_bits_coexist() {
+        let mut rng = Rng::new(1);
+        let (m2, c2) = models::lenet5ish(&mut rng, 2);
+        let (m8, c8) = models::lenet5ish(&mut rng, 8);
+        let model2 = IntModel::build(&m2, &c2).unwrap();
+        let model8 = IntModel::build(&m8, &c8).unwrap();
+        let mut reg = Registry::new();
+        let k2 = reg.register("lenet5", &model2, 4).unwrap();
+        let k8 = reg.register("lenet5", &model8, 4).unwrap();
+        assert_ne!(k2, k8);
+        assert_eq!(reg.len(), 2);
+        // duplicate key rejected
+        assert!(reg.register("lenet5", &model2, 4).is_err());
+        assert_eq!(format!("{k2}"), "lenet5@w2");
+    }
+
+    #[test]
+    fn registry_reuses_the_models_shared_plan() {
+        let mut rng = Rng::new(2);
+        let (man, ck) = models::lenet5ish(&mut rng, 2);
+        let model = IntModel::build(&man, &ck).unwrap();
+        let plan = model.shared_plan(6).unwrap();
+        let mut reg = Registry::new();
+        reg.register("lenet5", &model, 6).unwrap();
+        let entries = reg.into_entries();
+        let entry = entries.values().next().unwrap();
+        assert!(Arc::ptr_eq(&entry.plan, &plan), "registry compiled a second plan");
+    }
+}

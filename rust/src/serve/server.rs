@@ -1,0 +1,371 @@
+//! The synchronous batched inference server.
+//!
+//! ## Queue / flush policy (wall-clock-free)
+//!
+//! Callers block in [`Server::infer`]. Each request is appended to its
+//! model's FIFO submission queue; the first caller that finds the queue
+//! non-empty with no drain in flight becomes the **drainer**: it takes
+//! `min(pending, max_batch)` requests — the whole queue when traffic is
+//! light, a full micro-batch under saturation — executes them, scatters
+//! the logits back into each request's response slot, and wakes everyone.
+//! Flushing is therefore triggered purely by queue state (size watermark
+//! `max_batch`, or the executor going idle with work pending): there is no
+//! timer anywhere, so a given arrival order produces a reproducible batch
+//! partition — the property the conformance suite leans on. Drains are
+//! serialized per model (concurrency comes from row fan-out inside a
+//! batch and from other models); while a drain runs, new arrivals queue
+//! up and coalesce into the next micro-batch.
+//!
+//! ## Execution and the bit-exactness contract
+//!
+//! A drained micro-batch is gathered into a preallocated per-model buffer
+//! and driven through [`ExecPlan::run_rows`], which executes every row at
+//! batch 1 with per-request requantization isolation. Consequence: each
+//! response is **bit-identical to a solo `Backend::Planned` forward** of
+//! that request, independent of arrival order, batch composition, or
+//! thread count (`tests/serve_conformance.rs`, `tests/serve_concurrency.rs`).
+//!
+//! ## Scratch-pool lifecycle
+//!
+//! Row scratches (`ExecPlan::scratch_for(1)`) live in a bounded per-model
+//! [`ScratchPool`], filled *eagerly* at construction: `Server::new`
+//! creates exactly `workers` row scratches per model, a drain checks out
+//! up to `workers.min(rows)` of them and returns every one afterwards,
+//! and nothing ever creates more. The pool plus the preallocated
+//! gather/scatter buffers are therefore a fixed set of allocations from
+//! construction onward — serving performs zero steady-state growth,
+//! asserted via [`Server::pool_fingerprints`]. (Eager beats lazy here for
+//! determinism: a lazily-warmed pool's final size would depend on whether
+//! early traffic ever happened to coalesce a full-width batch.)
+//!
+//! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::inference::ScratchPool;
+use crate::util::pool;
+
+use super::registry::{ModelEntry, ModelKey, Registry};
+use super::stats::ModelStats;
+
+/// Server-wide tuning knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeConfig {
+    /// Row-parallel workers per micro-batch, which is also each model's
+    /// scratch-pool bound. 0 (the default) resolves to
+    /// `util::pool::default_workers()` (`SYMOG_WORKERS` honored).
+    pub workers: usize,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Response rendezvous for one request. Filled exactly once by whichever
+/// caller drains the batch containing the request.
+#[derive(Default)]
+struct Slot {
+    done: Mutex<Option<Result<Vec<f32>, String>>>,
+}
+
+impl Slot {
+    fn fill(&self, r: Result<Vec<f32>, String>) {
+        *lock(&self.done) = Some(r);
+    }
+
+    fn is_done(&self) -> bool {
+        lock(&self.done).is_some()
+    }
+
+    fn take(&self) -> Option<Result<Vec<f32>, String>> {
+        lock(&self.done).take()
+    }
+}
+
+struct Request {
+    image: Vec<f32>,
+    slot: Arc<Slot>,
+}
+
+struct QueueState {
+    pending: VecDeque<Request>,
+    /// true while some caller is executing a drained micro-batch
+    draining: bool,
+}
+
+/// Preallocated gather/scatter staging for one model (drains are
+/// serialized per model, so one pair suffices and is never contended).
+struct ExecBufs {
+    gather: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+struct ModelState {
+    entry: ModelEntry,
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    pool: ScratchPool,
+    bufs: Mutex<ExecBufs>,
+    stats: Mutex<ModelStats>,
+    workers: usize,
+}
+
+impl ModelState {
+    /// Execute one drained micro-batch: gather rows, run with per-request
+    /// isolation, scatter logits into the response slots, record stats.
+    fn run_batch(&self, reqs: &[Request]) {
+        let k = reqs.len();
+        let (ie, oe) = (self.entry.in_elems, self.entry.out_per_img);
+        let want = self.workers.min(k);
+        let mut scratches = self.pool.checkout(want, &mut || self.entry.plan.scratch_for(1));
+        if scratches.is_empty() {
+            // unreachable while drains are serialized (the pool bound is
+            // >= 1 and every drain returns its scratches), but stay safe
+            scratches.push(self.entry.plan.scratch_for(1));
+        }
+        let mut bufs = lock(&self.bufs);
+        for (i, r) in reqs.iter().enumerate() {
+            bufs.gather[i * ie..(i + 1) * ie].copy_from_slice(&r.image);
+        }
+        let ExecBufs { gather, logits } = &mut *bufs;
+        match self.entry.plan.run_rows(
+            &gather[..k * ie],
+            k,
+            &mut scratches,
+            &mut logits[..k * oe],
+        ) {
+            Ok(()) => {
+                for (i, r) in reqs.iter().enumerate() {
+                    r.slot.fill(Ok(logits[i * oe..(i + 1) * oe].to_vec()));
+                }
+                let counts = self.entry.plan.op_counts(k);
+                lock(&self.stats).record_batch(k as u64, self.entry.max_batch as u64, &counts);
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for r in reqs {
+                    r.slot.fill(Err(msg.clone()));
+                }
+            }
+        }
+        drop(bufs);
+        self.pool.put_all(scratches);
+    }
+}
+
+/// Post-drain cleanup, run on both normal exit and unwind: answer any
+/// request the drain left unanswered, release the drain flag, and wake
+/// every waiter. Without this a panic inside a micro-batch would leave
+/// `draining == true` forever, deadlocking all present and future callers
+/// of the model.
+struct DrainGuard<'a> {
+    m: &'a ModelState,
+    reqs: &'a [Request],
+}
+
+impl Drop for DrainGuard<'_> {
+    fn drop(&mut self) {
+        for r in self.reqs {
+            if !r.slot.is_done() {
+                r.slot.fill(Err("drain panicked while executing this batch".to_string()));
+            }
+        }
+        lock(&self.m.q).draining = false;
+        self.m.cv.notify_all();
+    }
+}
+
+/// Multi-model batched inference server (see the module docs for the
+/// queue, execution, and pooling contracts).
+pub struct Server {
+    models: BTreeMap<ModelKey, ModelState>,
+}
+
+impl Server {
+    /// Build a server from a populated [`Registry`].
+    pub fn new(registry: Registry, cfg: ServeConfig) -> Server {
+        let workers = if cfg.workers == 0 {
+            pool::default_workers()
+        } else {
+            cfg.workers.min(64)
+        };
+        let models = registry
+            .into_entries()
+            .into_iter()
+            .map(|(key, entry)| {
+                let state = ModelState {
+                    q: Mutex::new(QueueState { pending: VecDeque::new(), draining: false }),
+                    cv: Condvar::new(),
+                    pool: ScratchPool::new(workers),
+                    bufs: Mutex::new(ExecBufs {
+                        gather: vec![0f32; entry.max_batch * entry.in_elems],
+                        logits: vec![0f32; entry.max_batch * entry.out_per_img],
+                    }),
+                    stats: Mutex::new(ModelStats::default()),
+                    workers,
+                    entry,
+                };
+                // eager fill: the pool is a fixed allocation set from day 0.
+                // Seeded *through* checkout so these scratches count toward
+                // the pool's lifetime-creation bound — the "nothing ever
+                // creates more" contract holds by construction, not just
+                // because drains happen to be serialized
+                let mut mk = || state.entry.plan.scratch_for(1);
+                let seed = state.pool.checkout(workers, &mut mk);
+                state.pool.put_all(seed);
+                (key, state)
+            })
+            .collect();
+        Server { models }
+    }
+
+    fn model(&self, key: &ModelKey) -> Result<&ModelState> {
+        self.models
+            .get(key)
+            .with_context(|| format!("model {key} is not registered"))
+    }
+
+    /// Registered keys, in deterministic (sorted) order.
+    pub fn keys(&self) -> Vec<ModelKey> {
+        self.models.keys().cloned().collect()
+    }
+
+    /// The micro-batch cap `key` was registered with.
+    pub fn max_batch(&self, key: &ModelKey) -> Result<usize> {
+        Ok(self.model(key)?.entry.max_batch)
+    }
+
+    /// Snapshot of the model's running stats.
+    pub fn stats(&self, key: &ModelKey) -> Result<ModelStats> {
+        Ok(lock(&self.model(key)?.stats).clone())
+    }
+
+    /// Canonical (sorted) fingerprint set of the model's serving
+    /// allocations: every pooled row scratch plus the gather/scatter
+    /// staging buffers. With no request in flight, two equal snapshots
+    /// prove zero steady-state allocation in the serving engine.
+    pub fn pool_fingerprints(&self, key: &ModelKey) -> Result<Vec<Vec<(usize, usize)>>> {
+        let m = self.model(key)?;
+        let mut fps = m.pool.fingerprints();
+        let b = lock(&m.bufs);
+        fps.push(vec![
+            (b.gather.as_ptr() as usize, b.gather.capacity()),
+            (b.logits.as_ptr() as usize, b.logits.capacity()),
+        ]);
+        fps.sort();
+        Ok(fps)
+    }
+
+    /// Classify one image, blocking until its logits are ready. The call
+    /// enqueues the request and then *participates*: whichever caller
+    /// finds the queue ready first drains and executes the micro-batch
+    /// containing it (leader/follower — no dedicated executor thread, no
+    /// timer). Returns the request's logits, bit-identical to a solo
+    /// planned forward of `image`.
+    pub fn infer(&self, key: &ModelKey, image: &[f32]) -> Result<Vec<f32>> {
+        let m = self.model(key)?;
+        ensure!(
+            image.len() == m.entry.in_elems,
+            "{key}: image has {} elements, model expects {}",
+            image.len(),
+            m.entry.in_elems
+        );
+        let slot = Arc::new(Slot::default());
+        {
+            let mut q = lock(&m.q);
+            q.pending.push_back(Request { image: image.to_vec(), slot: Arc::clone(&slot) });
+        }
+        loop {
+            // decide under the queue lock: return, drain, or wait. The
+            // done-check happens with the lock held so a completion that
+            // races this loop is never missed (the completing drainer must
+            // take the queue lock before it notifies).
+            let drained: Option<Vec<Request>> = {
+                let mut q = lock(&m.q);
+                loop {
+                    if slot.is_done() {
+                        break None;
+                    }
+                    if !q.draining && !q.pending.is_empty() {
+                        q.draining = true;
+                        let k = q.pending.len().min(m.entry.max_batch);
+                        break Some(q.pending.drain(..k).collect());
+                    }
+                    q = m.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            match drained {
+                None => {
+                    let res = slot.take().expect("slot checked done under the lock");
+                    return res.map_err(|msg| anyhow!("{key}: {msg}"));
+                }
+                Some(reqs) => {
+                    // the guard also covers unwinding: if the drain panics
+                    // (kernel bug mid-batch), fail this batch — unfilled
+                    // slots get an error, the flag resets, followers wake —
+                    // instead of wedging the model behind draining == true
+                    let guard = DrainGuard { m, reqs: &reqs };
+                    m.run_batch(&reqs);
+                    drop(guard);
+                    // loop back: our own request was either in this batch
+                    // or is now closer to the queue front
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::IntModel;
+    use crate::testing::models;
+    use crate::util::rng::Rng;
+
+    fn lenet_server(n_bits: u32) -> (Server, ModelKey, IntModel, usize) {
+        let mut rng = Rng::new(0x5E);
+        let (man, ck) = models::lenet5ish(&mut rng, n_bits);
+        let model = IntModel::build(&man, &ck).unwrap();
+        let solo = IntModel::build(&man, &ck).unwrap();
+        let elems: usize = man.input_shape.iter().product();
+        let mut reg = Registry::new();
+        let key = reg.register("lenet5", &model, 4).unwrap();
+        (Server::new(reg, ServeConfig { workers: 2 }), key, solo, elems)
+    }
+
+    #[test]
+    fn single_caller_matches_solo_forward_and_counts() {
+        let (server, key, solo, elems) = lenet_server(2);
+        let mut rng = Rng::new(7);
+        for i in 0..5u64 {
+            let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+            let got = server.infer(&key, &img).unwrap();
+            let (want, _) = solo.forward(&img, 1).unwrap();
+            assert_eq!(got, want, "request {i} diverged from solo forward");
+        }
+        let stats = server.stats(&key).unwrap();
+        assert_eq!(stats.requests, 5);
+        // a lone caller never queues behind itself: every batch is size 1
+        assert_eq!(stats.batches, 5);
+        assert_eq!(stats.max_occupancy, 1);
+        let per_row = solo.cost_report(1).unwrap().counts;
+        let mut want_counts = crate::inference::OpCounts::default();
+        for _ in 0..5 {
+            want_counts.merge(&per_row);
+        }
+        assert_eq!(stats.op_counts, want_counts);
+    }
+
+    #[test]
+    fn rejects_unknown_model_and_bad_image() {
+        let (server, key, _, elems) = lenet_server(2);
+        let img = vec![0f32; elems];
+        let missing = ModelKey::new("nope", 2);
+        assert!(server.infer(&missing, &img).is_err());
+        assert!(server.stats(&missing).is_err());
+        assert!(server.infer(&key, &img[..elems - 1]).is_err());
+    }
+}

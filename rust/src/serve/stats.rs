@@ -1,0 +1,81 @@
+//! Per-model running serving statistics.
+//!
+//! Counters are exact (the concurrency test asserts `requests` sums to
+//! precisely the number of `infer` calls) and op accounting is analytic:
+//! each micro-batch bills `ExecPlan::op_counts` for its row count, so the
+//! totals are a pure function of traffic — no instrumentation on the hot
+//! path beyond one mutex-guarded add per batch.
+
+use crate::inference::OpCounts;
+
+/// Snapshot of one model's serving counters (see [`Server::stats`]).
+///
+/// [`Server::stats`]: super::Server::stats
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ModelStats {
+    /// requests answered (== rows executed; every request is one image)
+    pub requests: u64,
+    /// micro-batches flushed
+    pub batches: u64,
+    /// batches that hit the size watermark (occupancy == the model's cap)
+    pub full_batches: u64,
+    /// largest micro-batch occupancy seen
+    pub max_occupancy: u64,
+    /// analytic integer-op totals over all served requests
+    pub op_counts: OpCounts,
+}
+
+impl ModelStats {
+    /// Mean requests per flushed micro-batch (1.0 when traffic never
+    /// queues; approaches the cap under saturation).
+    pub fn mean_occupancy(&self) -> f64 {
+        self.requests as f64 / self.batches.max(1) as f64
+    }
+
+    pub(crate) fn record_batch(&mut self, rows: u64, cap: u64, counts: &OpCounts) {
+        self.requests += rows;
+        self.batches += 1;
+        if rows == cap {
+            self.full_batches += 1;
+        }
+        self.max_occupancy = self.max_occupancy.max(rows);
+        self.op_counts.merge(counts);
+    }
+
+    /// One-line human summary for drivers/benches.
+    pub fn render(&self) -> String {
+        format!(
+            "{} requests in {} batches (mean occupancy {:.2}, max {}, {} full) — \
+             {} adds, {} mults, {} shifts",
+            self.requests,
+            self.batches,
+            self.mean_occupancy(),
+            self.max_occupancy,
+            self.full_batches,
+            self.op_counts.acc_adds,
+            self.op_counts.int_mults,
+            self.op_counts.shifts,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_batch_accumulates_exactly() {
+        let mut s = ModelStats::default();
+        let c = OpCounts { acc_adds: 10, int_mults: 2, shifts: 3, compares: 1 };
+        s.record_batch(3, 4, &c);
+        s.record_batch(4, 4, &c);
+        s.record_batch(1, 4, &c);
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.full_batches, 1);
+        assert_eq!(s.max_occupancy, 4);
+        assert_eq!(s.op_counts.acc_adds, 30);
+        assert!((s.mean_occupancy() - 8.0 / 3.0).abs() < 1e-12);
+        assert!(s.render().contains("8 requests in 3 batches"));
+    }
+}

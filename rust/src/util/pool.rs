@@ -41,6 +41,12 @@ where
     }
     let workers = workers.clamp(1, n);
     let chunk = n.div_ceil(workers);
+    if chunk >= n {
+        // single chunk: run inline — a thread spawn would only add latency
+        // (this is the common case for batch-of-1 serving rows)
+        f(0, data);
+        return;
+    }
     std::thread::scope(|s| {
         for (i, part) in data.chunks_mut(chunk).enumerate() {
             let f = &f;
@@ -54,11 +60,15 @@ pub fn par_map<R: Send, F>(n: usize, workers: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Sync,
 {
+    let workers = workers.clamp(1, n.max(1));
+    let chunk = n.div_ceil(workers.max(1)).max(1);
+    if chunk >= n {
+        // single chunk: compute inline — no spawn, no staging allocations
+        return (0..n).map(f).collect();
+    }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let base: Vec<usize> = (0..n).collect();
     // pair each output slot with its index via chunked ranges
-    let workers = workers.clamp(1, n.max(1));
-    let chunk = n.div_ceil(workers.max(1)).max(1);
     std::thread::scope(|s| {
         for (slots, idxs) in out.chunks_mut(chunk).zip(base.chunks(chunk)) {
             let f = &f;

@@ -1,0 +1,188 @@
+//! Serving concurrency suite: M client threads hammering one `Server`
+//! must observe
+//!
+//! (a) per-request logits bit-identical to the solo planned oracle, no
+//!     matter how the scheduler interleaves arrivals into micro-batches;
+//! (b) a scratch-pool/staging-buffer fingerprint set that is *stable*
+//!     across load rounds — zero steady-state allocation in the serving
+//!     engine;
+//! (c) exact counter accounting: request counters sum to precisely the
+//!     number of `infer` calls, and analytic op totals equal
+//!     requests x per-row counts (batching must never change what a
+//!     request costs).
+//!
+//! Request images are derived from per-request seeds, so the oracle is
+//! precomputed single-threaded and every thread checks its own answers.
+
+use symog::inference::{IntModel, OpCounts};
+use symog::serve::{ModelKey, Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+const M: usize = 4; // client threads
+const K: usize = 12; // requests per thread per round
+const ROUNDS: usize = 3; // one warmup + two steady-state rounds
+
+struct Case {
+    key: ModelKey,
+    image: Vec<f32>,
+    want: Vec<f32>,
+}
+
+/// Deterministic request image for (thread, index).
+fn request_image(elems: usize, t: usize, i: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x9E37 ^ ((t * K + i) as u64).wrapping_mul(0xA5A5A5A5A5A5));
+    (0..elems).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn hammered_server_is_bit_exact_allocation_stable_and_counts_exactly() {
+    let mut rng = Rng::new(0xC0);
+    let (man_a, ck_a) = models::lenet5ish(&mut rng, 2);
+    let (man_b, ck_b) = models::densenetish(&mut rng, 4);
+    let model_a = IntModel::build(&man_a, &ck_a).unwrap();
+    let model_b = IntModel::build(&man_b, &ck_b).unwrap();
+    let solo_a = IntModel::build(&man_a, &ck_a).unwrap();
+    let solo_b = IntModel::build(&man_b, &ck_b).unwrap();
+    let elems_a: usize = man_a.input_shape.iter().product();
+    let elems_b: usize = man_b.input_shape.iter().product();
+
+    let mut reg = Registry::new();
+    let key_a = reg.register("lenet5", &model_a, 4).unwrap();
+    let key_b = reg.register("densenet", &model_b, 4).unwrap();
+    let workers = 3usize;
+    let server = Server::new(reg, ServeConfig { workers });
+
+    // single-threaded oracle: solo planned forward per request. Threads
+    // alternate between the two registered models so multi-model serving
+    // is exercised *under* contention, not just sequentially.
+    let corpus: Vec<Vec<Case>> = (0..M)
+        .map(|t| {
+            (0..K)
+                .map(|i| {
+                    let to_a = (t + i) % 2 == 0;
+                    let (key, solo, elems) = if to_a {
+                        (&key_a, &solo_a, elems_a)
+                    } else {
+                        (&key_b, &solo_b, elems_b)
+                    };
+                    let image = request_image(elems, t, i);
+                    let (want, _) = solo.forward(&image, 1).unwrap();
+                    Case { key: key.clone(), image, want }
+                })
+                .collect()
+        })
+        .collect();
+
+    let hammer = |round: usize| {
+        std::thread::scope(|sc| {
+            for (t, cases) in corpus.iter().enumerate() {
+                let server = &server;
+                sc.spawn(move || {
+                    for (i, case) in cases.iter().enumerate() {
+                        let got = server.infer(&case.key, &case.image).unwrap();
+                        assert_eq!(
+                            got, case.want,
+                            "round {round} thread {t} request {i} ({}): \
+                             served logits != solo planned forward",
+                            case.key
+                        );
+                    }
+                });
+            }
+        });
+    };
+
+    // (a) bit-exactness under contention, every round
+    hammer(0); // warmup: touches every pooled allocation
+    let fp_a = server.pool_fingerprints(&key_a).unwrap();
+    let fp_b = server.pool_fingerprints(&key_b).unwrap();
+    // eager pool: `workers` row scratches + one gather/scatter entry
+    assert_eq!(fp_a.len(), workers + 1);
+    assert_eq!(fp_b.len(), workers + 1);
+    for round in 1..ROUNDS {
+        hammer(round);
+    }
+
+    // (b) zero steady-state allocation: the fingerprint *set* is unchanged
+    assert_eq!(
+        fp_a,
+        server.pool_fingerprints(&key_a).unwrap(),
+        "lenet5 scratch pool grew or reallocated under steady-state load"
+    );
+    assert_eq!(
+        fp_b,
+        server.pool_fingerprints(&key_b).unwrap(),
+        "densenet scratch pool grew or reallocated under steady-state load"
+    );
+
+    // (c) exact accounting
+    let sa = server.stats(&key_a).unwrap();
+    let sb = server.stats(&key_b).unwrap();
+    let total = (ROUNDS * M * K) as u64;
+    assert_eq!(sa.requests + sb.requests, total, "request counters lost or double-counted");
+    let n_a: usize = (0..M)
+        .map(|t| (0..K).filter(|i| (t + i) % 2 == 0).count())
+        .sum();
+    assert_eq!(sa.requests, (ROUNDS * n_a) as u64);
+    assert_eq!(sb.requests, (ROUNDS * (M * K - n_a)) as u64);
+    for (name, s, solo) in [("lenet5", &sa, &solo_a), ("densenet", &sb, &solo_b)] {
+        assert!(s.batches >= 1 && s.batches <= s.requests, "{name}: absurd batch count");
+        assert!(
+            s.mean_occupancy() >= 1.0 && s.max_occupancy <= 4,
+            "{name}: occupancy outside [1, max_batch]"
+        );
+        // batching must not change what a request costs: totals are exactly
+        // requests x the analytic per-row counts, whatever the partition
+        let per_row = solo.cost_report(1).unwrap().counts;
+        let mut want = OpCounts::default();
+        for _ in 0..s.requests {
+            want.merge(&per_row);
+        }
+        assert_eq!(s.op_counts, want, "{name}: op accounting depends on batching");
+    }
+}
+
+#[test]
+fn single_model_saturation_reaches_full_batches() {
+    // enough same-model pressure that coalescing actually happens; the
+    // invariants hold at any occupancy, this just makes sure the size
+    // watermark path is exercised too (stats can't prove it fired on a
+    // given scheduler, so assert only the occupancy bound + exact totals)
+    let mut rng = Rng::new(0xD1);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let solo = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let cap = 3usize;
+    let key = reg.register("lenet5", &model, cap).unwrap();
+    let server = Server::new(reg, ServeConfig { workers: 2 });
+
+    let corpus: Vec<Vec<Case>> = (0..M)
+        .map(|t| {
+            (0..K)
+                .map(|i| {
+                    let image = request_image(elems, t, i);
+                    let (want, _) = solo.forward(&image, 1).unwrap();
+                    Case { key: key.clone(), image, want }
+                })
+                .collect()
+        })
+        .collect();
+    std::thread::scope(|sc| {
+        for cases in &corpus {
+            let server = &server;
+            sc.spawn(move || {
+                for case in cases {
+                    let got = server.infer(&case.key, &case.image).unwrap();
+                    assert_eq!(got, case.want, "{}: diverged under saturation", case.key);
+                }
+            });
+        }
+    });
+    let s = server.stats(&key).unwrap();
+    assert_eq!(s.requests, (M * K) as u64);
+    assert!(s.max_occupancy <= cap as u64, "micro-batch exceeded the registered cap");
+    assert!(s.batches >= (M * K).div_ceil(cap) as u64, "more rows per batch than the cap allows");
+}

@@ -1,0 +1,182 @@
+//! Serving conformance suite: batching invariance of the serve execution
+//! path.
+//!
+//! The contract under test (see `serve/` module docs and DESIGN.md §"The
+//! serving layer"): for every zoo model and bit width, **any** partition
+//! of K requests into micro-batches — ragged tails, batch-of-1, the whole
+//! set at once — produces per-request logits bit-identical to running
+//! each request through a solo `Backend::Planned` forward. This is what
+//! makes dynamic batching an invisible implementation detail to clients:
+//! the engine's requantization statistics are batch-global, so the
+//! serving path must (and does) execute coalesced rows with per-request
+//! isolation (`ExecPlan::run_rows`) instead of one whole-batch forward.
+
+use symog::coordinator::Checkpoint;
+use symog::inference::IntModel;
+use symog::runtime::Manifest;
+use symog::serve::{ModelKey, Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+/// The full zoo: every architecture shape the planned executor supports,
+/// including the fusion-hostile `oddball` and the concat-heavy
+/// `densenetish` (retained slots are where batching bugs would hide).
+fn zoo(rng: &mut Rng, n_bits: u32) -> Vec<(&'static str, (Manifest, Checkpoint))> {
+    vec![
+        ("lenet5ish", models::lenet5ish(rng, n_bits)),
+        ("densenetish", models::densenetish(rng, n_bits)),
+        ("vgg7ish", models::vgg7ish(rng, n_bits, 4)),
+        ("oddball", models::oddball(rng, n_bits)),
+    ]
+}
+
+/// Representative arrival patterns for 7 requests: one full drain, ragged
+/// splits, pure batch-of-1 traffic, and mixed tails.
+const PARTITIONS: &[&[usize]] = &[
+    &[7],
+    &[4, 3],
+    &[1, 1, 1, 1, 1, 1, 1],
+    &[2, 2, 2, 1],
+    &[6, 1],
+    &[5, 1, 1],
+];
+
+#[test]
+fn any_partition_into_micro_batches_matches_solo_forwards() {
+    const K: usize = 7;
+    for n_bits in [2u32, 4, 8] {
+        let mut rng = Rng::new(0x5EC0 ^ ((n_bits as u64) << 16));
+        for (name, (man, ck)) in zoo(&mut rng, n_bits) {
+            let model = IntModel::build(&man, &ck).unwrap();
+            let plan = model.shared_plan(8).unwrap();
+            let (e, o) = (plan.in_elems(), plan.out_per_img());
+            let images: Vec<f32> = (0..K * e).map(|_| rng.normal()).collect();
+
+            // solo oracle: each request through a batch-1 planned forward
+            let solo: Vec<Vec<f32>> = (0..K)
+                .map(|r| model.forward(&images[r * e..(r + 1) * e], 1).unwrap().0)
+                .collect();
+
+            // scatter-pool width must be bit-irrelevant too
+            for n_scratch in [1usize, 3] {
+                let mut scratches: Vec<_> = (0..n_scratch).map(|_| plan.scratch_for(1)).collect();
+                for parts in PARTITIONS {
+                    assert_eq!(parts.iter().sum::<usize>(), K);
+                    let mut off = 0usize;
+                    for &k in *parts {
+                        let mut out = vec![0f32; k * o];
+                        plan.run_rows(
+                            &images[off * e..(off + k) * e],
+                            k,
+                            &mut scratches,
+                            &mut out,
+                        )
+                        .unwrap();
+                        for r in 0..k {
+                            assert_eq!(
+                                &out[r * o..(r + 1) * o],
+                                &solo[off + r][..],
+                                "{name} n_bits={n_bits} partition {parts:?} \
+                                 scratches={n_scratch}: row {} diverged from solo",
+                                off + r
+                            );
+                        }
+                        off += k;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn server_serves_whole_zoo_bit_identical_to_solo() {
+    // one server, all 12 (model, n_bits) combinations registered side by
+    // side — the multi-model registry path end to end
+    let mut build_rng = Rng::new(0xCAFE);
+    let mut reg = Registry::new();
+    let mut oracles: Vec<(ModelKey, IntModel, usize)> = Vec::new();
+    for n_bits in [2u32, 4, 8] {
+        for (name, (man, ck)) in zoo(&mut build_rng, n_bits) {
+            let model = IntModel::build(&man, &ck).unwrap();
+            let solo = IntModel::build(&man, &ck).unwrap();
+            let key = reg.register(name, &model, 4).unwrap();
+            let elems: usize = man.input_shape.iter().product();
+            oracles.push((key, solo, elems));
+        }
+    }
+    assert_eq!(reg.len(), 12);
+    let server = Server::new(reg, ServeConfig { workers: 2 });
+    assert_eq!(server.keys().len(), 12);
+
+    let mut rng = Rng::new(0xBEEF);
+    for (key, solo, elems) in &oracles {
+        for i in 0..3u32 {
+            let img: Vec<f32> = (0..*elems).map(|_| rng.normal()).collect();
+            let got = server.infer(key, &img).unwrap();
+            let (want, _) = solo.forward(&img, 1).unwrap();
+            assert_eq!(got, want, "{key} request {i}: served logits diverged");
+        }
+        let stats = server.stats(key).unwrap();
+        assert_eq!(stats.requests, 3, "{key}: request counter drifted");
+        assert_eq!(stats.batches, 3, "{key}: a lone caller never queues");
+    }
+}
+
+#[test]
+fn run_rows_rejects_misuse() {
+    let mut rng = Rng::new(0xBAD);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let plan_a = model.plan(4).unwrap();
+    let plan_b = model.plan(4).unwrap();
+    let (e, o) = (plan_a.in_elems(), plan_a.out_per_img());
+    let images: Vec<f32> = (0..2 * e).map(|_| rng.normal()).collect();
+    let mut out = vec![0f32; 2 * o];
+
+    // scratch bound to a different plan
+    let mut wrong = vec![plan_b.scratch_for(1)];
+    assert!(plan_a.run_rows(&images, 2, &mut wrong, &mut out).is_err());
+
+    let mut ok = vec![plan_a.scratch_for(1)];
+    // output buffer of the wrong size
+    assert!(plan_a
+        .run_rows(&images, 2, &mut ok, &mut out[..o])
+        .is_err());
+    // input slice of the wrong size
+    assert!(plan_a
+        .run_rows(&images[..e - 1], 1, &mut ok, &mut out[..o])
+        .is_err());
+    // no scratches at all
+    assert!(plan_a
+        .run_rows(&images, 2, &mut [], &mut out)
+        .is_err());
+    // a row scratch cannot hold a multi-image batch
+    let mut row = plan_a.scratch_for(1);
+    assert!(plan_a.run_into(&images, 2, &mut row, &mut out).is_err());
+    // and the well-formed call still works after all the rejections
+    plan_a.run_rows(&images, 2, &mut ok, &mut out).unwrap();
+}
+
+#[test]
+fn row_scratch_is_fraction_of_full_arena_and_reusable() {
+    let mut rng = Rng::new(0xF00D);
+    let (man, ck) = models::vgg7ish(&mut rng, 2, 4);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let plan = model.plan(8).unwrap();
+    let full = plan.scratch();
+    let row = plan.scratch_for(1);
+    assert_eq!(
+        row.arena_bytes() * 8,
+        full.arena_bytes(),
+        "row scratch should hold exactly 1/max_batch of the activation arena"
+    );
+    // a row scratch sized mid-way also works and is batch-capped
+    let mut mid = plan.scratch_for(3);
+    let e = plan.in_elems();
+    let images: Vec<f32> = (0..3 * e).map(|_| rng.normal()).collect();
+    let got = plan.run(&images, 3, &mut mid).unwrap();
+    let (want, _) = model.forward(&images, 3).unwrap();
+    assert_eq!(got, want, "mid-capacity scratch diverged from the shared-plan forward");
+    assert!(plan.run(&images, 3, &mut plan.scratch_for(2)).is_err());
+}
