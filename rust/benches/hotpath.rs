@@ -13,8 +13,12 @@
 //!      `serve::Server` (dynamic micro-batching, per-request isolation)
 //!      vs solo batch-1 planned forwards of the identical corpus
 //!      (bit-identity asserted before timing).
-//!      Sections 1+2 emit BENCH_hotpath.json at the repo root so the perf
-//!      trajectory is tracked PR over PR (CI gates on "gemm,serve").
+//!   2b. `bitslice` — the bit-sliced AND/popcount kernel on 2-/3-bit
+//!      conv/dense shapes vs the naive loops, with engagement asserted
+//!      (`kernel_name` must resolve to "bitslice") and the active
+//!      `SYMOG_SIMD` dispatch level printed. Sections 1+2+2b emit
+//!      BENCH_hotpath.json at the repo root so the perf trajectory is
+//!      tracked PR over PR (CI gates on "gemm,serve,bitslice").
 //!   3. `runtime` — train-step latency breakdown (batch assembly /
 //!      literal upload / execute) for the lenet5 artifact (the L3 target
 //!      is <10% of step time outside `execute`) plus eval and
@@ -54,7 +58,10 @@ fn main() -> Result<()> {
     if want("serve") {
         serve_benches(&mut report, &mut cases_json)?;
     }
-    if want("gemm") || want("serve") {
+    if want("bitslice") {
+        bitslice_benches(&mut report, &mut cases_json)?;
+    }
+    if want("gemm") || want("serve") || want("bitslice") {
         // one report for every gated ratio family (bench_check reads this)
         top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
         let workers = symog::util::pool::default_workers();
@@ -160,6 +167,117 @@ fn conv_weights(rng: &mut Rng, numel: usize, n_bits: u32, zero_frac: f32, delta:
 
 fn json_num(v: f64) -> Json {
     Json::Num(v)
+}
+
+/// Bit-sliced AND/popcount kernel on 2-/3-bit conv/dense shapes vs the
+/// naive loops. Engagement is asserted before timing — every case must
+/// resolve to the "bitslice" kernel, so a selection regression fails the
+/// bench instead of silently timing the multiply path — and bit-identity
+/// is gated exactly like the gemm section.
+fn bitslice_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<()> {
+    use symog::inference::kernel_name;
+    use symog::kernels::bitslice::simd_level;
+    println!("--- bit-sliced popcount kernel (SIMD level: {}) ---", simd_level().name());
+    let delta = 0.25f32;
+
+    // (name, h, cin, cout, n_bits, zero_frac): the uniform-ternary conv
+    // and dense shapes the gemm section also runs (there they route to
+    // this kernel too, post cost race) plus a 3-bit two-plane conv
+    let conv_cases: &[(&str, usize, usize, usize, u32, f32)] = &[
+        ("bitslice conv3 8x8 128->128 w2", 8, 128, 128, 2, 0.34),
+        ("bitslice conv3 16x16 64->64 w3", 16, 64, 64, 3, 0.0),
+    ];
+    for &(name, h, cin, cout, n_bits, zero_frac) in conv_cases {
+        let mut rng = Rng::new(0xB175);
+        let (n, k) = (32usize, 3usize);
+        let xs: Vec<f32> = (0..n * h * h * cin).map(|_| rng.normal()).collect();
+        let ws = conv_weights(&mut rng, k * k * cin * cout, n_bits, zero_frac, delta);
+        let qx = QTensor::from_f32(&xs, [n, h, h, cin], 8);
+        let qw = QWeight::encode(&ws, [k, k, cin, cout], delta, n_bits);
+        assert_eq!(
+            kernel_name(&qw, k * k * cin, cout),
+            "bitslice",
+            "{name}: popcount kernel did not engage"
+        );
+        let macs = (n * h * h * cout * k * k * cin) as u64;
+
+        // correctness gate before timing anything
+        let mut cg = OpCounts::default();
+        let mut cn = OpCounts::default();
+        let got = conv2d(&qx, &qw, 1, true, &mut cg);
+        let want = conv2d_naive(&qx, &qw, 1, true, &mut cn);
+        assert_eq!(got.data, want.data, "{name}: bit-sliced output differs from naive");
+        assert_eq!(cg, cn, "{name}: op counts differ");
+
+        let naive = bench(&format!("naive {name}"), 1, 3, || {
+            let mut c = OpCounts::default();
+            std::hint::black_box(conv2d_naive(&qx, &qw, 1, true, &mut c));
+        });
+        let fast = bench(&format!("bits  {name}"), 2, 10, || {
+            let mut c = OpCounts::default();
+            std::hint::black_box(conv2d(&qx, &qw, 1, true, &mut c));
+        });
+        let speedup = naive.median_s / fast.median_s;
+        println!(
+            "{}\n{}\n  -> {:.1} GMAC/s vs {:.1} GMAC/s: {:.2}x speedup",
+            naive.row(),
+            fast.row(),
+            macs as f64 / naive.median_s / 1e9,
+            macs as f64 / fast.median_s / 1e9,
+            speedup,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o.insert("kind".to_string(), Json::Str("bitslice".to_string()));
+        o.insert("batch".to_string(), json_num(n as f64));
+        o.insert("macs".to_string(), json_num(macs as f64));
+        o.insert("n_bits".to_string(), json_num(n_bits as f64));
+        o.insert("naive_s".to_string(), json_num(naive.median_s));
+        o.insert("gemm_s".to_string(), json_num(fast.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        o.insert("bit_identical".to_string(), Json::Bool(true));
+        cases_json.push(Json::Obj(o));
+        report.push(naive);
+        report.push(fast);
+    }
+
+    // dense classifier-head shape, uniform ternary
+    let (dn, fi, fo) = (64usize, 2048usize, 512usize);
+    let mut rng = Rng::new(0xB175D);
+    let xs: Vec<f32> = (0..dn * fi).map(|_| rng.normal()).collect();
+    let ws = conv_weights(&mut rng, fi * fo, 2, 0.34, delta);
+    let qx = QTensor::from_f32(&xs, [dn, 1, 1, fi], 8);
+    let qw = QWeight::encode(&ws, [fi, fo, 1, 1], delta, 2);
+    assert_eq!(kernel_name(&qw, fi, fo), "bitslice", "dense: popcount kernel did not engage");
+    let macs = (dn * fi * fo) as u64;
+    let mut cg = OpCounts::default();
+    let mut cn = OpCounts::default();
+    assert_eq!(dense(&qx, &qw, &mut cg).data, dense_naive(&qx, &qw, &mut cn).data);
+    assert_eq!(cg, cn);
+    let naive = bench("naive bitslice dense 2048->512 w2", 1, 5, || {
+        let mut c = OpCounts::default();
+        std::hint::black_box(dense_naive(&qx, &qw, &mut c));
+    });
+    let fast = bench("bits  bitslice dense 2048->512 w2", 2, 10, || {
+        let mut c = OpCounts::default();
+        std::hint::black_box(dense(&qx, &qw, &mut c));
+    });
+    let speedup = naive.median_s / fast.median_s;
+    println!("{}\n{}\n  -> {:.2}x speedup", naive.row(), fast.row(), speedup);
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str("bitslice dense 2048->512 w2".to_string()));
+    o.insert("kind".to_string(), Json::Str("bitslice".to_string()));
+    o.insert("batch".to_string(), json_num(dn as f64));
+    o.insert("macs".to_string(), json_num(macs as f64));
+    o.insert("n_bits".to_string(), json_num(2.0));
+    o.insert("naive_s".to_string(), json_num(naive.median_s));
+    o.insert("gemm_s".to_string(), json_num(fast.median_s));
+    o.insert("speedup".to_string(), json_num(speedup));
+    o.insert("bit_identical".to_string(), Json::Bool(true));
+    cases_json.push(Json::Obj(o));
+    report.push(naive);
+    report.push(fast);
+    Ok(())
 }
 
 /// Naive vs im2col+GEMM integer kernels; asserts bit-identity, reports

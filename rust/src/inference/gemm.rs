@@ -21,6 +21,14 @@
 //!   add or subtract — the paper's fixed-point hardware claim, executed
 //!   literally. The add/sub kernel is register-blocked over `MR` rows too,
 //!   so each walk of the index lists feeds four images' worth of output;
+//! * **bit-sliced popcount path**: any weight with |mantissa| <= 3
+//!   (every 2-/3-bit code) can instead run on
+//!   [`kernels::bitslice::gemm_bitsliced`] — AND + popcount over sign-
+//!   magnitude bit planes, SIMD-dispatched at runtime. [`select_kernel`]
+//!   races the three kernels analytically once per weight: ternary when
+//!   its nonzero count beats the estimated plane cost (the old >= 50%-
+//!   zeros rule at large depth), bit-sliced for the rest of the eligible
+//!   range, packed-panel multiply otherwise;
 //! * **batch parallelism**: images are independent, so the batch dimension
 //!   is fanned out over `util::pool::par_chunks_mut`.
 //!
@@ -30,15 +38,11 @@
 
 pub(crate) use crate::kernels::{conv_geometry, im2col};
 
+use crate::kernels::bitslice::{self, BitslicePlan};
 use crate::kernels::{self, MR, PackedB};
 use crate::util::pool;
 
 use super::ops::{QTensor, QWeight};
-
-/// Engage the add/sub ternary kernel only when at least this fraction of
-/// the weight mantissas is zero — below that, the vectorized multiply
-/// kernel wins on contemporary SIMD hardware.
-const TERNARY_MIN_ZERO_FRAC: f32 = 0.5;
 
 /// Sign-separated sparse view of a ternary weight matrix: per depth row,
 /// the column indices holding +1 and -1. A MAC against it is an add or a
@@ -162,14 +166,18 @@ fn ternary_row(a_row: &[i32], plan: &TernaryPlan, c_row: &mut [i32]) {
     }
 }
 
-/// Should a ternary weight use the add/sub kernel? Only when skipping the
-/// zero mode removes enough work to beat the vectorized multiply kernel.
-fn use_ternary_plan(w: &QWeight) -> bool {
+/// Should a ternary weight use the add/sub kernel? The analytic race:
+/// the index-list walk costs one add per nonzero mantissa per A-row,
+/// the bit-sliced alternative costs `bitslice::estimated_row_cost`
+/// scalar-op equivalents per A-row (one magnitude plane for ternary).
+/// At large depth this degenerates to the old >= 50%-zeros rule; ties
+/// go to ternary, which is also multiply-free in the `OpCounts` ledger.
+fn use_ternary_plan(w: &QWeight, depth: usize, cols: usize) -> bool {
     if !w.is_ternary() {
         return false;
     }
-    let zeros = w.mantissa.iter().filter(|&&m| m == 0).count();
-    zeros as f32 >= TERNARY_MIN_ZERO_FRAC * w.mantissa.len() as f32
+    let nnz = w.mantissa.iter().filter(|&&m| m != 0).count() as u64;
+    nnz <= bitslice::estimated_row_cost(depth, cols, 1)
 }
 
 /// The weight's ternary plan, built once per `QWeight` and cached (the
@@ -178,7 +186,21 @@ fn use_ternary_plan(w: &QWeight) -> bool {
 pub(crate) fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&TernaryPlan> {
     w.ternary_plan
         .get_or_init(|| {
-            use_ternary_plan(w).then(|| TernaryPlan::build(&w.mantissa_i32, depth, cols))
+            use_ternary_plan(w, depth, cols)
+                .then(|| TernaryPlan::build(&w.mantissa_i32, depth, cols))
+        })
+        .as_ref()
+}
+
+/// The weight's bit-plane decomposition, built once per `QWeight` and
+/// cached. Consulted only after the ternary race is lost — a weight with
+/// |mantissa| <= 3 that didn't take the add/sub path runs AND/popcount
+/// instead of the multiply kernel.
+pub(crate) fn cached_bitplan(w: &QWeight, depth: usize, cols: usize) -> Option<&BitslicePlan> {
+    w.bit_plan
+        .get_or_init(|| {
+            bitslice::eligible(&w.mantissa)
+                .then(|| BitslicePlan::build(&w.mantissa_i32, depth, cols))
         })
         .as_ref()
 }
@@ -189,6 +211,59 @@ pub(crate) fn cached_plan(w: &QWeight, depth: usize, cols: usize) -> Option<&Ter
 /// matmul so no forward ever pays for it).
 pub(crate) fn cached_packed(w: &QWeight, depth: usize, cols: usize) -> &PackedB<i32> {
     w.packed_b.get_or_init(|| kernels::pack_b(&w.mantissa_i32, depth, cols))
+}
+
+/// The GEMM kernel a weight resolved to. Copy (it's three borrows), so
+/// the batch-parallel closures capture it by value.
+#[derive(Clone, Copy)]
+pub(crate) enum Kernel<'a> {
+    Ternary(&'a TernaryPlan),
+    Bitslice(&'a BitslicePlan),
+    Packed(&'a PackedB<i32>),
+}
+
+impl Kernel<'_> {
+    /// `C += A * B` through whichever kernel was selected — all three are
+    /// bit-identical, only the arithmetic (add/sub, popcount, multiply)
+    /// differs.
+    pub(crate) fn run(self, a: &[i32], c: &mut [i32], rows: usize, depth: usize, cols: usize) {
+        match self {
+            Kernel::Ternary(p) => gemm_ternary(a, p, c, rows, depth, cols),
+            Kernel::Bitslice(p) => bitslice::gemm_bitsliced(a, p, c, rows, depth, cols),
+            Kernel::Packed(p) => {
+                debug_assert_eq!((p.depth, p.cols), (depth, cols));
+                kernels::gemm_packed(a, p, c, rows)
+            }
+        }
+    }
+
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Kernel::Ternary(_) => "ternary",
+            Kernel::Bitslice(_) => "bitslice",
+            Kernel::Packed(_) => "packed",
+        }
+    }
+}
+
+/// Resolve the cheapest kernel for a `[depth, cols]` weight (cached —
+/// the first call per weight runs the analytic race and builds the
+/// winner's data structure; `ExecPlan` warms it at plan-build time).
+pub(crate) fn select_kernel(w: &QWeight, depth: usize, cols: usize) -> Kernel<'_> {
+    if let Some(p) = cached_plan(w, depth, cols) {
+        return Kernel::Ternary(p);
+    }
+    if let Some(p) = cached_bitplan(w, depth, cols) {
+        return Kernel::Bitslice(p);
+    }
+    Kernel::Packed(cached_packed(w, depth, cols))
+}
+
+/// Which kernel [`select_kernel`] routes this weight to — `"ternary"`,
+/// `"bitslice"`, or `"packed"`. Observability for benches and the
+/// engagement assertions in the conformance tests.
+pub fn kernel_name(w: &QWeight, depth: usize, cols: usize) -> &'static str {
+    select_kernel(w, depth, cols).name()
 }
 
 /// Raw conv accumulators via im2col + packed-panel GEMM, parallel over the
@@ -211,8 +286,7 @@ pub(crate) fn conv2d_acc(
     if n == 0 || m_dim == 0 {
         return acc;
     }
-    let plan = cached_plan(w, k_dim, cout);
-    let packed = plan.is_none().then(|| cached_packed(w, k_dim, cout));
+    let kern = select_kernel(w, k_dim, cout);
     let mut views: Vec<&mut [i32]> = acc.chunks_mut(m_dim * cout).collect();
     let workers = pool::default_workers().clamp(1, views.len());
     pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
@@ -221,10 +295,7 @@ pub(crate) fn conv2d_acc(
             let b = offset + bi;
             let hwc = (x.dims[1], x.dims[2], cin);
             im2col(&x.data, hwc, b, kh, kw, stride, pad_h, pad_w, oh, ow, &mut patches);
-            match plan {
-                Some(p) => gemm_ternary(&patches, p, out_img, m_dim, k_dim, cout),
-                None => kernels::gemm_packed(&patches, packed.unwrap(), out_img, m_dim),
-            }
+            kern.run(&patches, out_img, m_dim, k_dim, cout);
         }
     });
     acc
@@ -240,8 +311,7 @@ pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
     if n == 0 {
         return acc;
     }
-    let plan = cached_plan(w, f_in, f_out);
-    let packed = plan.is_none().then(|| cached_packed(w, f_in, f_out));
+    let kern = select_kernel(w, f_in, f_out);
     let workers = pool::default_workers().clamp(1, n);
     let rows_per_block = n.div_ceil(workers);
     let mut views: Vec<&mut [i32]> = acc.chunks_mut(rows_per_block * f_out).collect();
@@ -250,10 +320,7 @@ pub(crate) fn dense_acc(x: &QTensor, w: &QWeight) -> Vec<i32> {
             let row0 = (offset + bi) * rows_per_block;
             let rows = out_block.len() / f_out;
             let a = &x.data[row0 * f_in..(row0 + rows) * f_in];
-            match plan {
-                Some(p) => gemm_ternary(a, p, out_block, rows, f_in, f_out),
-                None => kernels::gemm_packed(a, packed.unwrap(), out_block, rows),
-            }
+            kern.run(a, out_block, rows, f_in, f_out);
         }
     });
     acc
@@ -357,7 +424,8 @@ mod tests {
             .collect();
         let qw = QWeight::encode(&ws, [3, 3, cin, cout], 0.25, 2);
         assert!(qw.is_ternary());
-        assert!(use_ternary_plan(&qw));
+        assert!(use_ternary_plan(&qw, 3 * 3 * cin, cout));
+        assert_eq!(kernel_name(&qw, 3 * 3 * cin, cout), "ternary");
         let xs: Vec<f32> = (0..2 * 6 * 6 * cin).map(|_| rng.normal()).collect();
         let qx = QTensor::from_f32(&xs, [2, 6, 6, cin], 8);
         let mut cg = OpCounts::default();
@@ -369,14 +437,61 @@ mod tests {
     }
 
     #[test]
-    fn dense_uniform_ternary_uses_multiply_kernel() {
-        // uniform ternary is only ~1/3 zeros: the dense kernel should win
+    fn dense_uniform_ternary_routes_to_bitslice() {
+        // uniform ternary is only ~1/3 zeros: the add/sub walk loses the
+        // analytic race, and the popcount kernel (eligible for every
+        // ternary weight) takes the slot the multiply kernel used to win
         let mut rng = Rng::new(3);
         let ws: Vec<f32> = (0..64 * 10).map(|_| (rng.below(3) as f32 - 1.0) * 0.5).collect();
         let qw = QWeight::encode(&ws, [64, 10, 1, 1], 0.5, 2);
         if qw.mantissa.iter().filter(|&&m| m == 0).count() * 2 < qw.mantissa.len() {
-            assert!(!use_ternary_plan(&qw));
+            assert!(!use_ternary_plan(&qw, 64, 10));
+            assert_eq!(kernel_name(&qw, 64, 10), "bitslice");
         }
+    }
+
+    #[test]
+    fn kernel_selection_covers_all_three_kernels() {
+        let mut rng = Rng::new(11);
+        // 3-bit codes reach |mantissa| = 3: never ternary, always
+        // popcount-eligible
+        let ws: Vec<f32> = (0..128 * 16).map(|_| rng.normal()).collect();
+        let qw3 = QWeight::encode(&ws, [128, 16, 1, 1], 0.25, 3);
+        assert!(qw3.mantissa.iter().any(|&m| m.abs() > 1), "want a wide code");
+        assert_eq!(kernel_name(&qw3, 128, 16), "bitslice");
+        // 8-bit codes overflow the plane decomposition: multiply kernel
+        let qw8 = QWeight::encode(&ws, [128, 16, 1, 1], 0.03125, 8);
+        assert!(qw8.mantissa.iter().any(|&m| m.abs() > 3), "want a wide code");
+        assert_eq!(kernel_name(&qw8, 128, 16), "packed");
+        // the resolved kernel is cached: same selection on every call
+        assert_eq!(kernel_name(&qw8, 128, 16), "packed");
+    }
+
+    #[test]
+    fn prop_all_kernels_bit_identical_on_shared_shapes() {
+        // race whatever kernel selection picks against the schoolbook
+        // reference, across the eligibility boundary (max |m| 1..=4)
+        forall(24, |rng: &mut Rng| {
+            let rows = 1 + rng.below(7);
+            let depth = 1 + rng.below(150);
+            let cols = 1 + rng.below(24);
+            let max_mag = 1 + rng.below(4) as i32;
+            let wf: Vec<f32> = (0..depth * cols)
+                .map(|_| (rng.below(2 * max_mag as usize + 1) as i32 - max_mag) as f32)
+                .collect();
+            let qw = QWeight::encode(&wf, [depth, cols, 1, 1], 1.0, 4);
+            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(61) as i32 - 30).collect();
+            let want = gemm_ref(&a, &qw.mantissa_i32, rows, depth, cols);
+            let mut c = vec![0i32; rows * cols];
+            select_kernel(&qw, depth, cols).run(&a, &mut c, rows, depth, cols);
+            let name = kernel_name(&qw, depth, cols);
+            assert_eq!(c, want, "{name} {rows}x{depth}x{cols} max_mag={max_mag}");
+            if qw.mantissa.iter().any(|&m| m.abs() > 3) {
+                assert_eq!(name, "packed");
+            } else {
+                assert_ne!(name, "packed", "eligible weights never multiply");
+            }
+        });
     }
 
     #[test]

@@ -35,5 +35,6 @@ mod plan;
 pub use arena::{Scratch, ScratchPool};
 pub use cost::{CostModel, CostReport, EnergyTable, OpCounts};
 pub use engine::{Backend, IntModel, QTensor};
+pub use gemm::kernel_name;
 pub use ops::{conv2d, conv2d_naive, dense, dense_naive, QWeight};
 pub use plan::ExecPlan;

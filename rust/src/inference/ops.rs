@@ -93,6 +93,9 @@ pub struct QWeight {
     /// lazily-built packed B panels for the multiply kernel — weights are
     /// immutable, so the pack cost is paid at most once (ExecPlan warms it)
     pub(crate) packed_b: std::sync::OnceLock<crate::kernels::PackedB<i32>>,
+    /// lazily-built bit-plane decomposition for the AND/popcount kernel
+    /// (None once built = ineligible |mantissa| > 3, or lost the cost race)
+    pub(crate) bit_plan: std::sync::OnceLock<Option<crate::kernels::bitslice::BitslicePlan>>,
 }
 
 impl QWeight {
@@ -117,6 +120,7 @@ impl QWeight {
             dims,
             ternary_plan: std::sync::OnceLock::new(),
             packed_b: std::sync::OnceLock::new(),
+            bit_plan: std::sync::OnceLock::new(),
         }
     }
 

@@ -161,10 +161,9 @@ impl ExecPlan {
                     let geom =
                         ConvGeom { kh, kw, cin: c, cout, stride: *stride, pad_h, pad_w, oh, ow };
                     patch_len = patch_len.max(oh * ow * kh * kw * c);
-                    // warm the ternary plan / packed panels at plan time
-                    if gemm::cached_plan(w, kh * kw * c, cout).is_none() {
-                        gemm::cached_packed(w, kh * kw * c, cout);
-                    }
+                    // resolve + warm the kernel (ternary / bitslice /
+                    // packed race) at plan time
+                    let _ = gemm::select_kernel(w, kh * kw * c, cout);
                     let (bn, relu, group_end) = absorb(&layers, retained, li);
                     check_bn(&layers, bn, cout, li)?;
                     if bias.is_some() || bn.is_some() {
@@ -185,10 +184,9 @@ impl ExecPlan {
                     let f_in = numel3(cur_dim);
                     ensure!(f_in == w.dims[0], "plan: dense shape mismatch at layer {li}");
                     let f_out = w.dims[1];
-                    // warm the ternary plan / packed panels at plan time
-                    if gemm::cached_plan(w, f_in, f_out).is_none() {
-                        gemm::cached_packed(w, f_in, f_out);
-                    }
+                    // resolve + warm the kernel (ternary / bitslice /
+                    // packed race) at plan time
+                    let _ = gemm::select_kernel(w, f_in, f_out);
                     let (bn, relu, group_end) = absorb(&layers, retained, li);
                     check_bn(&layers, bn, f_out, li)?;
                     if bias.is_some() || bn.is_some() {
@@ -682,8 +680,7 @@ impl ExecPlan {
                 let m_dim = g.oh * g.ow;
                 let k_dim = g.kh * g.kw * g.cin;
                 let img_out = m_dim * g.cout;
-                let tplan = gemm::cached_plan(w, k_dim, g.cout);
-                let packed = tplan.is_none().then(|| gemm::cached_packed(w, k_dim, g.cout));
+                let kern = gemm::select_kernel(w, k_dim, g.cout);
                 let hwc = (step.in_dim[0], step.in_dim[1], g.cin);
                 let mut items: Vec<Item> = dst_buf
                     .chunks_mut(per * img_out)
@@ -714,17 +711,7 @@ impl ExecPlan {
                                 g.ow,
                                 it.patches,
                             );
-                            match tplan {
-                                Some(p) => gemm::gemm_ternary(
-                                    it.patches, p, out_img, m_dim, k_dim, g.cout,
-                                ),
-                                None => crate::kernels::gemm_packed(
-                                    it.patches,
-                                    packed.unwrap(),
-                                    out_img,
-                                    m_dim,
-                                ),
-                            }
+                            kern.run(it.patches, out_img, m_dim, k_dim, g.cout);
                             for &v in out_img.iter() {
                                 lm = lm.max((v as i64).abs());
                             }
@@ -736,8 +723,7 @@ impl ExecPlan {
             None => {
                 let f_in = numel3(step.in_dim);
                 let f_out = step.out_dim[2];
-                let tplan = gemm::cached_plan(w, f_in, f_out);
-                let packed = tplan.is_none().then(|| gemm::cached_packed(w, f_in, f_out));
+                let kern = gemm::select_kernel(w, f_in, f_out);
                 let mut items: Vec<Item> = dst_buf
                     .chunks_mut(per * f_out)
                     .zip(amax.iter_mut())
@@ -750,10 +736,7 @@ impl ExecPlan {
                         it.out.fill(0);
                         let rows = it.out.len() / f_out;
                         let a = &src_buf[it.img0 * f_in..(it.img0 + rows) * f_in];
-                        match tplan {
-                            Some(p) => gemm::gemm_ternary(a, p, it.out, rows, f_in, f_out),
-                            None => crate::kernels::gemm_packed(a, packed.unwrap(), it.out, rows),
-                        }
+                        kern.run(a, it.out, rows, f_in, f_out);
                         let mut lm = 0i64;
                         for &v in it.out.iter() {
                             lm = lm.max((v as i64).abs());

@@ -1,0 +1,819 @@
+//! Bit-sliced AND/popcount GEMM for symmetric low-bit codes.
+//!
+//! SYMOG's symmetric codebook keeps 2-/3-bit weight mantissas in
+//! {-qmax..qmax}, and SYQ-style bit-plane execution turns the resulting
+//! dot products into bitwise AND + population count — no multiplier, not
+//! even the add/sub walk of the ternary plan. This module holds the whole
+//! path:
+//!
+//! * **dual sign-magnitude planes**: a weight column decomposes as
+//!   `m = sum_jb 2^jb * (Wp_jb - Wn_jb)` where plane `Wp_jb` holds bit
+//!   `jb` of `|m|` for positive mantissas and `Wn_jb` for negative ones
+//!   (one magnitude plane for ternary, two for |m| <= 3). Activations
+//!   slice the same way per A-row: `a = sum_i 2^i * (Ap_i - An_i)`. Zero
+//!   values set no bits in any plane, so SYMOG's dominant zero mode and
+//!   post-ReLU activation sparsity survive as empty (skippable) planes.
+//! * **the exact identity**: with all planes over the same `depth` lanes,
+//!   `dot = sum_{i,jb} 2^(i+jb) * [pc(Ap_i & Wp_jb) - pc(Ap_i & Wn_jb)
+//!   - pc(An_i & Wp_jb) + pc(An_i & Wn_jb)]` — no correction terms, and
+//!   padded lanes beyond `depth` are zero in every plane so they
+//!   contribute nothing. Popcounts accumulate in i64 and the final value
+//!   narrows to i32 exactly (the engine's accumulator bound applies to
+//!   every kernel equally). Because `Ap_i & Wp_jb` and `An_i & Wn_jb`
+//!   can never share a set bit (a lane is positive on one side or the
+//!   other), the two positive-signed terms fuse into one popcount of an
+//!   OR — halving the popcount work when both sign planes are live.
+//! * **runtime dispatch ladder** ([`simd_level`]): AVX2 on x86_64 (nibble
+//!   LUT via `vpshufb` + `vpsadbw` accumulation), NEON on aarch64
+//!   (`vcntq_u8` + `vaddlvq_u8`), with the portable scalar
+//!   `count_ones` loop as the always-available oracle. Detection runs
+//!   once per process; `SYMOG_SIMD=scalar` forces the fallback (CI's
+//!   simd-matrix job runs every suite under each rung). All `unsafe` is
+//!   confined to the `#[target_feature]` call boundary — every memory
+//!   access goes through safe slices.
+//!
+//! [`crate::inference::gemm`] races this kernel against the ternary
+//! add/sub plan and the packed-panel multiply GEMM per weight (see
+//! [`estimated_row_cost`]); `BitslicePlan::from_packed` builds planes
+//! straight from `.fxpm` packed codes without unpacking a mantissa
+//! tensor first.
+
+use std::sync::OnceLock;
+
+/// Largest |mantissa| the plane decomposition covers (two magnitude
+/// planes): every n_bits <= 3 code, and any wider code that happens to
+/// stay within +/-3.
+pub const MAX_MAGNITUDE: u32 = 3;
+
+/// Estimated live activation planes for the analytic cost race. Interior
+/// activations are requantized to 16 bits but are one-sided after ReLU
+/// (~15 single-sign planes), and network inputs are 8-bit two-sided
+/// (~7 planes per sign with at most one side live per lane): both land
+/// near 8 plane-pair equivalents.
+const ACT_PLANES_EST: u64 = 8;
+
+/// Scalar-op weight of one u64 AND+popcount+accumulate word step,
+/// relative to the one integer add a ternary index-list entry costs.
+const WORD_OP_WEIGHT: u64 = 2;
+
+// ---------------------------------------------------------------------------
+// runtime SIMD dispatch
+
+/// One rung of the dispatch ladder. Arch-foreign rungs don't exist at
+/// compile time, so a match on the level can never name an unavailable
+/// intrinsic set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable `count_ones` loop — the bit-exact oracle and the forced
+    /// fallback under `SYMOG_SIMD=scalar`.
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+fn parse_level(s: &str) -> Option<SimdLevel> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Some(SimdLevel::Scalar),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" => Some(SimdLevel::Avx2),
+        #[cfg(target_arch = "aarch64")]
+        "neon" => Some(SimdLevel::Neon),
+        _ => None,
+    }
+}
+
+fn supported(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => true,
+    }
+}
+
+// the tail fallback is unreachable on aarch64, where NEON is baseline
+#[allow(unreachable_code)]
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// The SIMD rung this process dispatches to, decided once: an explicit
+/// `SYMOG_SIMD` override (`scalar` always honored; `avx2`/`neon` honored
+/// when the host supports them) or runtime feature detection. Read once
+/// per process — this sits on the GEMM hot path, like `SYMOG_WORKERS` in
+/// `util::pool`.
+pub fn simd_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        match std::env::var("SYMOG_SIMD").ok().and_then(|s| parse_level(&s)) {
+            Some(SimdLevel::Scalar) => SimdLevel::Scalar,
+            Some(l) if supported(l) => l,
+            _ => detect(),
+        }
+    })
+}
+
+/// Every rung the current host can execute (scalar first). Tests race
+/// all of them against each other.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut v = vec![SimdLevel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(SimdLevel::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(SimdLevel::Neon);
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// popcount primitives
+
+/// `popcount(a & b)` over equal-length u64 slices.
+#[inline]
+fn popcount_and(a: &[u64], b: &[u64], level: SimdLevel) -> u64 {
+    match level {
+        SimdLevel::Scalar => popcount_and_scalar(a, b),
+        // SAFETY: the Avx2/Neon rungs are only ever constructed after a
+        // runtime feature check (`supported`/`detect`), so the required
+        // target features are present.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::popcount_and(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::popcount_and(a, b) },
+    }
+}
+
+/// `popcount((a1 & b1) | (a2 & b2))` — exact fused sum of two popcounts
+/// when the two AND results are bitwise disjoint (sign planes of the
+/// same value are; see the module docs).
+#[inline]
+fn popcount_and2(a1: &[u64], b1: &[u64], a2: &[u64], b2: &[u64], level: SimdLevel) -> u64 {
+    match level {
+        SimdLevel::Scalar => popcount_and2_scalar(a1, b1, a2, b2),
+        // SAFETY: see `popcount_and` — the rung implies the feature.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { avx2::popcount_and2(a1, b1, a2, b2) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::popcount_and2(a1, b1, a2, b2) },
+    }
+}
+
+fn popcount_and_scalar(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones() as u64).sum()
+}
+
+fn popcount_and2_scalar(a1: &[u64], b1: &[u64], a2: &[u64], b2: &[u64]) -> u64 {
+    debug_assert_eq!(a1.len(), b1.len());
+    debug_assert_eq!(a1.len(), a2.len());
+    debug_assert_eq!(a1.len(), b2.len());
+    a1.iter()
+        .zip(b1)
+        .zip(a2.iter().zip(b2))
+        .map(|((&x1, &y1), (&x2, &y2))| ((x1 & y1) | (x2 & y2)).count_ones() as u64)
+        .sum()
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 popcount: nibble lookup (`vpshufb` against a 0..=4 table for
+    //! the low and high nibbles) summed horizontally into four u64 lanes
+    //! with `vpsadbw`. Unaligned loads throughout — plane buffers carry
+    //! no alignment contract. The scalar tail handles `len % 4` words.
+
+    use std::arch::x86_64::*;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn accumulate(acc: __m256i, v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        // per-qword byte sums: each SAD lane grows by <= 64 per step, so
+        // the u64 lanes cannot overflow for any realizable plane length
+        _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, _mm256_setzero_si256()))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce(v: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr().cast(), v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// # Safety
+    /// Caller must ensure the host supports AVX2 (the dispatch ladder
+    /// only selects this rung after `is_x86_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn popcount_and(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i).cast());
+            let vb = _mm256_loadu_si256(b.as_ptr().add(i).cast());
+            acc = accumulate(acc, _mm256_and_si256(va, vb));
+            i += 4;
+        }
+        let mut total = reduce(acc);
+        while i < n {
+            total += (a[i] & b[i]).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Same contract as [`popcount_and`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn popcount_and2(a1: &[u64], b1: &[u64], a2: &[u64], b2: &[u64]) -> u64 {
+        debug_assert_eq!(a1.len(), b1.len());
+        debug_assert_eq!(a1.len(), a2.len());
+        debug_assert_eq!(a1.len(), b2.len());
+        let n = a1.len();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x1 = _mm256_and_si256(
+                _mm256_loadu_si256(a1.as_ptr().add(i).cast()),
+                _mm256_loadu_si256(b1.as_ptr().add(i).cast()),
+            );
+            let x2 = _mm256_and_si256(
+                _mm256_loadu_si256(a2.as_ptr().add(i).cast()),
+                _mm256_loadu_si256(b2.as_ptr().add(i).cast()),
+            );
+            acc = accumulate(acc, _mm256_or_si256(x1, x2));
+            i += 4;
+        }
+        let mut total = reduce(acc);
+        while i < n {
+            total += ((a1[i] & b1[i]) | (a2[i] & b2[i])).count_ones() as u64;
+            i += 1;
+        }
+        total
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON popcount: `vcntq_u8` per 16-byte chunk, horizontally summed
+    //! with `vaddlvq_u8`. NEON is baseline on aarch64, so this rung is
+    //! always available there.
+
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; the dispatch ladder only selects
+    /// this rung on aarch64 hosts.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn popcount_and(a: &[u64], b: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut total = 0u64;
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let v = vandq_u64(vld1q_u64(a.as_ptr().add(i)), vld1q_u64(b.as_ptr().add(i)));
+            total += vaddlvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u64;
+            i += 2;
+        }
+        if i < n {
+            total += (a[i] & b[i]).count_ones() as u64;
+        }
+        total
+    }
+
+    /// # Safety
+    /// Same contract as [`popcount_and`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn popcount_and2(a1: &[u64], b1: &[u64], a2: &[u64], b2: &[u64]) -> u64 {
+        debug_assert_eq!(a1.len(), b1.len());
+        debug_assert_eq!(a1.len(), a2.len());
+        debug_assert_eq!(a1.len(), b2.len());
+        let n = a1.len();
+        let mut total = 0u64;
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let x1 = vandq_u64(vld1q_u64(a1.as_ptr().add(i)), vld1q_u64(b1.as_ptr().add(i)));
+            let x2 = vandq_u64(vld1q_u64(a2.as_ptr().add(i)), vld1q_u64(b2.as_ptr().add(i)));
+            let v = vorrq_u64(x1, x2);
+            total += vaddlvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u64;
+            i += 2;
+        }
+        if i < n {
+            total += ((a1[i] & b1[i]) | (a2[i] & b2[i])).count_ones() as u64;
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// eligibility + analytic cost
+
+/// Largest |mantissa| of a weight — the bit-slice eligibility test
+/// (`<=` [`MAX_MAGNITUDE`]) works off actual magnitudes, not the nominal
+/// code width, so a wide code that trained into a narrow range still
+/// qualifies.
+pub fn max_magnitude(mantissa: &[i8]) -> u32 {
+    mantissa.iter().map(|&m| (m as i32).unsigned_abs()).max().unwrap_or(0)
+}
+
+/// Can this weight run on the bit-sliced kernel?
+pub fn eligible(mantissa: &[i8]) -> bool {
+    max_magnitude(mantissa) <= MAX_MAGNITUDE
+}
+
+/// Estimated cost of one bit-sliced A-row, in scalar-op equivalents: per
+/// output column, `2 * mag_bits` weight planes race [`ACT_PLANES_EST`]
+/// activation plane-pairs over `ceil(depth/64)` words, each word step
+/// weighing [`WORD_OP_WEIGHT`]. The ternary add/sub plan costs one add
+/// per nonzero weight per row, so for a ternary matrix this race
+/// degenerates to the old >= 50%-zeros rule at large depth; the packed
+/// multiply GEMM costs `depth * cols` MACs per row and always loses to
+/// an eligible bit-sliced plan. `inference::gemm::select_kernel` runs
+/// the race once per weight.
+pub fn estimated_row_cost(depth: usize, cols: usize, mag_bits: usize) -> u64 {
+    let words = depth.div_ceil(64) as u64;
+    cols as u64 * 2 * mag_bits as u64 * ACT_PLANES_EST * words * WORD_OP_WEIGHT
+}
+
+// ---------------------------------------------------------------------------
+// weight planes
+
+/// Per-column dual sign-magnitude bit planes of a `[depth, cols]` weight
+/// matrix with |mantissa| <= [`MAX_MAGNITUDE`]. Column `j`'s planes are
+/// contiguous — `[Wp_0 .. Wp_{mb-1}, Wn_0 .. Wn_{mb-1}]`, each
+/// `ceil(depth/64)` words — so one output element streams one compact
+/// run (a 2-bit column costs 2 bit-planes ~ depth/4 bytes, 16x less
+/// weight traffic than i32 panels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitslicePlan {
+    planes: Vec<u64>,
+    /// per plane, in column-major plane order: does it have any set bit?
+    /// (SYMOG's zero mode and single-sign columns make empty planes
+    /// common; empty ones are skipped without touching their words)
+    nonempty: Vec<bool>,
+    /// magnitude planes per sign: 1 covers |m| <= 1, 2 covers |m| <= 3
+    mag_bits: usize,
+    words: usize,
+    pub depth: usize,
+    pub cols: usize,
+}
+
+impl BitslicePlan {
+    /// Build from a row-major `[depth, cols]` mantissa matrix.
+    pub fn build(b: &[i32], depth: usize, cols: usize) -> BitslicePlan {
+        debug_assert_eq!(b.len(), depth * cols);
+        Self::build_with(depth, cols, |k, j| b[k * cols + j])
+    }
+
+    /// Build straight from `quant::packed` codes (row-major `[depth,
+    /// cols]` mantissas, `n_bits`-wide biased codes) — the `.fxpm`
+    /// deployment path never materializes an unpacked weight tensor.
+    pub fn from_packed(packed: &[u8], n_bits: u32, depth: usize, cols: usize) -> BitslicePlan {
+        Self::build_with(depth, cols, |k, j| {
+            crate::quant::packed::mantissa_at(packed, k * cols + j, n_bits) as i32
+        })
+    }
+
+    fn build_with(depth: usize, cols: usize, get: impl Fn(usize, usize) -> i32) -> BitslicePlan {
+        let mut max_mag = 0u32;
+        for k in 0..depth {
+            for j in 0..cols {
+                max_mag = max_mag.max(get(k, j).unsigned_abs());
+            }
+        }
+        assert!(
+            max_mag <= MAX_MAGNITUDE,
+            "bit-slice plan needs |mantissa| <= {MAX_MAGNITUDE}, got {max_mag}"
+        );
+        let mag_bits = if max_mag <= 1 { 1 } else { 2 };
+        let words = depth.div_ceil(64);
+        let stride = 2 * mag_bits * words;
+        let mut planes = vec![0u64; cols * stride];
+        for k in 0..depth {
+            let (word, bit) = (k / 64, 1u64 << (k % 64));
+            for j in 0..cols {
+                let m = get(k, j);
+                if m == 0 {
+                    continue;
+                }
+                let base = j * stride + if m > 0 { 0 } else { mag_bits * words };
+                let mag = m.unsigned_abs();
+                for jb in 0..mag_bits {
+                    if mag >> jb & 1 == 1 {
+                        planes[base + jb * words + word] |= bit;
+                    }
+                }
+            }
+        }
+        let nonempty = planes
+            .chunks(words.max(1))
+            .map(|p| p.iter().any(|&w| w != 0))
+            .collect();
+        BitslicePlan { planes, nonempty, mag_bits, words, depth, cols }
+    }
+
+    pub fn mag_bits(&self) -> usize {
+        self.mag_bits
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Exact dot product of one sliced A-row against column `j` (see the
+    /// module docs for the identity). i64 accumulation; callers narrow.
+    fn dot_col(&self, row: &RowPlanes, j: usize, level: SimdLevel) -> i64 {
+        let (mb, words) = (self.mag_bits, self.words);
+        let col = &self.planes[j * 2 * mb * words..(j + 1) * 2 * mb * words];
+        let flags = &self.nonempty[j * 2 * mb..(j + 1) * 2 * mb];
+        let mut acc = 0i64;
+        for jb in 0..mb {
+            let (wp_live, wn_live) = (flags[jb], flags[mb + jb]);
+            if !wp_live && !wn_live {
+                continue;
+            }
+            let wp = &col[jb * words..(jb + 1) * words];
+            let wn = &col[(mb + jb) * words..(mb + jb + 1) * words];
+            for i in 0..row.abits {
+                let ap_live = row.pos_mask >> i & 1 == 1;
+                let an_live = row.neg_mask >> i & 1 == 1;
+                if !ap_live && !an_live {
+                    continue;
+                }
+                let ap = &row.pos[i * words..(i + 1) * words];
+                let an = &row.neg[i * words..(i + 1) * words];
+                // (Ap & Wp) and (An & Wn) are disjoint, as are the two
+                // cross terms — each pair fuses into one popcount
+                let pos = pc_pair(ap, ap_live && wp_live, wp, an, an_live && wn_live, wn, level);
+                let neg = pc_pair(ap, ap_live && wn_live, wn, an, an_live && wp_live, wp, level);
+                acc += (pos as i64 - neg as i64) << (i + jb);
+            }
+        }
+        acc
+    }
+}
+
+#[inline]
+fn pc_pair(
+    a1: &[u64],
+    live1: bool,
+    b1: &[u64],
+    a2: &[u64],
+    live2: bool,
+    b2: &[u64],
+    level: SimdLevel,
+) -> u64 {
+    match (live1, live2) {
+        (true, true) => popcount_and2(a1, b1, a2, b2, level),
+        (true, false) => popcount_and(a1, b1, level),
+        (false, true) => popcount_and(a2, b2, level),
+        (false, false) => 0,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// activation slicing + the GEMM
+
+/// Sign-magnitude bit planes of one A-row, rebuilt per row and reused
+/// across every output column. Plane count follows the row's actual
+/// |max| (post-ReLU rows have no negative planes at all), and the
+/// per-plane live masks let `dot_col` skip empty planes.
+struct RowPlanes {
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    pos_mask: u32,
+    neg_mask: u32,
+    abits: usize,
+    words: usize,
+}
+
+impl RowPlanes {
+    fn new(words: usize) -> RowPlanes {
+        RowPlanes { pos: Vec::new(), neg: Vec::new(), pos_mask: 0, neg_mask: 0, abits: 0, words }
+    }
+
+    fn slice(&mut self, a_row: &[i32]) {
+        let mut max_mag = 0u32;
+        for &v in a_row {
+            max_mag = max_mag.max(v.unsigned_abs());
+        }
+        self.abits = (32 - max_mag.leading_zeros()) as usize;
+        self.pos_mask = 0;
+        self.neg_mask = 0;
+        let need = self.abits * self.words;
+        if self.pos.len() < need {
+            self.pos.resize(need, 0);
+            self.neg.resize(need, 0);
+        }
+        // only planes 0..abits are consulted this row, so only they are
+        // cleared — stale higher planes from a wider previous row are dead
+        self.pos[..need].fill(0);
+        self.neg[..need].fill(0);
+        for (k, &v) in a_row.iter().enumerate() {
+            if v == 0 {
+                continue;
+            }
+            let (planes, mask) = if v > 0 {
+                (&mut self.pos, &mut self.pos_mask)
+            } else {
+                (&mut self.neg, &mut self.neg_mask)
+            };
+            let (word, bit) = (k / 64, 1u64 << (k % 64));
+            let mut mag = v.unsigned_abs();
+            while mag != 0 {
+                let i = mag.trailing_zeros() as usize;
+                planes[i * self.words + word] |= bit;
+                *mask |= 1 << i;
+                mag &= mag - 1;
+            }
+        }
+    }
+}
+
+/// `C += A * B` where `B` is a [`BitslicePlan`] — AND/popcount per plane
+/// pair, bit-identical to the multiply kernels on every dispatch rung.
+pub fn gemm_bitsliced(
+    a: &[i32],
+    plan: &BitslicePlan,
+    c: &mut [i32],
+    rows: usize,
+    depth: usize,
+    cols: usize,
+) {
+    gemm_bitsliced_at(a, plan, c, rows, depth, cols, simd_level());
+}
+
+/// [`gemm_bitsliced`] pinned to an explicit dispatch rung (tests race
+/// every available rung against the scalar oracle).
+pub fn gemm_bitsliced_at(
+    a: &[i32],
+    plan: &BitslicePlan,
+    c: &mut [i32],
+    rows: usize,
+    depth: usize,
+    cols: usize,
+    level: SimdLevel,
+) {
+    debug_assert_eq!(a.len(), rows * depth);
+    debug_assert_eq!(c.len(), rows * cols);
+    debug_assert_eq!(depth, plan.depth);
+    debug_assert_eq!(cols, plan.cols);
+    let mut row_planes = RowPlanes::new(plan.words);
+    for (a_row, c_row) in a.chunks(depth.max(1)).zip(c.chunks_mut(cols.max(1))) {
+        row_planes.slice(a_row);
+        if row_planes.pos_mask == 0 && row_planes.neg_mask == 0 {
+            continue; // all-zero row adds nothing
+        }
+        for (j, out) in c_row.iter_mut().enumerate() {
+            *out += plan.dot_col(&row_planes, j, level) as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    /// Schoolbook reference — the same oracle the blocked GEMM races.
+    fn gemm_ref(a: &[i32], b: &[i32], rows: usize, depth: usize, cols: usize) -> Vec<i32> {
+        let mut c = vec![0i32; rows * cols];
+        for i in 0..rows {
+            for kk in 0..depth {
+                for j in 0..cols {
+                    c[i * cols + j] += a[i * depth + kk] * b[kk * cols + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn check_all_levels(a: &[i32], b: &[i32], rows: usize, depth: usize, cols: usize) {
+        let plan = BitslicePlan::build(b, depth, cols);
+        let want = gemm_ref(a, b, rows, depth, cols);
+        for level in available_levels() {
+            let mut c = vec![0i32; rows * cols];
+            gemm_bitsliced_at(a, &plan, &mut c, rows, depth, cols, level);
+            assert_eq!(c, want, "{rows}x{depth}x{cols} level={}", level.name());
+        }
+    }
+
+    #[test]
+    fn prop_bitslice_matches_schoolbook_on_every_level() {
+        forall(20, |rng: &mut Rng| {
+            let rows = 1 + rng.below(6);
+            let depth = 1 + rng.below(150);
+            let cols = 1 + rng.below(20);
+            let max_mag = 1 + rng.below(3) as i32; // 1..=3: both mag_bits arms
+            let a: Vec<i32> =
+                (0..rows * depth).map(|_| rng.below(511) as i32 - 255).collect();
+            let b: Vec<i32> = (0..depth * cols)
+                .map(|_| rng.below(2 * max_mag as usize + 1) as i32 - max_mag)
+                .collect();
+            check_all_levels(&a, &b, rows, depth, cols);
+        });
+    }
+
+    #[test]
+    fn word_edge_and_ragged_simd_tail_depths() {
+        // depths straddling the u64 word edge and leaving every possible
+        // ragged tail for the 4-word AVX2 / 2-word NEON chunking
+        for depth in [1usize, 3, 63, 64, 65, 127, 128, 129, 191, 192, 200, 256, 300] {
+            let mut rng = Rng::new(depth as u64 ^ 0xB175);
+            let (rows, cols) = (3usize, 5usize);
+            let a: Vec<i32> = (0..rows * depth).map(|_| rng.below(65) as i32 - 32).collect();
+            let b: Vec<i32> = (0..depth * cols).map(|_| rng.below(7) as i32 - 3).collect();
+            check_all_levels(&a, &b, rows, depth, cols);
+        }
+    }
+
+    #[test]
+    fn qmax_extreme_codes_and_wide_activations() {
+        // every code at +/-qmax for both widths, activations near the
+        // 16-bit requantization ceiling (depth kept small so the exact
+        // dot stays far inside i32)
+        for qmax in [1i32, 3] {
+            let (rows, depth, cols) = (2usize, 70usize, 4usize);
+            let b: Vec<i32> = (0..depth * cols)
+                .map(|i| if i % 2 == 0 { qmax } else { -qmax })
+                .collect();
+            let a: Vec<i32> = (0..rows * depth)
+                .map(|i| match i % 4 {
+                    0 => 32767,
+                    1 => -32768,
+                    2 => 0,
+                    _ => 1,
+                })
+                .collect();
+            check_all_levels(&a, &b, rows, depth, cols);
+        }
+    }
+
+    #[test]
+    fn all_zero_planes_are_skipped_exactly() {
+        let (rows, depth, cols) = (2usize, 100usize, 6usize);
+        // all-zero weights: C stays exactly as preloaded
+        let plan = BitslicePlan::build(&vec![0i32; depth * cols], depth, cols);
+        assert_eq!(plan.mag_bits(), 1);
+        let a: Vec<i32> = (0..rows * depth).map(|i| i as i32 % 17 - 8).collect();
+        for level in available_levels() {
+            let mut c: Vec<i32> = (0..rows * cols).map(|i| i as i32).collect();
+            gemm_bitsliced_at(&a, &plan, &mut c, rows, depth, cols, level);
+            assert_eq!(c, (0..(rows * cols) as i32).collect::<Vec<_>>());
+        }
+        // all-zero activations: likewise
+        let b: Vec<i32> = (0..depth * cols).map(|i| i as i32 % 3 - 1).collect();
+        let plan = BitslicePlan::build(&b, depth, cols);
+        for level in available_levels() {
+            let mut c = vec![7i32; rows * cols];
+            gemm_bitsliced_at(&vec![0i32; rows * depth], &plan, &mut c, rows, depth, cols, level);
+            assert_eq!(c, vec![7i32; rows * cols]);
+        }
+        // single-sign rows (post-ReLU shape): negative planes never built
+        let a_pos: Vec<i32> = (0..rows * depth).map(|i| i as i32 % 9).collect();
+        check_all_levels(&a_pos, &b, rows, depth, cols);
+    }
+
+    #[test]
+    fn accumulates_into_preloaded_c() {
+        let (rows, depth, cols) = (2usize, 40usize, 3usize);
+        let a: Vec<i32> = (0..rows * depth).map(|i| i as i32 % 11 - 5).collect();
+        let b: Vec<i32> = (0..depth * cols).map(|i| i as i32 % 5 - 2).collect();
+        let plan = BitslicePlan::build(&b, depth, cols);
+        let want = gemm_ref(&a, &b, rows, depth, cols);
+        let mut c: Vec<i32> = (0..rows * cols).map(|i| 100 + i as i32).collect();
+        gemm_bitsliced_at(&a, &plan, &mut c, rows, depth, cols, SimdLevel::Scalar);
+        for (i, (&got, &w)) in c.iter().zip(&want).enumerate() {
+            assert_eq!(got, 100 + i as i32 + w);
+        }
+    }
+
+    #[test]
+    fn prop_from_packed_matches_dense_build() {
+        forall(16, |rng: &mut Rng| {
+            let n_bits = 2 + rng.below(2) as u32; // 2 or 3
+            let qmax = (1i16 << (n_bits - 1)) - 1;
+            let depth = 1 + rng.below(90);
+            let cols = 1 + rng.below(12);
+            let m: Vec<i8> = (0..depth * cols)
+                .map(|_| (rng.below(2 * qmax as usize + 1) as i16 - qmax) as i8)
+                .collect();
+            let packed = crate::quant::packed::pack_codes(&m, n_bits);
+            let wide: Vec<i32> = m.iter().map(|&v| v as i32).collect();
+            let dense = BitslicePlan::build(&wide, depth, cols);
+            let from_packed = BitslicePlan::from_packed(&packed, n_bits, depth, cols);
+            assert_eq!(from_packed, dense, "n_bits={n_bits} {depth}x{cols}");
+        });
+    }
+
+    #[test]
+    fn prop_popcount_primitives_agree_across_levels() {
+        forall(24, |rng: &mut Rng| {
+            let n = rng.below(41);
+            let mk = |rng: &mut Rng| -> Vec<u64> {
+                (0..n)
+                    .map(|_| {
+                        let hi = rng.below(1 << 16) as u64;
+                        let lo = rng.below(1 << 16) as u64;
+                        hi << 48 | lo << 17 | rng.below(1 << 16) as u64
+                    })
+                    .collect()
+            };
+            let (a1, b1, a2, b2) = (mk(rng), mk(rng), mk(rng), mk(rng));
+            let want1 = popcount_and_scalar(&a1, &b1);
+            let want2 = popcount_and2_scalar(&a1, &b1, &a2, &b2);
+            for level in available_levels() {
+                assert_eq!(popcount_and(&a1, &b1, level), want1, "{}", level.name());
+                assert_eq!(
+                    popcount_and2(&a1, &b1, &a2, &b2, level),
+                    want2,
+                    "{}",
+                    level.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn mag_bits_follows_actual_magnitudes() {
+        let t = BitslicePlan::build(&[1, 0, -1, 1], 2, 2);
+        assert_eq!(t.mag_bits(), 1);
+        let w = BitslicePlan::build(&[1, 0, -3, 2], 2, 2);
+        assert_eq!(w.mag_bits(), 2);
+        assert_eq!(BitslicePlan::build(&[2, -2], 2, 1).mag_bits(), 2);
+    }
+
+    #[test]
+    fn env_override_parsing_and_detection() {
+        assert_eq!(parse_level("scalar"), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level(" SCALAR "), Some(SimdLevel::Scalar));
+        assert_eq!(parse_level("sse9"), None);
+        assert_eq!(parse_level(""), None);
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(parse_level("avx2"), Some(SimdLevel::Avx2));
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(parse_level("neon"), Some(SimdLevel::Neon));
+        // whatever the process-level decision was, it must be runnable
+        // here (honors SYMOG_SIMD=scalar under the CI matrix' forced leg)
+        let l = simd_level();
+        assert!(available_levels().contains(&l), "dispatched to unavailable {:?}", l);
+        assert!(supported(l));
+        assert!(available_levels().starts_with(&[SimdLevel::Scalar]));
+    }
+
+    #[test]
+    fn eligibility_and_cost_model() {
+        assert!(eligible(&[0, 1, -1]));
+        assert!(eligible(&[3, -3, 2]));
+        assert!(!eligible(&[4, 0]));
+        assert!(eligible(&[]));
+        assert_eq!(max_magnitude(&[-3, 1]), 3);
+        // the analytic race reproduces the old ternary threshold at
+        // large depth: cost(mb=1) ~ depth*cols/2 scalar adds
+        assert_eq!(estimated_row_cost(6400, 100, 1), 100 * 2 * 8 * 100 * 2);
+        // and the two-plane cost is exactly double
+        assert_eq!(
+            estimated_row_cost(640, 64, 2),
+            2 * estimated_row_cost(640, 64, 1)
+        );
+    }
+}

@@ -26,6 +26,10 @@
 //! the training backward as dy x Wᵀ followed by a `col2im` scatter (dx)
 //! and patchesᵀ x dy (dw).
 
+/// Bit-sliced AND/popcount GEMM for |mantissa| <= 3 codes, with the
+/// runtime-dispatched AVX2/NEON/scalar ladder (`SYMOG_SIMD`).
+pub mod bitslice;
+
 /// A-rows processed together by the micro-kernel.
 pub const MR: usize = 4;
 

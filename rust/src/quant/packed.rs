@@ -45,21 +45,25 @@ pub fn pack_codes(mantissas: &[i8], n_bits: u32) -> Vec<u8> {
     out
 }
 
-/// Inverse of `pack_codes`.
-pub fn unpack_codes(packed: &[u8], n: usize, n_bits: u32) -> Vec<i8> {
+/// Decode the `i`-th mantissa from a packed code stream without
+/// unpacking the rest — plane builders (`kernels::bitslice`) stream
+/// codes straight out of `.fxpm` payloads through this.
+#[inline]
+pub fn mantissa_at(packed: &[u8], i: usize, n_bits: u32) -> i8 {
     let qmax = (1i16 << (n_bits - 1)) - 1;
     let nb = n_bits as usize;
     let mask = (1u16 << nb) - 1;
-    (0..n)
-        .map(|i| {
-            let bit = i * nb;
-            let mut v = (packed[bit / 8] >> (bit % 8)) as u16;
-            if bit % 8 + nb > 8 {
-                v |= (packed[bit / 8 + 1] as u16) << (8 - bit % 8);
-            }
-            ((v & mask) as i16 - qmax) as i8
-        })
-        .collect()
+    let bit = i * nb;
+    let mut v = (packed[bit / 8] >> (bit % 8)) as u16;
+    if bit % 8 + nb > 8 {
+        v |= (packed[bit / 8 + 1] as u16) << (8 - bit % 8);
+    }
+    ((v & mask) as i16 - qmax) as i8
+}
+
+/// Inverse of `pack_codes`.
+pub fn unpack_codes(packed: &[u8], n: usize, n_bits: u32) -> Vec<i8> {
+    (0..n).map(|i| mantissa_at(packed, i, n_bits)).collect()
 }
 
 /// Write a packed model from a trained checkpoint (weights are quantized

@@ -1,0 +1,109 @@
+//! Bit-sliced popcount kernel conformance: with n_bits <= 3 every
+//! conv/dense weight in the zoo is plane-eligible, so these forwards
+//! execute on the AND/popcount kernel (or the ternary add/sub plan where
+//! the analytic race prefers it) under whatever SIMD rung the host
+//! dispatched to. The whole suite runs under each leg of CI's
+//! `simd-matrix` job — AVX2, forced scalar (`SYMOG_SIMD=scalar`), and
+//! aarch64 NEON — so bit-identity here proves every dispatch branch
+//! against the interpreted oracle.
+
+use symog::inference::{kernel_name, Backend, IntModel, QWeight};
+use symog::kernels::bitslice::simd_level;
+use symog::runtime::Manifest;
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+type ModelFn = fn(&mut Rng, u32) -> (Manifest, symog::coordinator::Checkpoint);
+
+const ZOO: &[(&str, ModelFn)] = &[
+    ("lenet5ish", models::lenet5ish as ModelFn),
+    ("densenetish", models::densenetish as ModelFn),
+    ("oddball", models::oddball as ModelFn),
+];
+
+fn input_elems(man: &Manifest) -> usize {
+    man.input_shape.iter().product()
+}
+
+#[test]
+fn zoo_logits_bit_identical_across_backends_for_low_bit_codes() {
+    println!("dispatch level: {}", simd_level().name());
+    for (name, build) in ZOO {
+        for n_bits in [2u32, 3] {
+            let mut rng = Rng::new(0xB17 ^ ((n_bits as u64) << 12));
+            let (man, ck) = build(&mut rng, n_bits);
+            let naive = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Naive);
+            let planned = IntModel::build(&man, &ck).unwrap();
+            let gemm = IntModel::build(&man, &ck).unwrap().with_backend(Backend::Gemm);
+
+            let batch = 6usize;
+            let e = input_elems(&man);
+            let images: Vec<f32> = (0..batch * e).map(|_| rng.normal()).collect();
+            let (logits_n, counts_n) = naive.forward(&images, batch).unwrap();
+
+            let (logits_g, counts_g) = gemm.forward(&images, batch).unwrap();
+            assert_eq!(logits_g, logits_n, "{name} n_bits={n_bits}: gemm logits diverged");
+            assert_eq!(counts_g, counts_n, "{name} n_bits={n_bits}: gemm OpCounts diverged");
+
+            for workers in [1usize, 2, 4] {
+                let plan = planned.plan(batch).unwrap().with_workers(workers);
+                let mut scratch = plan.scratch();
+                let logits_p = plan.run(&images, batch, &mut scratch).unwrap();
+                assert_eq!(
+                    logits_p, logits_n,
+                    "{name} n_bits={n_bits} workers={workers}: planned logits diverged"
+                );
+                assert_eq!(plan.op_counts(batch), counts_n, "{name} n_bits={n_bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn kernel_selection_engages_as_designed() {
+    // uniform ternary (2-bit SYMOG, ~1/3 zeros) at a conv shape: the
+    // add/sub walk loses the analytic race, popcount planes win
+    let mut rng = Rng::new(0xE16);
+    let (cin, cout) = (128usize, 128usize);
+    let uniform: Vec<f32> = (0..3 * 3 * cin * cout)
+        .map(|_| (rng.below(3) as f32 - 1.0) * 0.25)
+        .collect();
+    let qw = QWeight::encode(&uniform, [3, 3, cin, cout], 0.25, 2);
+    assert_eq!(kernel_name(&qw, 3 * 3 * cin, cout), "bitslice");
+
+    // sparse ternary (80% zero mode): the add/sub plan stays the winner
+    let sparse: Vec<f32> = (0..512 * 10)
+        .map(|_| match rng.below(10) {
+            0 => 0.25,
+            1 => -0.25,
+            _ => 0.0,
+        })
+        .collect();
+    let qw = QWeight::encode(&sparse, [512, 10, 1, 1], 0.25, 2);
+    assert_eq!(kernel_name(&qw, 512, 10), "ternary");
+
+    // 3-bit codes reach |m| = 3: not ternary, still plane-eligible
+    let wide3: Vec<f32> = (0..256 * 32)
+        .map(|_| (rng.below(7) as f32 - 3.0) * 0.25)
+        .collect();
+    let qw = QWeight::encode(&wide3, [256, 32, 1, 1], 0.25, 3);
+    assert!(qw.mantissa.iter().any(|&m| m.abs() > 1));
+    assert_eq!(kernel_name(&qw, 256, 32), "bitslice");
+
+    // 8-bit codes overflow the decomposition: packed multiply kernel
+    let wide8: Vec<f32> = (0..256 * 32).map(|_| rng.normal()).collect();
+    let qw = QWeight::encode(&wide8, [256, 32, 1, 1], 0.03125, 8);
+    assert!(qw.mantissa.iter().any(|&m| m.abs() > 3));
+    assert_eq!(kernel_name(&qw, 256, 32), "packed");
+}
+
+#[test]
+fn dispatch_honors_forced_scalar_override() {
+    // under the simd-matrix forced-scalar leg this pins the whole
+    // process to the oracle rung; on other hosts it just documents that
+    // the decided rung is one the host can actually run
+    match std::env::var("SYMOG_SIMD").as_deref() {
+        Ok("scalar") => assert_eq!(simd_level().name(), "scalar"),
+        _ => assert!(["scalar", "avx2", "neon"].contains(&simd_level().name())),
+    }
+}
