@@ -1,0 +1,115 @@
+//! The `.fxpa` serving-artifact lifecycle, end to end:
+//!
+//! 1. **publish** a quantized model to a versioned on-disk artifact
+//!    (packed mantissas + per-layer deltas + integrity checksum);
+//! 2. **load** it back — straight to a compiled plan, no re-quantization —
+//!    and verify bit-identity against the in-code model;
+//! 3. **register** the artifact as a model source and serve it;
+//! 4. **hot-swap** a newer version in under traffic and watch per-version
+//!    stats partition the requests.
+//!
+//!     cargo run --release --example publish_artifact -- \
+//!         --model lenet5 --bits 4 --requests 12 --seed 1453
+//!
+//! By default the artifact is written under the system temp dir and
+//! removed at exit; pass `--out some/model.fxpa` to keep it (CI uploads
+//! one this way).
+
+use anyhow::{bail, ensure, Result};
+use symog::artifact::{self, PublishOpts};
+use symog::cli::Args;
+use symog::inference::IntModel;
+use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let model_name = args.str_or("model", "lenet5");
+    let bits = args.usize_or("bits", 4)? as u32;
+    let requests = args.usize_or("requests", 12)?.max(2);
+    let seed = args.u64_or("seed", 0x1453)?;
+    let out = args.str_or("out", "");
+    args.finish()?;
+
+    let mut rng = Rng::new(seed);
+    let gen = |rng: &mut Rng| match model_name.as_str() {
+        "lenet5" => Ok(models::lenet5ish(rng, bits)),
+        "vgg7" => Ok(models::vgg7ish(rng, bits, 8)),
+        "densenet" => Ok(models::densenetish(rng, bits)),
+        other => bail!("unknown --model {other:?} (lenet5|vgg7|densenet)"),
+    };
+    let (man, ck) = gen(&mut rng)?;
+    let elems: usize = man.input_shape.iter().product();
+
+    // 1. publish --------------------------------------------------------
+    let keep = !out.is_empty();
+    let path = if keep {
+        let p = std::path::PathBuf::from(&out);
+        if let Some(parent) = p.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(parent)?;
+        }
+        p
+    } else {
+        std::env::temp_dir().join(format!("symog-example-{}.fxpa", std::process::id()))
+    };
+    let info = artifact::publish(&man, &ck, &PublishOpts::new().version(1), &path)?;
+    println!(
+        "published {} -> {}  (v{}, {} quant + {} aux tensors, {} bytes)",
+        man.model,
+        path.display(),
+        info.version,
+        info.quant_tensors,
+        info.aux_tensors,
+        info.bytes
+    );
+    println!("peek_version (header-only read): v{}", artifact::peek_version(&path)?);
+
+    // 2. load + bit-identity check --------------------------------------
+    let solo = IntModel::build(&man, &ck)?;
+    let loaded = artifact::load(&path)?;
+    let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+    let (want, _) = solo.forward(&img, 1)?;
+    let (got, _) = loaded.model.forward(&img, 1)?;
+    ensure!(got == want, "loaded artifact diverged from the in-code model");
+    println!("load: logits bit-identical to the in-code model ({} values)", got.len());
+
+    // 3. serve from the artifact ----------------------------------------
+    let mut reg = Registry::new();
+    let opts = RegisterOpts::new().max_batch(4);
+    let key = reg.add(&model_name, ModelSource::Artifact(&path), &opts)?;
+    let server = Server::new(reg, ServeConfig { workers: 2 });
+    println!("serving {key} from the artifact");
+    for r in 0..requests / 2 {
+        let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+        let (logits, v) = server.infer_versioned(&key, &img)?;
+        ensure!(v == 1, "expected version 1 to serve request {r}");
+        std::hint::black_box(logits);
+    }
+
+    // 4. hot-swap v2 in (same architecture, fresh weights) --------------
+    let (man2, ck2) = gen(&mut rng)?;
+    let next = IntModel::build(&man2, &ck2)?;
+    let k2 = server.swap(&key, ModelSource::InCode(&next), &opts)?;
+    println!("hot-swapped {k2} in (traffic never paused)");
+    for r in 0..requests - requests / 2 {
+        let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
+        let (logits, v) = server.infer_versioned(&key, &img)?;
+        ensure!(v == 2, "expected version 2 to serve request {r} after the swap");
+        std::hint::black_box(logits);
+    }
+
+    for (v, stats) in server.stats_by_version(&key)? {
+        println!("v{v}: {}", stats.render());
+    }
+    let total = server.stats(&key)?;
+    ensure!(total.requests == requests as u64, "stats lost a request");
+    println!("total: {}", total.render());
+
+    if keep {
+        println!("kept artifact at {}", path.display());
+    } else {
+        std::fs::remove_file(&path)?;
+    }
+    Ok(())
+}

@@ -16,7 +16,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 use symog::cli::Args;
 use symog::inference::IntModel;
-use symog::serve::{Registry, ServeConfig, Server};
+use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 use symog::testing::models;
 use symog::util::rng::Rng;
 
@@ -44,7 +44,8 @@ fn main() -> Result<()> {
     let elems: usize = man.input_shape.iter().product();
 
     let mut reg = Registry::new();
-    let key = reg.register(&model_name, &model, batch)?;
+    let opts = RegisterOpts::new().max_batch(batch);
+    let key = reg.add(&model_name, ModelSource::InCode(&model), &opts)?;
     let server = Server::new(reg, ServeConfig { workers });
     println!(
         "== serve_bench == model {key}  input {:?}  micro-batch cap {batch}  \

@@ -480,7 +480,7 @@ const SERVE_CASES: &[ServeCase] = &[
 /// `serve_throughput` and is gated by bench_check like the kernel ratios
 /// (same-host ratio, so the gate stays machine-invariant).
 fn serve_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<()> {
-    use symog::serve::{Registry, ServeConfig, Server};
+    use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 
     println!("--- serving throughput (closed-loop clients vs solo planned forwards) ---");
     for case in SERVE_CASES {
@@ -496,7 +496,8 @@ fn serve_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<
         let images: Vec<f32> = (0..total * elems).map(|_| rng.normal()).collect();
 
         let mut reg = Registry::new();
-        let key = reg.register(case.model, &model, case.max_batch)?;
+        let opts = RegisterOpts::new().max_batch(case.max_batch);
+        let key = reg.add(case.model, ModelSource::InCode(&model), &opts)?;
         let server = Server::new(reg, ServeConfig::default());
         let plan = solo.shared_plan(case.max_batch)?;
         let out_per = plan.out_per_img();

@@ -1,0 +1,229 @@
+//! `.fxpa` binary layout: header, payload codec, and CRC-32 integrity.
+//!
+//! Layout (little-endian throughout):
+//!
+//! ```text
+//!   offset  size  field
+//!        0     8  magic b"SYMOGFXA"
+//!        8     4  u32 format_version   (this build writes/reads 1)
+//!       12     4  u32 model_version    (serving version of the payload)
+//!       16     8  u64 payload_len
+//!       24     4  u32 payload_crc32    (IEEE CRC-32 of the payload bytes)
+//!       28     …  payload
+//! ```
+//!
+//! Payload:
+//!
+//! ```text
+//!   u32 manifest_len, manifest JSON (the full model manifest, embedded)
+//!   u32 n_quant; per quantized tensor (qidx order):
+//!       u32 numel, i32 frac, packed codes ceil(numel * n_bits / 8)
+//!   u32 n_aux; per aux tensor (bias / BN gamma-beta / running stats):
+//!       u32 name_len + name, u8 ndim, u32 dims[], f32 data
+//! ```
+//!
+//! Every decode failure names the offending file and section; magic,
+//! format-version, length, and checksum mismatches are four *distinct*
+//! errors so corruption is distinguishable from version skew.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+pub(crate) const MAGIC: &[u8; 8] = b"SYMOGFXA";
+pub(crate) const FORMAT_VERSION: u32 = 1;
+pub(crate) const HEADER_LEN: usize = 28;
+
+/// IEEE CRC-32 lookup table (polynomial 0xEDB88320, reflected).
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// IEEE CRC-32 (the zlib/PNG/gzip checksum).
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Parsed `.fxpa` header.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Header {
+    pub(crate) model_version: u32,
+    pub(crate) payload_len: u64,
+    pub(crate) payload_crc: u32,
+}
+
+/// Serialize a header for `payload` (format version pinned to this build's).
+pub(crate) fn write_header(out: &mut Vec<u8>, model_version: u32, payload: &[u8]) {
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&model_version.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+}
+
+/// Validate magic + format version and read the header fields. `path` is
+/// used only for error messages.
+pub(crate) fn parse_header(bytes: &[u8], path: &Path) -> Result<Header> {
+    ensure!(
+        bytes.len() >= HEADER_LEN,
+        "{}: truncated .fxpa — {} bytes is smaller than the {HEADER_LEN}-byte header",
+        path.display(),
+        bytes.len()
+    );
+    if &bytes[..8] != MAGIC {
+        if &bytes[..8] == b"SYMGFXP1" {
+            bail!(
+                "{}: this is a .fxpm packed model, not a .fxpa serving artifact — \
+                 load it with quant::packed::read_packed or republish via artifact::publish",
+                path.display()
+            );
+        }
+        bail!("{}: not a .fxpa serving artifact (bad magic {:02x?})", path.display(), &bytes[..8]);
+    }
+    let u32_at = |off: usize| u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+    let fmt = u32_at(8);
+    ensure!(fmt != 0, "{}: corrupt header — format version 0 is never written", path.display());
+    ensure!(
+        fmt <= FORMAT_VERSION,
+        "{}: format version {fmt} is newer than this build supports ({FORMAT_VERSION}) — \
+         .fxpa artifacts are not forward-compatible, upgrade the serving binary",
+        path.display()
+    );
+    Ok(Header {
+        model_version: u32_at(12),
+        payload_len: u64::from_le_bytes(bytes[16..24].try_into().unwrap()),
+        payload_crc: u32_at(24),
+    })
+}
+
+/// Bounds-checked little-endian reader over an in-memory payload. Each
+/// read names the section it was decoding, so a truncated or corrupt
+/// payload produces "truncated payload reading <what>" rather than a
+/// generic I/O error.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let left = self.buf.len() - self.pos;
+        ensure!(
+            n <= left,
+            "truncated payload reading {what}: need {n} bytes at offset {}, only {left} left",
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub(crate) fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn i32(&mut self, what: &str) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4, what)?;
+        Ok(raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+    }
+
+    pub(crate) fn str(&mut self, n: usize, what: &str) -> Result<&'a str> {
+        std::str::from_utf8(self.take(n, what)?)
+            .map_err(|e| anyhow::anyhow!("{what} is not valid UTF-8: {e}"))
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // canonical CRC-32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // sensitivity: one flipped bit changes the sum
+        assert_ne!(crc32(b"123456789"), crc32(b"123456788"));
+    }
+
+    #[test]
+    fn header_roundtrips() {
+        let payload = b"hello payload";
+        let mut buf = Vec::new();
+        write_header(&mut buf, 7, payload);
+        assert_eq!(buf.len(), HEADER_LEN);
+        let h = parse_header(&buf, Path::new("x.fxpa")).unwrap();
+        assert_eq!(h.model_version, 7);
+        assert_eq!(h.payload_len, payload.len() as u64);
+        assert_eq!(h.payload_crc, crc32(payload));
+    }
+
+    #[test]
+    fn header_rejections_are_distinct() {
+        let mut buf = Vec::new();
+        write_header(&mut buf, 1, b"p");
+        let p = Path::new("bad.fxpa");
+
+        let short = parse_header(&buf[..10], p).unwrap_err().to_string();
+        assert!(short.contains("smaller than the 28-byte header"), "{short}");
+
+        let mut wrong = buf.clone();
+        wrong[..8].copy_from_slice(b"SYMGFXP1");
+        let fxpm = parse_header(&wrong, p).unwrap_err().to_string();
+        assert!(fxpm.contains(".fxpm packed model"), "{fxpm}");
+
+        wrong[..8].copy_from_slice(b"GARBAGE!");
+        let magic = parse_header(&wrong, p).unwrap_err().to_string();
+        assert!(magic.contains("bad magic"), "{magic}");
+
+        let mut newer = buf.clone();
+        newer[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let fwd = parse_header(&newer, p).unwrap_err().to_string();
+        assert!(fwd.contains("not forward-compatible"), "{fwd}");
+    }
+
+    #[test]
+    fn cursor_reports_section_names() {
+        let mut c = Cursor::new(&[1, 0, 0, 0, 9]);
+        assert_eq!(c.u32("count").unwrap(), 1);
+        assert_eq!(c.remaining(), 1);
+        let e = c.u32("tensor body").unwrap_err().to_string();
+        assert!(e.contains("tensor body") && e.contains("offset 4"), "{e}");
+        // the failed read consumed nothing
+        assert_eq!(c.u8("tail").unwrap(), 9);
+    }
+}

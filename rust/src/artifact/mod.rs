@@ -1,0 +1,341 @@
+//! `.fxpa` — versioned serving artifacts: publish, verify, load, plan.
+//!
+//! This is the deployment hand-off the paper's fixed-point story ends in:
+//! training produces hard-quantized weights (i8 mantissas + power-of-two
+//! deltas), and a serving fleet wants them as a single integrity-checked
+//! file it can load straight into a compiled [`ExecPlan`] — no float
+//! weights, no re-derived quantization state, no training code.
+//!
+//! * [`publish`] exports any `(Manifest, Checkpoint)` pair — the exact
+//!   inputs [`IntModel::build`] consumes, so anything servable in-code is
+//!   publishable — quantizing weights to packed codes with the checkpoint's
+//!   `__deltas__` during packing. [`publish_native`] does the same for a
+//!   pure-Rust [`NativeModel`] straight out of the trainer.
+//! * [`load`] reads the file back into a ready [`IntModel`]. Deltas travel
+//!   as per-tensor `frac` exponents, so the loader reconstructs
+//!   `delta = 2^-frac` exactly; because every stored weight is on the
+//!   codebook (`m · delta` with delta a power of two), the loaded model's
+//!   logits are **bit-identical** to the source model's
+//!   (`tests/artifact_roundtrip.rs`).
+//! * The header carries a **format version** (layout compatibility; this
+//!   build speaks version 1 and refuses newer files explicitly) and a
+//!   **model version** (which deployment of this model the payload is —
+//!   the hot-swap handle `serve::Server::swap` keys on).
+//! * A CRC-32 over the payload plus per-section bounds checks turn disk
+//!   corruption into named errors instead of garbage weights.
+//!
+//! Publishing is atomic: the file is written to a `.tmp` sibling and
+//! renamed into place, so a watcher never observes a half-written artifact.
+//!
+//! See `format.rs` for the byte layout and DESIGN.md §"Serving artifacts
+//! and hot-swap".
+//!
+//! [`IntModel::build`]: crate::inference::IntModel::build
+//! [`NativeModel`]: crate::train::NativeModel
+//! [`ExecPlan`]: crate::inference::ExecPlan
+
+pub(crate) mod format;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{Checkpoint, Kind, Tensor};
+use crate::inference::{ExecPlan, IntModel};
+use crate::quant::packed::{pack_codes, unpack_codes};
+use crate::runtime::{Manifest, ParamMeta};
+use crate::train::NativeModel;
+
+use format::Cursor;
+
+/// Publishing knobs (builder-style, like `serve::RegisterOpts`).
+#[derive(Clone, Copy, Debug)]
+pub struct PublishOpts {
+    /// Model version stamped into the header; serving uses it for
+    /// monotonic hot-swap ordering. Must be >= 1.
+    pub version: u32,
+}
+
+impl Default for PublishOpts {
+    fn default() -> PublishOpts {
+        PublishOpts { version: 1 }
+    }
+}
+
+impl PublishOpts {
+    pub fn new() -> PublishOpts {
+        PublishOpts::default()
+    }
+
+    pub fn version(mut self, v: u32) -> PublishOpts {
+        self.version = v;
+        self
+    }
+}
+
+/// What [`publish`] wrote.
+#[derive(Clone, Copy, Debug)]
+pub struct ArtifactInfo {
+    pub version: u32,
+    /// total file size on disk
+    pub bytes: u64,
+    pub quant_tensors: usize,
+    pub aux_tensors: usize,
+}
+
+/// A loaded-and-verified `.fxpa`: the embedded manifest, the header's
+/// model version, and a ready-to-plan [`IntModel`].
+pub struct LoadedArtifact {
+    pub path: PathBuf,
+    pub manifest: Manifest,
+    pub version: u32,
+    pub model: IntModel,
+}
+
+impl LoadedArtifact {
+    /// Compile (or fetch the cached) execution plan — same cache-backed
+    /// shared plan `forward` and the serving registry use.
+    pub fn plan(&self, max_batch: usize) -> Result<Arc<ExecPlan>> {
+        self.model.shared_plan(max_batch)
+    }
+}
+
+/// Quantized params in qidx order — the canonical on-disk tensor order.
+fn quant_params(man: &Manifest) -> Vec<(&ParamMeta, usize)> {
+    let mut quant: Vec<(&ParamMeta, usize)> =
+        man.params.iter().filter_map(|p| p.qidx.map(|q| (p, q))).collect();
+    quant.sort_by_key(|(_, q)| *q);
+    quant
+}
+
+fn encode_payload(man: &Manifest, ck: &Checkpoint) -> Result<(Vec<u8>, usize, usize)> {
+    let deltas = &ck.find("__deltas__").context("checkpoint has no __deltas__ tensor")?.data;
+    let man_json = man.to_json();
+    let mut out = Vec::new();
+    out.extend_from_slice(&(man_json.len() as u32).to_le_bytes());
+    out.extend_from_slice(man_json.as_bytes());
+
+    let quant = quant_params(man);
+    out.extend_from_slice(&(quant.len() as u32).to_le_bytes());
+    let qmax = ((1i32 << (man.n_bits - 1)) - 1) as f32;
+    for (p, qidx) in &quant {
+        let t = ck
+            .find(&p.name)
+            .with_context(|| format!("checkpoint is missing quantized tensor {}", p.name))?;
+        ensure!(
+            t.data.len() == p.numel(),
+            "{}: checkpoint has {} elements, manifest says {}",
+            p.name,
+            t.data.len(),
+            p.numel()
+        );
+        ensure!(*qidx < deltas.len(), "{}: qidx {qidx} out of range", p.name);
+        let delta = deltas[*qidx];
+        ensure!(delta > 0.0, "{}: non-positive delta {delta}", p.name);
+        // same rounding as QWeight::encode / fixedpoint::quantize
+        // (round-half-away-from-zero, clamp to the symmetric codebook), so
+        // loading reproduces the in-code IntModel's mantissas exactly
+        let frac = (-delta.log2()).round() as i32;
+        let mantissas: Vec<i8> = t
+            .data
+            .iter()
+            .map(|&w| {
+                let s = w / delta;
+                (s.abs() + 0.5).floor().copysign(s).clamp(-qmax, qmax) as i8
+            })
+            .collect();
+        out.extend_from_slice(&(t.data.len() as u32).to_le_bytes());
+        out.extend_from_slice(&frac.to_le_bytes());
+        out.extend_from_slice(&pack_codes(&mantissas, man.n_bits));
+    }
+
+    // aux tensors: everything the engine needs that is not a packed weight
+    // (bias, folded-BN gamma/beta, running stats); momenta and the deltas
+    // vector itself are training state and stay out of the artifact
+    let aux: Vec<&Tensor> = ck
+        .tensors
+        .iter()
+        .filter(|t| {
+            t.name != "__deltas__"
+                && !t.name.ends_with("#m")
+                && !man.params.iter().any(|p| p.qidx.is_some() && p.name == t.name)
+        })
+        .collect();
+    out.extend_from_slice(&(aux.len() as u32).to_le_bytes());
+    for t in &aux {
+        out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.push(t.dims.len() as u8);
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &t.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok((out, quant.len(), aux.len()))
+}
+
+fn decode_payload(buf: &[u8]) -> Result<(Manifest, Checkpoint)> {
+    let mut c = Cursor::new(buf);
+    let mlen = c.u32("manifest length")? as usize;
+    let man = Manifest::parse(c.str(mlen, "embedded manifest")?)
+        .context("parsing the embedded manifest")?;
+
+    let mut ck = Checkpoint::default();
+    let n_quant = c.u32("quantized tensor count")? as usize;
+    let quant = quant_params(&man);
+    ensure!(
+        n_quant == quant.len(),
+        "payload declares {n_quant} quantized tensors, the embedded manifest has {}",
+        quant.len()
+    );
+    let mut deltas = vec![1.0f32; man.deltas_len()];
+    for (p, qidx) in &quant {
+        let numel = c.u32(&format!("numel of {}", p.name))? as usize;
+        ensure!(
+            numel == p.numel(),
+            "{}: payload has {numel} elements, the embedded manifest says {}",
+            p.name,
+            p.numel()
+        );
+        let frac = c.i32(&format!("frac exponent of {}", p.name))?;
+        let delta = (2.0f32).powi(-frac);
+        deltas[*qidx] = delta;
+        let packed = c.take(
+            (numel * man.n_bits as usize).div_ceil(8),
+            &format!("packed codes of {}", p.name),
+        )?;
+        ck.tensors.push(Tensor {
+            name: p.name.clone(),
+            kind: Kind::Weight,
+            dims: p.shape.clone(),
+            data: unpack_codes(packed, numel, man.n_bits)
+                .into_iter()
+                .map(|m| m as f32 * delta)
+                .collect(),
+        });
+    }
+
+    let n_aux = c.u32("aux tensor count")? as usize;
+    for i in 0..n_aux {
+        let nlen = c.u32(&format!("name length of aux tensor {i}"))? as usize;
+        let name = c.str(nlen, &format!("name of aux tensor {i}"))?.to_string();
+        let ndim = c.u8(&format!("rank of {name}"))? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(c.u32(&format!("dims of {name}"))? as usize);
+        }
+        let numel = dims.iter().product::<usize>().max(1);
+        let data = c.f32s(numel, &format!("data of {name}"))?;
+        ck.tensors.push(Tensor { name, kind: Kind::State, dims, data });
+    }
+    ensure!(
+        c.remaining() == 0,
+        "{} unread bytes of trailing garbage after the last aux tensor",
+        c.remaining()
+    );
+    ck.tensors.push(Tensor {
+        name: "__deltas__".into(),
+        kind: Kind::Deltas,
+        dims: vec![deltas.len()],
+        data: deltas,
+    });
+    Ok((man, ck))
+}
+
+/// Publish a `(Manifest, Checkpoint)` pair — the inputs `IntModel::build`
+/// consumes — as a `.fxpa` at `path`, quantizing weights with the
+/// checkpoint's `__deltas__` during packing. Atomic: written to a `.tmp`
+/// sibling, then renamed into place.
+pub fn publish(
+    man: &Manifest,
+    ck: &Checkpoint,
+    opts: &PublishOpts,
+    path: &Path,
+) -> Result<ArtifactInfo> {
+    ensure!(opts.version >= 1, "artifact model version must be >= 1 (got {})", opts.version);
+    let (payload, nq, na) = encode_payload(man, ck)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    let mut file = Vec::with_capacity(format::HEADER_LEN + payload.len());
+    format::write_header(&mut file, opts.version, &payload);
+    file.extend_from_slice(&payload);
+    let bytes = file.len() as u64;
+    let tmp = path.with_extension("fxpa.tmp");
+    std::fs::write(&tmp, &file).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(ArtifactInfo { version: opts.version, bytes, quant_tensors: nq, aux_tensors: na })
+}
+
+/// Publish a native-trainer model: derives the manifest from the graph
+/// ([`NativeModel::to_manifest`]) and snapshots weights + deltas.
+pub fn publish_native(
+    model: &NativeModel,
+    deltas: &[f32],
+    n_bits: u32,
+    opts: &PublishOpts,
+    path: &Path,
+) -> Result<ArtifactInfo> {
+    ensure!(
+        deltas.len() == model.n_quant.max(1),
+        "model has {} quantized tensors, got {} deltas",
+        model.n_quant,
+        deltas.len()
+    );
+    let man = model.to_manifest(n_bits);
+    let ck = model.to_checkpoint(deltas, 0, "symog");
+    publish(&man, &ck, opts, path)
+}
+
+/// Read the model version from a `.fxpa` header without loading the
+/// payload — cheap existence/compatibility probe for swap loops.
+pub fn peek_version(path: &Path) -> Result<u32> {
+    use std::io::Read as _;
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut head = [0u8; format::HEADER_LEN];
+    let mut got = 0;
+    while got < head.len() {
+        match f.read(&mut head[got..]).with_context(|| format!("reading {}", path.display()))? {
+            0 => break,
+            n => got += n,
+        }
+    }
+    Ok(format::parse_header(&head[..got], path)?.model_version)
+}
+
+/// Load and verify a `.fxpa`, reconstructing the quantization state
+/// (codebook weights + deltas) exactly as published — straight to an
+/// [`IntModel`] whose plans are bit-identical to the source model's.
+pub fn load(path: &Path) -> Result<LoadedArtifact> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let h = format::parse_header(&bytes, path)?;
+    let have = (bytes.len() - format::HEADER_LEN) as u64;
+    ensure!(
+        have >= h.payload_len,
+        "{}: truncated payload — header declares {} bytes, file holds {have}",
+        path.display(),
+        h.payload_len
+    );
+    ensure!(
+        have == h.payload_len,
+        "{}: {} bytes of trailing garbage after the declared payload",
+        path.display(),
+        have - h.payload_len
+    );
+    let payload = &bytes[format::HEADER_LEN..];
+    let crc = format::crc32(payload);
+    ensure!(
+        crc == h.payload_crc,
+        "{}: payload checksum mismatch (stored {:#010x}, computed {crc:#010x}) — \
+         the artifact is corrupt",
+        path.display(),
+        h.payload_crc
+    );
+    let (man, ck) = decode_payload(payload)
+        .with_context(|| format!("{}: decoding .fxpa payload", path.display()))?;
+    let model = IntModel::build(&man, &ck)
+        .with_context(|| format!("{}: building the integer model", path.display()))?;
+    Ok(LoadedArtifact { path: path.to_path_buf(), manifest: man, version: h.model_version, model })
+}

@@ -17,7 +17,7 @@
 use anyhow::{Context, Result};
 
 use crate::fixedpoint;
-use crate::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, Artifact};
+use crate::runtime::{literal_f32, literal_i32, literal_scalar_f32, run, XlaArtifact};
 
 use super::checkpoint::{Checkpoint, Kind, Tensor};
 
@@ -70,7 +70,7 @@ pub trait TrainBackend {
 /// The AOT-artifact backend: host mirrors of device literals + the three
 /// compiled executables.
 pub struct XlaBackend<'a> {
-    pub artifact: &'a Artifact,
+    pub artifact: &'a XlaArtifact,
     params: Vec<xla::Literal>,
     momenta: Vec<xla::Literal>,
     state: Vec<xla::Literal>,
@@ -84,7 +84,7 @@ impl<'a> XlaBackend<'a> {
     /// `optimal_delta_refined` solver) — pass true when starting SYMOG from
     /// a pretrained float model.
     pub fn from_checkpoint(
-        artifact: &'a Artifact,
+        artifact: &'a XlaArtifact,
         ckpt: &Checkpoint,
         resolve_deltas: bool,
     ) -> Result<XlaBackend<'a>> {

@@ -19,7 +19,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::data::{AugmentConfig, BatchIter, Dataset};
-use crate::runtime::Artifact;
+use crate::runtime::XlaArtifact;
 
 use super::backend::{TrainBackend, XlaBackend};
 use super::checkpoint::Checkpoint;
@@ -88,7 +88,7 @@ impl<'a> Trainer<XlaBackend<'a>> {
     /// re-solves the step sizes from the loaded weights (Alg. 1 lines 2-5)
     /// — pass true when starting SYMOG from a pretrained float model.
     pub fn from_checkpoint(
-        artifact: &'a Artifact,
+        artifact: &'a XlaArtifact,
         ckpt: &Checkpoint,
         resolve_deltas: bool,
     ) -> Result<Trainer<XlaBackend<'a>>> {
@@ -98,7 +98,7 @@ impl<'a> Trainer<XlaBackend<'a>> {
     }
 
     /// Convenience: load the artifact's own init checkpoint.
-    pub fn from_init(artifact: &'a Artifact) -> Result<Trainer<XlaBackend<'a>>> {
+    pub fn from_init(artifact: &'a XlaArtifact) -> Result<Trainer<XlaBackend<'a>>> {
         let ckpt = Checkpoint::read(&artifact.init_ckpt())?;
         Trainer::from_checkpoint(artifact, &ckpt, true)
     }

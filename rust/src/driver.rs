@@ -13,7 +13,7 @@ use anyhow::{Context, Result};
 use crate::config::Experiment;
 use crate::coordinator::{Checkpoint, Trainer, TrainOutcome};
 use crate::data::Dataset;
-use crate::runtime::{Artifact, Runtime};
+use crate::runtime::{Runtime, XlaArtifact};
 
 /// Default artifacts root: $SYMOG_ARTIFACTS or ./artifacts.
 pub fn artifacts_root() -> PathBuf {
@@ -32,7 +32,7 @@ pub struct RunResult {
 }
 
 /// Load the experiment's artifact.
-pub fn load_artifact(rt: &Runtime, exp: &Experiment, root: &Path) -> Result<Artifact> {
+pub fn load_artifact(rt: &Runtime, exp: &Experiment, root: &Path) -> Result<XlaArtifact> {
     let dir = exp.artifact_dir(root);
     rt.load_artifact(&dir)
         .with_context(|| format!("loading artifact {} (run `make artifacts`?)", dir.display()))
@@ -40,7 +40,7 @@ pub fn load_artifact(rt: &Runtime, exp: &Experiment, root: &Path) -> Result<Arti
 
 /// Run one experiment end to end on the given data.
 pub fn run_experiment(
-    artifact: &Artifact,
+    artifact: &XlaArtifact,
     exp: &Experiment,
     train: &Dataset,
     test: &Dataset,

@@ -9,6 +9,7 @@
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
+pub mod artifact;
 pub mod coordinator;
 pub mod data;
 pub mod bench;

@@ -122,7 +122,7 @@ fn experiment_from_args(args: &Args) -> Result<Experiment> {
     Ok(exp)
 }
 
-fn load_manifest_artifact(args: &Args, rt: &Runtime) -> Result<symog::runtime::Artifact> {
+fn load_manifest_artifact(args: &Args, rt: &Runtime) -> Result<symog::runtime::XlaArtifact> {
     let tag = args
         .str_opt("artifact")
         .context("--artifact TAG is required")?;

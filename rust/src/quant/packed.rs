@@ -54,6 +54,12 @@ pub fn mantissa_at(packed: &[u8], i: usize, n_bits: u32) -> i8 {
     let nb = n_bits as usize;
     let mask = (1u16 << nb) - 1;
     let bit = i * nb;
+    debug_assert!(
+        (bit + nb - 1) / 8 < packed.len(),
+        "mantissa_at: code {i} ({n_bits}-bit) ends at byte {}, packed stream holds {}",
+        (bit + nb - 1) / 8,
+        packed.len()
+    );
     let mut v = (packed[bit / 8] >> (bit % 8)) as u16;
     if bit % 8 + nb > 8 {
         v |= (packed[bit / 8 + 1] as u16) << (8 - bit % 8);
@@ -130,37 +136,78 @@ pub fn write_packed(man: &Manifest, man_json: &str, ckpt: &Checkpoint, path: &Pa
 /// Read a packed model back into (manifest, checkpoint-with-quantized-
 /// weights) — ready for `IntModel::build`.
 pub fn read_packed(path: &Path) -> Result<(Manifest, Checkpoint)> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated before the 8-byte magic", path.display()))?;
     if &magic != MAGIC {
-        bail!("{}: not a .fxpm file", path.display());
+        if &magic == b"SYMOGFXA" {
+            bail!(
+                "{}: this is a .fxpa serving artifact, not a .fxpm packed model — \
+                 load it with artifact::load",
+                path.display()
+            );
+        }
+        if magic[..7] == MAGIC[..7] {
+            bail!(
+                "{}: unsupported .fxpm format version byte {:?} (this build reads '1')",
+                path.display(),
+                magic[7] as char
+            );
+        }
+        bail!("{}: not a .fxpm file (bad magic {magic:02x?})", path.display());
     }
-    let mlen = read_u32(&mut f)? as usize;
+    let mlen = read_u32(&mut f)
+        .with_context(|| format!("{}: truncated reading the manifest length", path.display()))?
+        as usize;
     let mut mbuf = vec![0u8; mlen];
-    f.read_exact(&mut mbuf)?;
-    let man = Manifest::parse(std::str::from_utf8(&mbuf)?)?;
+    f.read_exact(&mut mbuf).with_context(|| {
+        format!("{}: truncated reading the {mlen}-byte embedded manifest", path.display())
+    })?;
+    let man = Manifest::parse(std::str::from_utf8(&mbuf)?)
+        .with_context(|| format!("{}: parsing the embedded manifest", path.display()))?;
 
     let mut ck = Checkpoint::default();
-    let n_quant = read_u32(&mut f)? as usize;
+    let n_quant = read_u32(&mut f).with_context(|| {
+        format!("{}: truncated reading the quantized tensor count", path.display())
+    })? as usize;
     let mut quant: Vec<(&crate::runtime::ParamMeta, usize)> = man
         .params
         .iter()
         .filter_map(|p| p.qidx.map(|q| (p, q)))
         .collect();
     quant.sort_by_key(|(_, q)| *q);
-    anyhow::ensure!(quant.len() == n_quant, "quant tensor count mismatch");
+    anyhow::ensure!(
+        quant.len() == n_quant,
+        "{}: payload declares {n_quant} quantized tensors, the embedded manifest has {}",
+        path.display(),
+        quant.len()
+    );
     let mut deltas = vec![1.0f32; man.deltas_len()];
     for (p, qidx) in &quant {
-        let numel = read_u32(&mut f)? as usize;
-        anyhow::ensure!(numel == p.numel(), "{}: numel mismatch", p.name);
+        let numel = read_u32(&mut f).with_context(|| {
+            format!("{}: truncated reading the numel of {}", path.display(), p.name)
+        })? as usize;
+        anyhow::ensure!(
+            numel == p.numel(),
+            "{}: {} has {numel} elements in the payload, the manifest says {}",
+            path.display(),
+            p.name,
+            p.numel()
+        );
         let mut fb = [0u8; 4];
-        f.read_exact(&mut fb)?;
+        f.read_exact(&mut fb).with_context(|| {
+            format!("{}: truncated reading the frac exponent of {}", path.display(), p.name)
+        })?;
         let frac = i32::from_le_bytes(fb);
         let delta = (2.0f32).powi(-frac);
         deltas[*qidx] = delta;
         let mut packed = vec![0u8; (numel * man.n_bits as usize).div_ceil(8)];
-        f.read_exact(&mut packed)?;
+        f.read_exact(&mut packed).with_context(|| {
+            format!("{}: truncated reading the packed codes of {}", path.display(), p.name)
+        })?;
         let data = unpack_codes(&packed, numel, man.n_bits)
             .into_iter()
             .map(|m| m as f32 * delta)
@@ -172,23 +219,36 @@ pub fn read_packed(path: &Path) -> Result<(Manifest, Checkpoint)> {
             data,
         });
     }
-    let n_aux = read_u32(&mut f)? as usize;
-    for _ in 0..n_aux {
-        let nlen = read_u32(&mut f)? as usize;
+    let n_aux = read_u32(&mut f)
+        .with_context(|| format!("{}: truncated reading the aux tensor count", path.display()))?
+        as usize;
+    for i in 0..n_aux {
+        let nlen = read_u32(&mut f).with_context(|| {
+            format!("{}: truncated reading the name of aux tensor {i}", path.display())
+        })? as usize;
         let mut nb = vec![0u8; nlen];
-        f.read_exact(&mut nb)?;
+        f.read_exact(&mut nb).with_context(|| {
+            format!("{}: truncated reading the name of aux tensor {i}", path.display())
+        })?;
+        let name = String::from_utf8(nb)
+            .with_context(|| format!("{}: aux tensor {i} name is not UTF-8", path.display()))?;
         let mut db = [0u8; 1];
-        f.read_exact(&mut db)?;
+        f.read_exact(&mut db)
+            .with_context(|| format!("{}: truncated reading the rank of {name}", path.display()))?;
         let ndim = db[0] as usize;
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(read_u32(&mut f)? as usize);
+            dims.push(read_u32(&mut f).with_context(|| {
+                format!("{}: truncated reading the dims of {name}", path.display())
+            })? as usize);
         }
         let numel: usize = dims.iter().product::<usize>().max(1);
         let mut raw = vec![0u8; numel * 4];
-        f.read_exact(&mut raw)?;
+        f.read_exact(&mut raw).with_context(|| {
+            format!("{}: truncated reading the data of {name}", path.display())
+        })?;
         ck.tensors.push(Tensor {
-            name: String::from_utf8(nb)?,
+            name,
             kind: Kind::State,
             dims,
             data: raw

@@ -1,4 +1,8 @@
-//! Artifact: one compiled configuration (manifest + train/eval/evalq).
+//! XlaArtifact: a compiled XLA training configuration — the manifest plus
+//! the three PJRT executables (train / eval / evalq) aot.py emitted as HLO
+//! text. Not to be confused with the *serving* artifact (`.fxpa`,
+//! `crate::artifact`), which holds packed fixed-point weights and no
+//! executables.
 
 use std::path::{Path, PathBuf};
 
@@ -6,8 +10,9 @@ use anyhow::{Context, Result};
 
 use super::{Manifest, Runtime};
 
-/// A loaded artifact directory. Executables are compiled eagerly at load.
-pub struct Artifact {
+/// A loaded AOT artifact directory. Executables are compiled eagerly at
+/// load.
+pub struct XlaArtifact {
     pub dir: PathBuf,
     pub manifest: Manifest,
     pub train: xla::PjRtLoadedExecutable,
@@ -15,14 +20,14 @@ pub struct Artifact {
     pub evalq: xla::PjRtLoadedExecutable,
 }
 
-impl Artifact {
-    pub fn load(rt: &Runtime, dir: &Path) -> Result<Artifact> {
+impl XlaArtifact {
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<XlaArtifact> {
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest in {}", dir.display()))?;
         let train = rt.load_hlo(&dir.join("train.hlo.txt"))?;
         let eval = rt.load_hlo(&dir.join("eval.hlo.txt"))?;
         let evalq = rt.load_hlo(&dir.join("evalq.hlo.txt"))?;
-        Ok(Artifact { dir: dir.to_path_buf(), manifest, train, eval, evalq })
+        Ok(XlaArtifact { dir: dir.to_path_buf(), manifest, train, eval, evalq })
     }
 
     /// Path of the init checkpoint written by aot.py.

@@ -156,6 +156,63 @@ impl Manifest {
         Manifest::parse(&src)
     }
 
+    /// Serialize back to manifest JSON — the inverse of [`Manifest::parse`],
+    /// used to embed manifests in on-disk formats (`.fxpm`, `.fxpa`).
+    /// Numbers are written with `f64`'s round-trip `Display`, so
+    /// `parse(&m.to_json())` reconstructs every field exactly.
+    pub fn to_json(&self) -> String {
+        fn shape(s: &[usize]) -> Json {
+            Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect())
+        }
+        fn obj(fields: Vec<(&str, Json)>) -> Json {
+            Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        }
+        let params = self
+            .params
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("name", Json::Str(p.name.clone())),
+                    ("shape", shape(&p.shape)),
+                    ("kind", Json::Str(p.kind.clone())),
+                    ("qidx", p.qidx.map_or(Json::Null, |q| Json::Num(q as f64))),
+                    ("fan_in", Json::Num(p.fan_in as f64)),
+                ])
+            })
+            .collect();
+        let state = self
+            .state
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("shape", shape(&s.shape)),
+                    ("init", Json::Num(s.init as f64)),
+                ])
+            })
+            .collect();
+        let layers = self.layers.iter().map(|l| l.0.clone()).collect();
+        obj(vec![
+            ("tag", Json::Str(self.tag.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("width_mult", Json::Num(self.width_mult)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("n_bits", Json::Num(self.n_bits as f64)),
+            ("momentum", Json::Num(self.momentum as f64)),
+            ("weight_decay", Json::Num(self.weight_decay as f64)),
+            ("clip", Json::Bool(self.clip)),
+            ("input_shape", shape(&self.input_shape)),
+            ("num_classes", Json::Num(self.num_classes as f64)),
+            ("n_quant", Json::Num(self.n_quant as f64)),
+            ("params", Json::Arr(params)),
+            ("state", Json::Arr(state)),
+            ("layers", Json::Arr(layers)),
+        ])
+        .to_string()
+    }
+
     /// Total trainable parameters.
     pub fn num_params(&self) -> usize {
         self.params.iter().map(|p| p.numel()).sum()
@@ -215,5 +272,29 @@ mod tests {
     #[test]
     fn rejects_missing_fields() {
         assert!(Manifest::parse(r#"{"tag":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_exactly() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let m2 = Manifest::parse(&m.to_json()).unwrap();
+        assert_eq!(m2.tag, m.tag);
+        assert_eq!(m2.width_mult, m.width_mult);
+        assert_eq!(m2.momentum, m.momentum);
+        assert_eq!(m2.n_bits, m.n_bits);
+        assert_eq!(m2.clip, m.clip);
+        assert_eq!(m2.input_shape, m.input_shape);
+        assert_eq!(m2.n_quant, m.n_quant);
+        assert_eq!(m2.params.len(), m.params.len());
+        for (a, b) in m2.params.iter().zip(&m.params) {
+            assert_eq!((&a.name, &a.shape, &a.kind), (&b.name, &b.shape, &b.kind));
+            assert_eq!((a.qidx, a.fan_in), (b.qidx, b.fan_in));
+        }
+        assert_eq!(m2.state.len(), m.state.len());
+        assert_eq!(m2.state[0].init, m.state[0].init);
+        assert_eq!(m2.layers.len(), m.layers.len());
+        assert_eq!(m2.layers[1].param_idx("w"), m.layers[1].param_idx("w"));
+        // a second round trip is a fixed point: the writer is deterministic
+        assert_eq!(m2.to_json(), Manifest::parse(&m2.to_json()).unwrap().to_json());
     }
 }

@@ -1,14 +1,21 @@
 //! Runtime: load AOT artifacts (HLO text) and execute them on PJRT.
 //!
-//! This wraps the `xla` crate's PJRT CPU client. One `Artifact` bundles the
-//! three executables of a compiled configuration (train / eval / evalq) with
-//! its manifest. Interchange is HLO *text* — see aot.py for why.
+//! This wraps the `xla` crate's PJRT CPU client. One `XlaArtifact` bundles
+//! the three executables of a compiled configuration (train / eval / evalq)
+//! with its manifest. Interchange is HLO *text* — see aot.py for why.
+//! (The *serving* artifact — packed fixed-point weights, no executables —
+//! is `crate::artifact`; the XLA prefix keeps the two apart.)
 
 mod artifact;
 mod manifest;
 mod tensor;
 
-pub use artifact::Artifact;
+pub use artifact::XlaArtifact;
+
+/// Pre-rename alias for [`XlaArtifact`] (this type held PJRT executables
+/// and collided with the `.fxpa` serving artifact in `crate::artifact`).
+#[deprecated(note = "renamed to XlaArtifact; `Artifact` now means the .fxpa serving artifact")]
+pub type Artifact = XlaArtifact;
 pub use manifest::{LayerDesc, Manifest, ParamMeta, StateMeta};
 pub use tensor::{literal_f32, literal_i32, literal_scalar_f32, to_f32_vec};
 
@@ -43,8 +50,8 @@ impl Runtime {
     }
 
     /// Load a full artifact directory (manifest + 3 executables).
-    pub fn load_artifact(&self, dir: &Path) -> Result<Artifact> {
-        Artifact::load(self, dir)
+    pub fn load_artifact(&self, dir: &Path) -> Result<XlaArtifact> {
+        XlaArtifact::load(self, dir)
     }
 }
 

@@ -6,22 +6,31 @@
 //! layer. It is synchronous at the API (`Server::infer` blocks until the
 //! request's logits are ready) and batched internally:
 //!
-//! * [`Registry`] — multi-model catalog keyed by `(name, n_bits)`; each
-//!   entry reuses the model's cache-backed shared plan;
-//! * [`Server`] — per-model FIFO submission queues whose pending requests
+//! * [`Registry`] — multi-model catalog slotted by `(name, n_bits)`,
+//!   populated from a [`ModelSource`] (an in-code `IntModel` whose
+//!   cache-backed shared plan is reused, or a published `.fxpa` artifact)
+//!   with [`RegisterOpts`] (micro-batch cap, version pinning);
+//! * [`Server`] — per-slot FIFO submission queues whose pending requests
 //!   coalesce into dynamic micro-batches (up to the registered
 //!   `max_batch`), flushed on a size or queue-empty watermark — never a
 //!   timer, so batching behavior is deterministic and testable;
-//! * bounded per-model scratch pools (checkout/return, zero steady-state
-//!   growth) and per-model running [`ModelStats`] with analytic op
-//!   accounting.
+//! * versioned serving: each slot holds an Arc-swapped version state;
+//!   [`Server::swap`] installs a new model version atomically under
+//!   traffic (in-flight drains finish on the version they pinned, nothing
+//!   pauses, nothing drops) and [`Server::infer_versioned`] reports which
+//!   version served each response;
+//! * bounded per-version scratch pools (checkout/return, zero
+//!   steady-state growth) and per-version running [`ModelStats`] with
+//!   analytic op accounting ([`Server::stats_by_version`] partitions
+//!   traffic exactly; [`Server::stats`] totals it).
 //!
 //! The load-bearing numeric contract: every response is bit-identical to
-//! a solo `Backend::Planned` forward of that request, regardless of
-//! arrival order, micro-batch composition, or client thread count. The
-//! engine's requantization statistics are batch-global, so this requires
-//! executing coalesced rows with per-request isolation — see
-//! [`ExecPlan::run_rows`] and DESIGN.md §"The serving layer".
+//! a solo `Backend::Planned` forward of that request on the version that
+//! served it, regardless of arrival order, micro-batch composition,
+//! client thread count, or concurrent swaps. The engine's requantization
+//! statistics are batch-global, so this requires executing coalesced rows
+//! with per-request isolation — see [`ExecPlan::run_rows`] and DESIGN.md
+//! §"The serving layer" / §"Serving artifacts and hot-swap".
 //!
 //! [`ExecPlan`]: crate::inference::ExecPlan
 //! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
@@ -30,6 +39,6 @@ mod registry;
 mod server;
 mod stats;
 
-pub use registry::{ModelKey, Registry};
+pub use registry::{ModelKey, ModelSource, RegisterOpts, Registry};
 pub use server::{ServeConfig, Server};
 pub use stats::ModelStats;

@@ -1,41 +1,105 @@
-//! Multi-model registry: named, bit-width-qualified handles to compiled
-//! execution plans.
+//! Multi-model registry: named, bit-width-qualified, *versioned* handles
+//! to compiled execution plans.
 //!
 //! A deployment typically serves several hard-quantized variants of the
 //! same architecture side by side (the paper's Table 1 sweeps n_bits ∈
-//! {2, 4, 8} over one net), so the registry key is `(name, n_bits)` — the
-//! same network quantized at two widths is two distinct served models
-//! with distinct plans, stats, and scratch pools.
+//! {2, 4, 8} over one net), so models are slotted by `(name, n_bits)` —
+//! the same network quantized at two widths is two distinct served models
+//! with distinct plans, stats, and scratch pools. Within a slot, entries
+//! carry a **version**: the deployment generation of the weights, which
+//! [`Server::swap`](super::Server::swap) advances atomically at runtime.
+//!
+//! Models come from a [`ModelSource`]: either an in-process [`IntModel`]
+//! (`InCode`) or a published `.fxpa` file on disk (`Artifact`), with
+//! per-registration knobs in the [`RegisterOpts`] builder.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::inference::{ExecPlan, IntModel};
 
-/// Registry key: model name + quantization bit width.
+/// Registry key: model name + quantization bit width + deployment version.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ModelKey {
     pub name: String,
     pub n_bits: u32,
+    /// deployment generation of the weights (1 = first install). Routing
+    /// ignores it — a server slot is `(name, n_bits)` and always serves
+    /// its *current* version — but responses and stats are pinned to it.
+    pub version: u32,
 }
 
 impl ModelKey {
+    /// Key at version 1 (the default for a first in-code registration).
     pub fn new(name: impl Into<String>, n_bits: u32) -> ModelKey {
-        ModelKey { name: name.into(), n_bits }
+        ModelKey::versioned(name, n_bits, 1)
+    }
+
+    pub fn versioned(name: impl Into<String>, n_bits: u32, version: u32) -> ModelKey {
+        ModelKey { name: name.into(), n_bits, version }
+    }
+
+    /// The server routing slot: version-agnostic (name, bits) identity.
+    pub(crate) fn slot(&self) -> (String, u32) {
+        (self.name.clone(), self.n_bits)
     }
 }
 
 impl fmt::Display for ModelKey {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}@w{}", self.name, self.n_bits)
+        write!(f, "{}@w{}#v{}", self.name, self.n_bits, self.version)
     }
 }
 
-/// One registered model: the shared compiled plan plus the static facts
-/// the server needs per request (resolved once at registration).
+/// Where a served model's weights come from.
+pub enum ModelSource<'a> {
+    /// An in-process integer model (the plan is shared, not copied).
+    InCode(&'a IntModel),
+    /// A published `.fxpa` serving artifact on disk (`artifact::publish`).
+    Artifact(&'a Path),
+}
+
+/// Registration knobs (builder: `RegisterOpts::new().max_batch(8)`).
+#[derive(Clone, Copy, Debug)]
+pub struct RegisterOpts {
+    /// Micro-batch cap: the server never coalesces more requests than
+    /// this. Default 1 (no batching).
+    pub max_batch: usize,
+    /// Version pin. For `InCode` sources this *sets* the version
+    /// (default: 1 on register, current + 1 on swap); for `Artifact`
+    /// sources the file's own model version is authoritative and a pin
+    /// that disagrees is a registration error.
+    pub version: Option<u32>,
+}
+
+impl Default for RegisterOpts {
+    fn default() -> RegisterOpts {
+        RegisterOpts { max_batch: 1, version: None }
+    }
+}
+
+impl RegisterOpts {
+    pub fn new() -> RegisterOpts {
+        RegisterOpts::default()
+    }
+
+    pub fn max_batch(mut self, n: usize) -> RegisterOpts {
+        self.max_batch = n;
+        self
+    }
+
+    pub fn version(mut self, v: u32) -> RegisterOpts {
+        self.version = Some(v);
+        self
+    }
+}
+
+/// One registered model version: the shared compiled plan plus the static
+/// facts the server needs per request (resolved once at registration).
 pub(crate) struct ModelEntry {
     pub(crate) plan: Arc<ExecPlan>,
     pub(crate) in_elems: usize,
@@ -46,12 +110,60 @@ pub(crate) struct ModelEntry {
     pub(crate) max_batch: usize,
 }
 
+/// Resolve a source + opts into a keyed entry. `default_version` is used
+/// for in-code sources with no pin (1 at registration; `cur + 1` on swap).
+pub(crate) fn build_entry(
+    name: &str,
+    source: &ModelSource<'_>,
+    opts: &RegisterOpts,
+    default_version: u32,
+) -> Result<(ModelKey, ModelEntry)> {
+    ensure!(opts.max_batch >= 1, "registering {name} needs max_batch >= 1");
+    let (key, plan) = match source {
+        ModelSource::InCode(model) => {
+            let version = opts.version.unwrap_or(default_version);
+            ensure!(version >= 1, "{name}: model versions start at 1");
+            let key = ModelKey::versioned(name, model.n_bits, version);
+            let plan = model
+                .shared_plan(opts.max_batch)
+                .with_context(|| format!("compiling plan for {key}"))?;
+            (key, plan)
+        }
+        ModelSource::Artifact(path) => {
+            let art = crate::artifact::load(path)
+                .with_context(|| format!("loading artifact for {name}"))?;
+            if let Some(pin) = opts.version {
+                ensure!(
+                    art.version == pin,
+                    "{}: artifact is model version {}, registration pinned v{pin}",
+                    path.display(),
+                    art.version
+                );
+            }
+            let key = ModelKey::versioned(name, art.model.n_bits, art.version);
+            let plan = art
+                .model
+                .shared_plan(opts.max_batch)
+                .with_context(|| format!("compiling plan for {key}"))?;
+            (key, plan)
+        }
+    };
+    let entry = ModelEntry {
+        in_elems: plan.in_elems(),
+        out_per_img: plan.out_per_img(),
+        max_batch: opts.max_batch.min(plan.max_batch()),
+        plan,
+    };
+    Ok((key, entry))
+}
+
 /// Name → plan registry a [`Server`](super::Server) is built from.
 ///
-/// `register` pulls the model's *cache-backed* shared plan
+/// In-code registration pulls the model's *cache-backed* shared plan
 /// ([`IntModel::shared_plan`]), so serving a model and calling its
 /// `forward()` directly execute one and the same compiled artifact — no
-/// second plan compilation, no drift between the two paths.
+/// second plan compilation, no drift between the two paths. Artifact
+/// registration loads + verifies the `.fxpa` and compiles its plan once.
 #[derive(Default)]
 pub struct Registry {
     models: BTreeMap<ModelKey, ModelEntry>,
@@ -62,27 +174,34 @@ impl Registry {
         Registry::default()
     }
 
-    /// Register `model` under `name` (keyed together with its bit width).
-    /// `max_batch` becomes the model's micro-batch cap: the server never
-    /// coalesces more requests than the plan was compiled for.
-    pub fn register(&mut self, name: &str, model: &IntModel, max_batch: usize) -> Result<ModelKey> {
-        ensure!(max_batch >= 1, "register needs max_batch >= 1");
-        let key = ModelKey::new(name, model.n_bits);
+    /// Register a model under `name` from an in-code plan or a published
+    /// artifact. Each `(name, n_bits)` slot holds one entry; the key's
+    /// version is 1 for unpinned in-code sources, the artifact's own model
+    /// version for `Artifact` sources (later generations are installed at
+    /// runtime via [`Server::swap`](super::Server::swap)).
+    pub fn add(
+        &mut self,
+        name: &str,
+        source: ModelSource<'_>,
+        opts: &RegisterOpts,
+    ) -> Result<ModelKey> {
+        let (key, entry) = build_entry(name, &source, opts, 1)?;
         ensure!(
-            !self.models.contains_key(&key),
-            "model {key} is already registered"
+            !self.models.keys().any(|k| k.slot() == key.slot()),
+            "model slot {}@w{} is already registered",
+            key.name,
+            key.n_bits
         );
-        let plan = model
-            .shared_plan(max_batch)
-            .with_context(|| format!("compiling plan for {key}"))?;
-        let entry = ModelEntry {
-            in_elems: plan.in_elems(),
-            out_per_img: plan.out_per_img(),
-            max_batch: max_batch.min(plan.max_batch()),
-            plan,
-        };
         self.models.insert(key.clone(), entry);
         Ok(key)
+    }
+
+    /// Pre-`ModelSource` call shape, kept so existing suites compile with
+    /// a one-line diff. Equivalent to
+    /// `add(name, ModelSource::InCode(model), &RegisterOpts::new().max_batch(max_batch))`.
+    #[deprecated(note = "use Registry::add with a ModelSource and RegisterOpts")]
+    pub fn register(&mut self, name: &str, model: &IntModel, max_batch: usize) -> Result<ModelKey> {
+        self.add(name, ModelSource::InCode(model), &RegisterOpts::new().max_batch(max_batch))
     }
 
     /// Registered keys, in deterministic (sorted) order.
@@ -117,13 +236,16 @@ mod tests {
         let model2 = IntModel::build(&m2, &c2).unwrap();
         let model8 = IntModel::build(&m8, &c8).unwrap();
         let mut reg = Registry::new();
-        let k2 = reg.register("lenet5", &model2, 4).unwrap();
-        let k8 = reg.register("lenet5", &model8, 4).unwrap();
+        let opts = RegisterOpts::new().max_batch(4);
+        let k2 = reg.add("lenet5", ModelSource::InCode(&model2), &opts).unwrap();
+        let k8 = reg.add("lenet5", ModelSource::InCode(&model8), &opts).unwrap();
         assert_ne!(k2, k8);
         assert_eq!(reg.len(), 2);
-        // duplicate key rejected
-        assert!(reg.register("lenet5", &model2, 4).is_err());
-        assert_eq!(format!("{k2}"), "lenet5@w2");
+        // duplicate (name, n_bits) slot rejected, even at another version
+        assert!(reg.add("lenet5", ModelSource::InCode(&model2), &opts).is_err());
+        let pinned = RegisterOpts::new().max_batch(4).version(9);
+        assert!(reg.add("lenet5", ModelSource::InCode(&model2), &pinned).is_err());
+        assert_eq!(format!("{k2}"), "lenet5@w2#v1");
     }
 
     #[test]
@@ -133,9 +255,38 @@ mod tests {
         let model = IntModel::build(&man, &ck).unwrap();
         let plan = model.shared_plan(6).unwrap();
         let mut reg = Registry::new();
-        reg.register("lenet5", &model, 6).unwrap();
+        reg.add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(6)).unwrap();
         let entries = reg.into_entries();
         let entry = entries.values().next().unwrap();
         assert!(Arc::ptr_eq(&entry.plan, &plan), "registry compiled a second plan");
+    }
+
+    #[test]
+    fn version_pinning_sets_the_key() {
+        let mut rng = Rng::new(3);
+        let (man, ck) = models::lenet5ish(&mut rng, 4);
+        let model = IntModel::build(&man, &ck).unwrap();
+        let mut reg = Registry::new();
+        let k = reg
+            .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().version(7))
+            .unwrap();
+        assert_eq!(k.version, 7);
+        assert_eq!(format!("{k}"), "lenet5@w4#v7");
+        // version 0 is reserved (versions are 1-based)
+        let mut reg2 = Registry::new();
+        assert!(reg2
+            .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().version(0))
+            .is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_register_wrapper_still_works() {
+        let mut rng = Rng::new(4);
+        let (man, ck) = models::lenet5ish(&mut rng, 2);
+        let model = IntModel::build(&man, &ck).unwrap();
+        let mut reg = Registry::new();
+        let k = reg.register("lenet5", &model, 4).unwrap();
+        assert_eq!((k.name.as_str(), k.n_bits, k.version), ("lenet5", 2, 1));
     }
 }

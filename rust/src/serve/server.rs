@@ -1,60 +1,79 @@
-//! The synchronous batched inference server.
+//! The synchronous batched inference server, with atomic hot-swap.
 //!
 //! ## Queue / flush policy (wall-clock-free)
 //!
 //! Callers block in [`Server::infer`]. Each request is appended to its
-//! model's FIFO submission queue; the first caller that finds the queue
-//! non-empty with no drain in flight becomes the **drainer**: it takes
-//! `min(pending, max_batch)` requests — the whole queue when traffic is
-//! light, a full micro-batch under saturation — executes them, scatters
-//! the logits back into each request's response slot, and wakes everyone.
-//! Flushing is therefore triggered purely by queue state (size watermark
-//! `max_batch`, or the executor going idle with work pending): there is no
-//! timer anywhere, so a given arrival order produces a reproducible batch
-//! partition — the property the conformance suite leans on. Drains are
-//! serialized per model (concurrency comes from row fan-out inside a
-//! batch and from other models); while a drain runs, new arrivals queue
-//! up and coalesce into the next micro-batch.
+//! model slot's FIFO submission queue; the first caller that finds the
+//! queue non-empty with no drain in flight becomes the **drainer**: it
+//! takes `min(pending, max_batch)` requests — the whole queue when
+//! traffic is light, a full micro-batch under saturation — executes them,
+//! scatters the logits back into each request's response slot, and wakes
+//! everyone. Flushing is therefore triggered purely by queue state (size
+//! watermark `max_batch`, or the executor going idle with work pending):
+//! there is no timer anywhere, so a given arrival order produces a
+//! reproducible batch partition — the property the conformance suite
+//! leans on. Drains are serialized per slot (concurrency comes from row
+//! fan-out inside a batch and from other models); while a drain runs, new
+//! arrivals queue up and coalesce into the next micro-batch.
+//!
+//! ## Versioned slots and hot-swap
+//!
+//! A server slot is `(name, n_bits)`; what it *serves* is a
+//! [`VersionState`] — plan, scratch pool, staging buffers, and stats for
+//! one deployment generation — behind an `RwLock<Arc<VersionState>>`
+//! ([`Server::swap`] is the writer). A drainer pins the current `Arc` at
+//! the moment it takes its requests, so a swap never pauses traffic and
+//! never drops a request: in-flight drains finish on the version they
+//! pinned while new drains pick up the new one, and each response (and
+//! its stats) is attributed to exactly the version that executed it —
+//! still bit-identical to a solo forward on that version. Retired
+//! versions stay resident only for their stats
+//! ([`Server::stats_by_version`]); swaps are rare control-plane events,
+//! serialized by the slot's install lock, and validated for monotonically
+//! increasing versions and identical I/O geometry.
 //!
 //! ## Execution and the bit-exactness contract
 //!
-//! A drained micro-batch is gathered into a preallocated per-model buffer
-//! and driven through [`ExecPlan::run_rows`], which executes every row at
-//! batch 1 with per-request requantization isolation. Consequence: each
-//! response is **bit-identical to a solo `Backend::Planned` forward** of
-//! that request, independent of arrival order, batch composition, or
-//! thread count (`tests/serve_conformance.rs`, `tests/serve_concurrency.rs`).
+//! A drained micro-batch is gathered into a preallocated per-version
+//! buffer and driven through [`ExecPlan::run_rows`], which executes every
+//! row at batch 1 with per-request requantization isolation. Consequence:
+//! each response is **bit-identical to a solo `Backend::Planned` forward**
+//! of that request on the version that served it, independent of arrival
+//! order, batch composition, thread count, or concurrent swaps
+//! (`tests/serve_conformance.rs`, `tests/serve_concurrency.rs`,
+//! `tests/hot_swap.rs`).
 //!
 //! ## Scratch-pool lifecycle
 //!
-//! Row scratches (`ExecPlan::scratch_for(1)`) live in a bounded per-model
-//! [`ScratchPool`], filled *eagerly* at construction: `Server::new`
-//! creates exactly `workers` row scratches per model, a drain checks out
-//! up to `workers.min(rows)` of them and returns every one afterwards,
-//! and nothing ever creates more. The pool plus the preallocated
+//! Row scratches (`ExecPlan::scratch_for(1)`) live in a bounded
+//! per-version [`ScratchPool`], filled *eagerly* when the version is
+//! installed (`Server::new` and `Server::swap` both create exactly
+//! `workers` row scratches per version): a drain checks out up to
+//! `workers.min(rows)` of them and returns every one afterwards, and
+//! nothing ever creates more. The pool plus the preallocated
 //! gather/scatter buffers are therefore a fixed set of allocations from
-//! construction onward — serving performs zero steady-state growth,
-//! asserted via [`Server::pool_fingerprints`]. (Eager beats lazy here for
+//! install onward — serving performs zero steady-state growth, asserted
+//! via [`Server::pool_fingerprints`]. (Eager beats lazy here for
 //! determinism: a lazily-warmed pool's final size would depend on whether
 //! early traffic ever happened to coalesce a full-width batch.)
 //!
 //! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::inference::ScratchPool;
 use crate::util::pool;
 
-use super::registry::{ModelEntry, ModelKey, Registry};
+use super::registry::{self, ModelEntry, ModelKey, ModelSource, RegisterOpts, Registry};
 use super::stats::ModelStats;
 
 /// Server-wide tuning knobs.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeConfig {
-    /// Row-parallel workers per micro-batch, which is also each model's
+    /// Row-parallel workers per micro-batch, which is also each version's
     /// scratch-pool bound. 0 (the default) resolves to
     /// `util::pool::default_workers()` (`SYMOG_WORKERS` honored).
     pub workers: usize,
@@ -64,15 +83,20 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Response rendezvous for one request. Filled exactly once by whichever
-/// caller drains the batch containing the request.
+/// caller drains the batch containing the request; carries the serving
+/// version the drain was pinned to.
 #[derive(Default)]
 struct Slot {
-    done: Mutex<Option<Result<Vec<f32>, String>>>,
+    done: Mutex<Option<Result<(Vec<f32>, u32), String>>>,
 }
 
 impl Slot {
-    fn fill(&self, r: Result<Vec<f32>, String>) {
+    fn fill(&self, r: Result<(Vec<f32>, u32), String>) {
         *lock(&self.done) = Some(r);
     }
 
@@ -80,7 +104,7 @@ impl Slot {
         lock(&self.done).is_some()
     }
 
-    fn take(&self) -> Option<Result<Vec<f32>, String>> {
+    fn take(&self) -> Option<Result<(Vec<f32>, u32), String>> {
         lock(&self.done).take()
     }
 }
@@ -96,24 +120,47 @@ struct QueueState {
     draining: bool,
 }
 
-/// Preallocated gather/scatter staging for one model (drains are
-/// serialized per model, so one pair suffices and is never contended).
+/// Preallocated gather/scatter staging for one version (drains are
+/// serialized per slot, so one pair suffices and is never contended).
 struct ExecBufs {
     gather: Vec<f32>,
     logits: Vec<f32>,
 }
 
-struct ModelState {
+/// Everything needed to serve one deployment generation of a model:
+/// compiled plan, scratch pool, staging buffers, and its own stats.
+struct VersionState {
+    version: u32,
     entry: ModelEntry,
-    q: Mutex<QueueState>,
-    cv: Condvar,
     pool: ScratchPool,
     bufs: Mutex<ExecBufs>,
     stats: Mutex<ModelStats>,
     workers: usize,
 }
 
-impl ModelState {
+impl VersionState {
+    /// Install-time construction: buffers sized for this version's cap,
+    /// pool seeded eagerly *through* checkout so the scratches count
+    /// toward the pool's lifetime-creation bound — the "nothing ever
+    /// creates more" contract holds by construction.
+    fn install(version: u32, entry: ModelEntry, workers: usize) -> Arc<VersionState> {
+        let vs = VersionState {
+            version,
+            pool: ScratchPool::new(workers),
+            bufs: Mutex::new(ExecBufs {
+                gather: vec![0f32; entry.max_batch * entry.in_elems],
+                logits: vec![0f32; entry.max_batch * entry.out_per_img],
+            }),
+            stats: Mutex::new(ModelStats::default()),
+            workers,
+            entry,
+        };
+        let mut mk = || vs.entry.plan.scratch_for(1);
+        let seed = vs.pool.checkout(workers, &mut mk);
+        vs.pool.put_all(seed);
+        Arc::new(vs)
+    }
+
     /// Execute one drained micro-batch: gather rows, run with per-request
     /// isolation, scatter logits into the response slots, record stats.
     fn run_batch(&self, reqs: &[Request]) {
@@ -139,7 +186,7 @@ impl ModelState {
         ) {
             Ok(()) => {
                 for (i, r) in reqs.iter().enumerate() {
-                    r.slot.fill(Ok(logits[i * oe..(i + 1) * oe].to_vec()));
+                    r.slot.fill(Ok((logits[i * oe..(i + 1) * oe].to_vec(), self.version)));
                 }
                 let counts = self.entry.plan.op_counts(k);
                 lock(&self.stats).record_batch(k as u64, self.entry.max_batch as u64, &counts);
@@ -156,13 +203,31 @@ impl ModelState {
     }
 }
 
+/// One `(name, n_bits)` serving slot: the request queue (shared across
+/// versions — a swap never disturbs queued work) and the Arc-swapped
+/// current version. `versions` doubles as the swap install lock and the
+/// stats-retaining version history.
+struct SlotState {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    cur: RwLock<Arc<VersionState>>,
+    versions: Mutex<Vec<Arc<VersionState>>>,
+    workers: usize,
+}
+
+impl SlotState {
+    fn cur(&self) -> Arc<VersionState> {
+        Arc::clone(&rlock(&self.cur))
+    }
+}
+
 /// Post-drain cleanup, run on both normal exit and unwind: answer any
 /// request the drain left unanswered, release the drain flag, and wake
 /// every waiter. Without this a panic inside a micro-batch would leave
 /// `draining == true` forever, deadlocking all present and future callers
 /// of the model.
 struct DrainGuard<'a> {
-    m: &'a ModelState,
+    m: &'a SlotState,
     reqs: &'a [Request],
 }
 
@@ -179,9 +244,9 @@ impl Drop for DrainGuard<'_> {
 }
 
 /// Multi-model batched inference server (see the module docs for the
-/// queue, execution, and pooling contracts).
+/// queue, execution, pooling, and hot-swap contracts).
 pub struct Server {
-    models: BTreeMap<ModelKey, ModelState>,
+    models: BTreeMap<(String, u32), SlotState>,
 }
 
 impl Server {
@@ -196,61 +261,117 @@ impl Server {
             .into_entries()
             .into_iter()
             .map(|(key, entry)| {
-                let state = ModelState {
+                let vs = VersionState::install(key.version, entry, workers);
+                let state = SlotState {
                     q: Mutex::new(QueueState { pending: VecDeque::new(), draining: false }),
                     cv: Condvar::new(),
-                    pool: ScratchPool::new(workers),
-                    bufs: Mutex::new(ExecBufs {
-                        gather: vec![0f32; entry.max_batch * entry.in_elems],
-                        logits: vec![0f32; entry.max_batch * entry.out_per_img],
-                    }),
-                    stats: Mutex::new(ModelStats::default()),
+                    versions: Mutex::new(vec![Arc::clone(&vs)]),
+                    cur: RwLock::new(vs),
                     workers,
-                    entry,
                 };
-                // eager fill: the pool is a fixed allocation set from day 0.
-                // Seeded *through* checkout so these scratches count toward
-                // the pool's lifetime-creation bound — the "nothing ever
-                // creates more" contract holds by construction, not just
-                // because drains happen to be serialized
-                let mut mk = || state.entry.plan.scratch_for(1);
-                let seed = state.pool.checkout(workers, &mut mk);
-                state.pool.put_all(seed);
-                (key, state)
+                (key.slot(), state)
             })
             .collect();
         Server { models }
     }
 
-    fn model(&self, key: &ModelKey) -> Result<&ModelState> {
+    fn slot(&self, key: &ModelKey) -> Result<&SlotState> {
         self.models
-            .get(key)
-            .with_context(|| format!("model {key} is not registered"))
+            .get(&key.slot())
+            .with_context(|| format!("model {}@w{} is not registered", key.name, key.n_bits))
     }
 
-    /// Registered keys, in deterministic (sorted) order.
+    /// Install a new version into `key`'s slot atomically: queued and
+    /// in-flight requests keep draining (on the old version if their drain
+    /// already pinned it), new drains serve the new version. Validated:
+    /// the slot must exist, the bit width and I/O geometry must match, and
+    /// the version must be strictly newer than the one serving. Unpinned
+    /// in-code sources get `current + 1`; artifacts bring their own
+    /// version. Returns the installed key.
+    pub fn swap(
+        &self,
+        key: &ModelKey,
+        source: ModelSource<'_>,
+        opts: &RegisterOpts,
+    ) -> Result<ModelKey> {
+        let slot = self.slot(key)?;
+        // install lock: swaps are serialized per slot; serving never takes it
+        let mut versions = lock(&slot.versions);
+        let cur = slot.cur();
+        let (new_key, entry) = registry::build_entry(&key.name, &source, opts, cur.version + 1)?;
+        ensure!(
+            new_key.n_bits == key.n_bits,
+            "{}: swap cannot change the bit width (slot is w{}, source is w{})",
+            key.name,
+            key.n_bits,
+            new_key.n_bits
+        );
+        ensure!(
+            new_key.version > cur.version,
+            "{new_key}: swap version must exceed the serving version v{}",
+            cur.version
+        );
+        ensure!(
+            entry.in_elems == cur.entry.in_elems && entry.out_per_img == cur.entry.out_per_img,
+            "{new_key}: swap cannot change model geometry ({}->{} in, {}->{} out)",
+            cur.entry.in_elems,
+            entry.in_elems,
+            cur.entry.out_per_img,
+            entry.out_per_img
+        );
+        let vs = VersionState::install(new_key.version, entry, slot.workers);
+        *slot.cur.write().unwrap_or_else(|e| e.into_inner()) = Arc::clone(&vs);
+        versions.push(vs);
+        Ok(new_key)
+    }
+
+    /// Registered keys at their *currently serving* versions, in
+    /// deterministic (sorted) order.
     pub fn keys(&self) -> Vec<ModelKey> {
-        self.models.keys().cloned().collect()
+        self.models
+            .iter()
+            .map(|((name, bits), s)| ModelKey::versioned(name.clone(), *bits, s.cur().version))
+            .collect()
     }
 
-    /// The micro-batch cap `key` was registered with.
+    /// The version currently serving `key`'s slot.
+    pub fn current_version(&self, key: &ModelKey) -> Result<u32> {
+        Ok(self.slot(key)?.cur().version)
+    }
+
+    /// The micro-batch cap of the currently serving version.
     pub fn max_batch(&self, key: &ModelKey) -> Result<usize> {
-        Ok(self.model(key)?.entry.max_batch)
+        Ok(self.slot(key)?.cur().entry.max_batch)
     }
 
-    /// Snapshot of the model's running stats.
+    /// Totals across every version this slot has served (the pre-hot-swap
+    /// semantics: one model, all its traffic).
     pub fn stats(&self, key: &ModelKey) -> Result<ModelStats> {
-        Ok(lock(&self.model(key)?.stats).clone())
+        let mut total = ModelStats::default();
+        for vs in lock(&self.slot(key)?.versions).iter() {
+            total.merge(&lock(&vs.stats));
+        }
+        Ok(total)
     }
 
-    /// Canonical (sorted) fingerprint set of the model's serving
-    /// allocations: every pooled row scratch plus the gather/scatter
-    /// staging buffers. With no request in flight, two equal snapshots
-    /// prove zero steady-state allocation in the serving engine.
+    /// Per-version stats in install order. Counters partition exactly:
+    /// every request is billed to precisely the version that executed it.
+    pub fn stats_by_version(&self, key: &ModelKey) -> Result<Vec<(u32, ModelStats)>> {
+        Ok(lock(&self.slot(key)?.versions)
+            .iter()
+            .map(|vs| (vs.version, lock(&vs.stats).clone()))
+            .collect())
+    }
+
+    /// Canonical (sorted) fingerprint set of the currently serving
+    /// version's allocations: every pooled row scratch plus the
+    /// gather/scatter staging buffers. With no request in flight, two
+    /// equal snapshots prove zero steady-state allocation in the serving
+    /// engine.
     pub fn pool_fingerprints(&self, key: &ModelKey) -> Result<Vec<Vec<(usize, usize)>>> {
-        let m = self.model(key)?;
-        let mut fps = m.pool.fingerprints();
-        let b = lock(&m.bufs);
+        let vs = self.slot(key)?.cur();
+        let mut fps = vs.pool.fingerprints();
+        let b = lock(&vs.bufs);
         fps.push(vec![
             (b.gather.as_ptr() as usize, b.gather.capacity()),
             (b.logits.as_ptr() as usize, b.logits.capacity()),
@@ -259,19 +380,27 @@ impl Server {
         Ok(fps)
     }
 
+    /// Classify one image, blocking until its logits are ready. See
+    /// [`Server::infer_versioned`]; this drops the version tag.
+    pub fn infer(&self, key: &ModelKey, image: &[f32]) -> Result<Vec<f32>> {
+        self.infer_versioned(key, image).map(|(logits, _)| logits)
+    }
+
     /// Classify one image, blocking until its logits are ready. The call
     /// enqueues the request and then *participates*: whichever caller
     /// finds the queue ready first drains and executes the micro-batch
     /// containing it (leader/follower — no dedicated executor thread, no
-    /// timer). Returns the request's logits, bit-identical to a solo
-    /// planned forward of `image`.
-    pub fn infer(&self, key: &ModelKey, image: &[f32]) -> Result<Vec<f32>> {
-        let m = self.model(key)?;
+    /// timer). Returns the logits plus the version that served them —
+    /// bit-identical to a solo planned forward on that version. The key's
+    /// own `version` field is ignored for routing: a slot always serves
+    /// its current version.
+    pub fn infer_versioned(&self, key: &ModelKey, image: &[f32]) -> Result<(Vec<f32>, u32)> {
+        let m = self.slot(key)?;
+        let in_elems = m.cur().entry.in_elems;
         ensure!(
-            image.len() == m.entry.in_elems,
-            "{key}: image has {} elements, model expects {}",
-            image.len(),
-            m.entry.in_elems
+            image.len() == in_elems,
+            "{key}: image has {} elements, model expects {in_elems}",
+            image.len()
         );
         let slot = Arc::new(Slot::default());
         {
@@ -282,8 +411,9 @@ impl Server {
             // decide under the queue lock: return, drain, or wait. The
             // done-check happens with the lock held so a completion that
             // races this loop is never missed (the completing drainer must
-            // take the queue lock before it notifies).
-            let drained: Option<Vec<Request>> = {
+            // take the queue lock before it notifies). Becoming drainer
+            // also pins the serving version for the whole micro-batch.
+            let drained: Option<(Vec<Request>, Arc<VersionState>)> = {
                 let mut q = lock(&m.q);
                 loop {
                     if slot.is_done() {
@@ -291,8 +421,9 @@ impl Server {
                     }
                     if !q.draining && !q.pending.is_empty() {
                         q.draining = true;
-                        let k = q.pending.len().min(m.entry.max_batch);
-                        break Some(q.pending.drain(..k).collect());
+                        let vs = m.cur();
+                        let k = q.pending.len().min(vs.entry.max_batch);
+                        break Some((q.pending.drain(..k).collect(), vs));
                     }
                     q = m.cv.wait(q).unwrap_or_else(|e| e.into_inner());
                 }
@@ -302,13 +433,13 @@ impl Server {
                     let res = slot.take().expect("slot checked done under the lock");
                     return res.map_err(|msg| anyhow!("{key}: {msg}"));
                 }
-                Some(reqs) => {
+                Some((reqs, vs)) => {
                     // the guard also covers unwinding: if the drain panics
                     // (kernel bug mid-batch), fail this batch — unfilled
                     // slots get an error, the flag resets, followers wake —
                     // instead of wedging the model behind draining == true
                     let guard = DrainGuard { m, reqs: &reqs };
-                    m.run_batch(&reqs);
+                    vs.run_batch(&reqs);
                     drop(guard);
                     // loop back: our own request was either in this batch
                     // or is now closer to the queue front
@@ -332,7 +463,9 @@ mod tests {
         let solo = IntModel::build(&man, &ck).unwrap();
         let elems: usize = man.input_shape.iter().product();
         let mut reg = Registry::new();
-        let key = reg.register("lenet5", &model, 4).unwrap();
+        let key = reg
+            .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(4))
+            .unwrap();
         (Server::new(reg, ServeConfig { workers: 2 }), key, solo, elems)
     }
 
@@ -342,9 +475,10 @@ mod tests {
         let mut rng = Rng::new(7);
         for i in 0..5u64 {
             let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();
-            let got = server.infer(&key, &img).unwrap();
+            let (got, v) = server.infer_versioned(&key, &img).unwrap();
             let (want, _) = solo.forward(&img, 1).unwrap();
             assert_eq!(got, want, "request {i} diverged from solo forward");
+            assert_eq!(v, 1, "fresh registration serves version 1");
         }
         let stats = server.stats(&key).unwrap();
         assert_eq!(stats.requests, 5);
@@ -367,5 +501,31 @@ mod tests {
         assert!(server.infer(&missing, &img).is_err());
         assert!(server.stats(&missing).is_err());
         assert!(server.infer(&key, &img[..elems - 1]).is_err());
+        // the key's version field does not affect routing
+        let stale = ModelKey::versioned(key.name.clone(), key.n_bits, 99);
+        assert!(server.infer(&stale, &img).is_ok());
+    }
+
+    #[test]
+    fn swap_validates_version_and_geometry() {
+        let (server, key, _, _) = lenet_server(2);
+        let mut rng = Rng::new(0x5F);
+        let (man, ck) = models::lenet5ish(&mut rng, 2);
+        let next = IntModel::build(&man, &ck).unwrap();
+        // unpinned in-code swap: current + 1
+        let opts = RegisterOpts::new().max_batch(4);
+        let k2 = server.swap(&key, ModelSource::InCode(&next), &opts).unwrap();
+        assert_eq!(k2.version, 2);
+        assert_eq!(server.current_version(&key).unwrap(), 2);
+        // stale or equal versions are rejected
+        let pin1 = RegisterOpts::new().max_batch(4).version(2);
+        assert!(server.swap(&key, ModelSource::InCode(&next), &pin1).is_err());
+        // geometry changes are rejected
+        let (man_b, ck_b) = models::densenetish(&mut rng, 2);
+        let other = IntModel::build(&man_b, &ck_b).unwrap();
+        assert!(server.swap(&key, ModelSource::InCode(&other), &RegisterOpts::new()).is_err());
+        // unknown slots are rejected
+        let missing = ModelKey::new("nope", 2);
+        assert!(server.swap(&missing, ModelSource::InCode(&next), &RegisterOpts::new()).is_err());
     }
 }

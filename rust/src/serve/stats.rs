@@ -32,6 +32,17 @@ impl ModelStats {
         self.requests as f64 / self.batches.max(1) as f64
     }
 
+    /// Fold another stats snapshot into this one — used to total a
+    /// slot's traffic across hot-swapped versions. Sums are exact;
+    /// `max_occupancy` is the max over both.
+    pub fn merge(&mut self, other: &ModelStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.full_batches += other.full_batches;
+        self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+        self.op_counts.merge(&other.op_counts);
+    }
+
     pub(crate) fn record_batch(&mut self, rows: u64, cap: u64, counts: &OpCounts) {
         self.requests += rows;
         self.batches += 1;
@@ -77,5 +88,25 @@ mod tests {
         assert_eq!(s.op_counts.acc_adds, 30);
         assert!((s.mean_occupancy() - 8.0 / 3.0).abs() < 1e-12);
         assert!(s.render().contains("8 requests in 3 batches"));
+    }
+
+    #[test]
+    fn merge_totals_are_exact() {
+        let c = OpCounts { acc_adds: 5, int_mults: 1, shifts: 2, compares: 0 };
+        let mut a = ModelStats::default();
+        a.record_batch(2, 4, &c);
+        let mut b = ModelStats::default();
+        b.record_batch(4, 4, &c);
+        b.record_batch(1, 4, &c);
+        a.merge(&b);
+        assert_eq!(a.requests, 7);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.full_batches, 1);
+        assert_eq!(a.max_occupancy, 4);
+        assert_eq!(a.op_counts.acc_adds, 15);
+        // merging an empty snapshot is the identity
+        let before = a.clone();
+        a.merge(&ModelStats::default());
+        assert_eq!(a, before);
     }
 }

@@ -275,6 +275,83 @@ impl NativeModel {
         }
     }
 
+    /// Derive the inference manifest for this graph: the same layer-dict
+    /// convention aot.py emits, so `IntModel::build` (and
+    /// `artifact::publish`) consume native models with no special casing.
+    /// A `flatten` layer is inserted before the first dense whenever the
+    /// running activation is still spatial.
+    pub fn to_manifest(&self, n_bits: u32) -> crate::runtime::Manifest {
+        use crate::runtime::{LayerDesc, Manifest, ParamMeta};
+        fn obj(fields: Vec<(&str, Json)>) -> Json {
+            Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        }
+        let idx = |i: usize| Json::Num(i as f64);
+        let mut layers = Vec::new();
+        let mut cur = self.input_shape;
+        for node in &self.nodes {
+            match *node {
+                Node::Conv { w, b, shape } => {
+                    layers.push(obj(vec![
+                        ("type", Json::Str("conv".into())),
+                        ("w", idx(w)),
+                        ("b", idx(b)),
+                        ("stride", idx(shape.stride)),
+                        ("padding", Json::Str("SAME".into())),
+                    ]));
+                    cur = [shape.out_h(), shape.out_w(), shape.cout];
+                }
+                Node::Dense { w, b, fout, .. } => {
+                    if cur[0] * cur[1] != 1 {
+                        layers.push(obj(vec![("type", Json::Str("flatten".into()))]));
+                    }
+                    layers.push(obj(vec![
+                        ("type", Json::Str("dense".into())),
+                        ("w", idx(w)),
+                        ("b", idx(b)),
+                    ]));
+                    cur = [1, 1, fout];
+                }
+                Node::Relu => layers.push(obj(vec![("type", Json::Str("relu".into()))])),
+            }
+        }
+        let params = self
+            .params
+            .iter()
+            .map(|p| ParamMeta {
+                name: p.name.clone(),
+                shape: p.shape.clone(),
+                kind: match p.kind {
+                    Kind::Bias => "bias".to_string(),
+                    _ => "weight".to_string(),
+                },
+                qidx: p.qidx,
+                fan_in: match p.kind {
+                    // conv [k,k,cin,cout] -> k*k*cin; dense [fin,fout] -> fin
+                    Kind::Weight => p.shape[..p.shape.len() - 1].iter().product::<usize>().max(1),
+                    _ => 0,
+                },
+            })
+            .collect();
+        Manifest {
+            tag: self.tag.clone(),
+            model: self.tag.clone(),
+            method: "symog".to_string(),
+            dataset: "native".to_string(),
+            width_mult: 1.0,
+            batch: 8,
+            n_bits,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            clip: true,
+            input_shape: self.input_shape,
+            num_classes: self.classes,
+            n_quant: self.n_quant,
+            params,
+            state: Vec::new(),
+            layers: layers.into_iter().map(LayerDesc).collect(),
+        }
+    }
+
     /// Snapshot params + momenta (+ `__deltas__`) into a checkpoint.
     pub fn to_checkpoint(&self, deltas: &[f32], epoch: u32, method: &str) -> Checkpoint {
         let mut ck = Checkpoint::default();
@@ -403,6 +480,31 @@ mod tests {
         assert_eq!(m2.params[0].data, m.params[0].data);
         assert_eq!(m2.params[0].momentum[3], 0.25);
         assert_eq!(ck.find("__deltas__").unwrap().data, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn to_manifest_builds_an_int_model() {
+        // the manifest + checkpoint pair must be directly consumable by
+        // IntModel::build, flatten inserted where the activation is spatial
+        let m = NativeModel::convnet([8, 8, 1], &[4], 10, 2);
+        let man = m.to_manifest(2);
+        assert_eq!(man.n_quant, 2);
+        assert_eq!(man.input_shape, [8, 8, 1]);
+        assert_eq!(man.num_classes, 10);
+        let types: Vec<&str> = man.layers.iter().map(|l| l.ty()).collect();
+        assert_eq!(types, vec!["conv", "relu", "flatten", "dense"]);
+        assert_eq!(man.params[0].fan_in, 9);
+        let deltas = vec![0.25f32; m.n_quant];
+        let ck = m.to_checkpoint(&deltas, 0, "symog");
+        let int = crate::inference::IntModel::build(&man, &ck).unwrap();
+        let x = vec![0.5f32; 64];
+        let (logits, _) = int.forward(&x, 1).unwrap();
+        assert_eq!(logits.len(), 10);
+        // an all-dense model needs no flatten after the first dense
+        let mlp = NativeModel::mlp([4, 4, 1], &[6], 3, 7);
+        let types: Vec<String> =
+            mlp.to_manifest(2).layers.iter().map(|l| l.ty().to_string()).collect();
+        assert_eq!(types, vec!["flatten", "dense", "relu", "dense"]);
     }
 
     #[test]

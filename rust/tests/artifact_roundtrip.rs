@@ -1,0 +1,234 @@
+//! `.fxpa` round-trip suite: publish → load → plan must be *bit-identical*
+//! to the source model, and every corruption mode must be rejected with a
+//! distinct, path-qualified error.
+//!
+//! Why bit-identity is achievable (and therefore demanded): artifacts
+//! store i8 mantissas plus per-tensor power-of-two exponents, the loader
+//! reconstructs `m · 2^-frac` exactly in f32, and `IntModel::build`'s
+//! `QWeight::encode` re-derives the same mantissas from those codebook
+//! values — so no quantization state is re-solved and no rounding can
+//! drift. OpCounts are part of the contract too: a published model must
+//! cost exactly what the in-code model costs.
+
+use std::path::PathBuf;
+
+use symog::artifact::{self, PublishOpts};
+use symog::coordinator::Checkpoint;
+use symog::inference::IntModel;
+use symog::runtime::Manifest;
+use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::train::NativeModel;
+use symog::util::rng::Rng;
+
+fn zoo(rng: &mut Rng, n_bits: u32) -> Vec<(&'static str, (Manifest, Checkpoint))> {
+    vec![
+        ("lenet5ish", models::lenet5ish(rng, n_bits)),
+        ("densenetish", models::densenetish(rng, n_bits)),
+        ("vgg7ish", models::vgg7ish(rng, n_bits, 4)),
+        ("oddball", models::oddball(rng, n_bits)),
+    ]
+}
+
+/// Per-test scratch path under the system temp dir (unique per process,
+/// removed by each test on success).
+fn tmp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("symog-{}-{name}.fxpa", std::process::id()))
+}
+
+#[test]
+fn publish_load_plan_is_bit_identical_across_the_zoo() {
+    for n_bits in [2u32, 4, 8] {
+        let mut rng = Rng::new(0xA47F ^ ((n_bits as u64) << 20));
+        for (name, (man, ck)) in zoo(&mut rng, n_bits) {
+            let source = IntModel::build(&man, &ck).unwrap();
+            let path = tmp_path(&format!("rt-{name}-{n_bits}"));
+            let info = artifact::publish(&man, &ck, &PublishOpts::new().version(3), &path)
+                .unwrap_or_else(|e| panic!("{name} w{n_bits}: publish failed: {e:#}"));
+            assert_eq!(info.version, 3);
+            assert!(info.quant_tensors > 0);
+            assert_eq!(artifact::peek_version(&path).unwrap(), 3);
+
+            let loaded = artifact::load(&path)
+                .unwrap_or_else(|e| panic!("{name} w{n_bits}: load failed: {e:#}"));
+            assert_eq!(loaded.version, 3);
+            assert_eq!(loaded.manifest.n_bits, n_bits);
+            assert_eq!(loaded.model.n_bits, n_bits);
+
+            // logits bit-identical, request by request
+            let e: usize = man.input_shape.iter().product();
+            for i in 0..4u32 {
+                let img: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+                let (want, _) = source.forward(&img, 1).unwrap();
+                let (got, _) = loaded.model.forward(&img, 1).unwrap();
+                assert_eq!(got, want, "{name} w{n_bits} request {i}: loaded model diverged");
+            }
+            // and the analytic cost is identical: same plan, same ops
+            let want_counts = source.cost_report(1).unwrap().counts;
+            let got_counts = loaded.model.cost_report(1).unwrap().counts;
+            assert_eq!(got_counts, want_counts, "{name} w{n_bits}: OpCounts diverged");
+            // plan() compiles from the loaded quantization state directly
+            let plan = loaded.plan(2).unwrap();
+            assert_eq!(plan.in_elems(), e);
+
+            // the atomic publish leaves no tmp sibling behind
+            assert!(!path.with_extension("fxpa.tmp").exists(), "tmp file leaked");
+            std::fs::remove_file(&path).unwrap();
+        }
+    }
+}
+
+#[test]
+fn native_model_publishes_and_round_trips() {
+    // train::model export path: manifest derived from the graph, weights
+    // snapshotted; the oracle is the IntModel built from the same pair
+    let m = NativeModel::convnet([8, 8, 1], &[4, 8], 10, 42);
+    let deltas = vec![0.25f32; m.n_quant];
+    let path = tmp_path("native");
+    let info = artifact::publish_native(&m, &deltas, 4, &PublishOpts::new(), &path).unwrap();
+    assert_eq!(info.version, 1);
+
+    let man = m.to_manifest(4);
+    let ck = m.to_checkpoint(&deltas, 0, "symog");
+    let oracle = IntModel::build(&man, &ck).unwrap();
+    let loaded = artifact::load(&path).unwrap();
+    let e: usize = man.input_shape.iter().product();
+    let mut rng = Rng::new(7);
+    for _ in 0..3 {
+        let img: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+        let (want, _) = oracle.forward(&img, 1).unwrap();
+        let (got, _) = loaded.model.forward(&img, 1).unwrap();
+        assert_eq!(got, want, "native publish → load diverged from in-code build");
+    }
+    // deltas length must match the graph
+    assert!(artifact::publish_native(&m, &deltas[..1], 4, &PublishOpts::new(), &path).is_err());
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn registry_and_server_accept_artifact_sources() {
+    let mut rng = Rng::new(0x0A11);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let solo = IntModel::build(&man, &ck).unwrap();
+    let path = tmp_path("reg");
+    artifact::publish(&man, &ck, &PublishOpts::new().version(5), &path).unwrap();
+
+    let mut reg = Registry::new();
+    let opts = RegisterOpts::new().max_batch(4);
+    let key = reg.add("lenet5", ModelSource::Artifact(&path), &opts).unwrap();
+    // the artifact's own model version is authoritative
+    assert_eq!(key.version, 5);
+    assert_eq!(format!("{key}"), "lenet5@w2#v5");
+    // a disagreeing pin is a registration error, an agreeing one is fine
+    let mut reg2 = Registry::new();
+    let bad_pin = RegisterOpts::new().max_batch(4).version(6);
+    assert!(reg2.add("lenet5", ModelSource::Artifact(&path), &bad_pin).is_err());
+    let good_pin = RegisterOpts::new().max_batch(4).version(5);
+    reg2.add("lenet5", ModelSource::Artifact(&path), &good_pin).unwrap();
+
+    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let e: usize = man.input_shape.iter().product();
+    for _ in 0..3 {
+        let img: Vec<f32> = (0..e).map(|_| rng.normal()).collect();
+        let (got, v) = server.infer_versioned(&key, &img).unwrap();
+        let (want, _) = solo.forward(&img, 1).unwrap();
+        assert_eq!(got, want, "artifact-served logits diverged from the in-code model");
+        assert_eq!(v, 5);
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn corruption_and_version_skew_are_distinct_errors() {
+    let mut rng = Rng::new(0xDEAD);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let path = tmp_path("corrupt");
+    artifact::publish(&man, &ck, &PublishOpts::new(), &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let emsg = |bytes: &[u8]| {
+        std::fs::write(&path, bytes).unwrap();
+        format!("{:#}", artifact::load(&path).unwrap_err())
+    };
+
+    // header-truncated file
+    let e = emsg(&good[..10]);
+    assert!(e.contains("smaller than the 28-byte header"), "{e}");
+
+    // payload-truncated file
+    let e = emsg(&good[..good.len() - 5]);
+    assert!(e.contains("truncated payload"), "{e}");
+
+    // trailing garbage
+    let mut long = good.clone();
+    long.extend_from_slice(b"junk");
+    let e = emsg(&long);
+    assert!(e.contains("trailing garbage"), "{e}");
+
+    // flipped payload byte → checksum, not a decode error deeper in
+    let mut flipped = good.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0xFF;
+    let e = emsg(&flipped);
+    assert!(e.contains("checksum mismatch"), "{e}");
+
+    // newer format version → explicit forward-incompatibility
+    let mut newer = good.clone();
+    newer[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let e = emsg(&newer);
+    assert!(e.contains("not forward-compatible"), "{e}");
+
+    // a .fxpm magic gets a redirecting hint, garbage magic does not
+    let mut fxpm = good.clone();
+    fxpm[..8].copy_from_slice(b"SYMGFXP1");
+    let e = emsg(&fxpm);
+    assert!(e.contains(".fxpm packed model"), "{e}");
+    let mut garbage = good.clone();
+    garbage[..8].copy_from_slice(b"NOTMAGIC");
+    let e = emsg(&garbage);
+    assert!(e.contains("bad magic"), "{e}");
+
+    // all errors name the offending file
+    assert!(e.contains(path.file_name().unwrap().to_str().unwrap()), "{e}");
+
+    // version 0 is unpublishable (v0 is the "never installed" sentinel)
+    std::fs::write(&path, &good).unwrap();
+    assert!(artifact::publish(&man, &ck, &PublishOpts::new().version(0), &path).is_err());
+    // and the failed publish did not clobber the good artifact
+    assert_eq!(artifact::load(&path).unwrap().version, 1);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn read_packed_errors_are_path_qualified_and_distinct() {
+    // the satellite bugfix on the legacy .fxpm reader: magic / truncation
+    // mismatches must name the file and the failing section
+    use symog::quant::packed::{read_packed, write_packed};
+    let mut rng = Rng::new(0xFACE);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let path = std::env::temp_dir().join(format!("symog-{}-legacy.fxpm", std::process::id()));
+    write_packed(&man, &man.to_json(), &ck, &path).unwrap();
+    read_packed(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    let emsg = |bytes: &[u8]| {
+        std::fs::write(&path, bytes).unwrap();
+        format!("{:#}", read_packed(&path).unwrap_err())
+    };
+
+    let e = emsg(&good[..4]);
+    assert!(e.contains("truncated before the 8-byte magic") && e.contains("legacy.fxpm"), "{e}");
+    let e = emsg(&good[..good.len() - 3]);
+    assert!(e.contains("truncated reading") && e.contains("legacy.fxpm"), "{e}");
+    let mut fxpa = good.clone();
+    fxpa[..8].copy_from_slice(b"SYMOGFXA");
+    let e = emsg(&fxpa);
+    assert!(e.contains(".fxpa serving artifact"), "{e}");
+    let mut vers = good.clone();
+    vers[7] = b'9';
+    let e = emsg(&vers);
+    assert!(e.contains("unsupported .fxpm format version"), "{e}");
+    let mut garbage = good.clone();
+    garbage[..8].copy_from_slice(b"NOTMAGIC");
+    let e = emsg(&garbage);
+    assert!(e.contains("not a .fxpm file"), "{e}");
+    std::fs::remove_file(&path).unwrap();
+}

@@ -15,7 +15,7 @@
 //! precomputed single-threaded and every thread checks its own answers.
 
 use symog::inference::{IntModel, OpCounts};
-use symog::serve::{ModelKey, Registry, ServeConfig, Server};
+use symog::serve::{ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 use symog::testing::models;
 use symog::util::rng::Rng;
 
@@ -48,8 +48,9 @@ fn hammered_server_is_bit_exact_allocation_stable_and_counts_exactly() {
     let elems_b: usize = man_b.input_shape.iter().product();
 
     let mut reg = Registry::new();
-    let key_a = reg.register("lenet5", &model_a, 4).unwrap();
-    let key_b = reg.register("densenet", &model_b, 4).unwrap();
+    let opts = RegisterOpts::new().max_batch(4);
+    let key_a = reg.add("lenet5", ModelSource::InCode(&model_a), &opts).unwrap();
+    let key_b = reg.add("densenet", ModelSource::InCode(&model_b), &opts).unwrap();
     let workers = 3usize;
     let server = Server::new(reg, ServeConfig { workers });
 
@@ -156,7 +157,9 @@ fn single_model_saturation_reaches_full_batches() {
     let elems: usize = man.input_shape.iter().product();
     let mut reg = Registry::new();
     let cap = 3usize;
-    let key = reg.register("lenet5", &model, cap).unwrap();
+    let key = reg
+        .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(cap))
+        .unwrap();
     let server = Server::new(reg, ServeConfig { workers: 2 });
 
     let corpus: Vec<Vec<Case>> = (0..M)

@@ -14,7 +14,7 @@
 use symog::coordinator::Checkpoint;
 use symog::inference::IntModel;
 use symog::runtime::Manifest;
-use symog::serve::{ModelKey, Registry, ServeConfig, Server};
+use symog::serve::{ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 use symog::testing::models;
 use symog::util::rng::Rng;
 
@@ -100,7 +100,8 @@ fn server_serves_whole_zoo_bit_identical_to_solo() {
         for (name, (man, ck)) in zoo(&mut build_rng, n_bits) {
             let model = IntModel::build(&man, &ck).unwrap();
             let solo = IntModel::build(&man, &ck).unwrap();
-            let key = reg.register(name, &model, 4).unwrap();
+            let opts = RegisterOpts::new().max_batch(4);
+            let key = reg.add(name, ModelSource::InCode(&model), &opts).unwrap();
             let elems: usize = man.input_shape.iter().product();
             oracles.push((key, solo, elems));
         }
