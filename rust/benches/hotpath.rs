@@ -16,9 +16,14 @@
 //!   2b. `bitslice` — the bit-sliced AND/popcount kernel on 2-/3-bit
 //!      conv/dense shapes vs the naive loops, with engagement asserted
 //!      (`kernel_name` must resolve to "bitslice") and the active
-//!      `SYMOG_SIMD` dispatch level printed. Sections 1+2+2b emit
+//!      `SYMOG_SIMD` dispatch level printed.
+//!   2c. `pool` — fan-out dispatch itself: spawn-per-call scoped threads
+//!      (the pre-persistent-pool implementation, kept verbatim here as
+//!      the baseline) vs `util::pool`'s persistent parked workers, on
+//!      dispatch-dominated chunk sizes, with zero steady-state thread
+//!      spawns asserted via the pool counters. Sections 1+2+2b+2c emit
 //!      BENCH_hotpath.json at the repo root so the perf trajectory is
-//!      tracked PR over PR (CI gates on "gemm,serve,bitslice").
+//!      tracked PR over PR (CI gates on "gemm,serve,bitslice,pool").
 //!   3. `runtime` — train-step latency breakdown (batch assembly /
 //!      literal upload / execute) for the lenet5 artifact (the L3 target
 //!      is <10% of step time outside `execute`) plus eval and
@@ -44,8 +49,9 @@ use symog::util::rng::Rng;
 
 fn main() -> Result<()> {
     println!("== SYMOG hot-path benchmarks ==\n");
-    // SYMOG_HOTPATH=gemm|serve|substrates|runtime|engine picks sections;
-    // comma-separated lists compose (CI gates on "gemm,serve")
+    // SYMOG_HOTPATH=gemm|serve|bitslice|pool|substrates|runtime|engine
+    // picks sections; comma-separated lists compose (CI gates on
+    // "gemm,serve,bitslice,pool")
     let section = std::env::var("SYMOG_HOTPATH").unwrap_or_default();
     let want = |name: &str| section.is_empty() || section.split(',').any(|s| s.trim() == name);
     let mut report: Vec<Stats> = Vec::new();
@@ -61,7 +67,10 @@ fn main() -> Result<()> {
     if want("bitslice") {
         bitslice_benches(&mut report, &mut cases_json)?;
     }
-    if want("gemm") || want("serve") || want("bitslice") {
+    if want("pool") {
+        pool_dispatch_benches(&mut report, &mut cases_json);
+    }
+    if want("gemm") || want("serve") || want("bitslice") || want("pool") {
         // one report for every gated ratio family (bench_check reads this)
         top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
         let workers = symog::util::pool::default_workers();
@@ -278,6 +287,115 @@ fn bitslice_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Resu
     report.push(naive);
     report.push(fast);
     Ok(())
+}
+
+/// Spawn-per-call `par_chunks_mut` — the pre-persistent-pool scoped
+/// implementation, kept verbatim as the dispatch baseline. Same chunk
+/// layout formula as `util::pool::par_chunks_mut`, so the two sides of
+/// the ratio do identical work and differ only in dispatch.
+fn spawn_chunks_mut<T: Send, F>(data: &mut [T], workers: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let workers = workers.clamp(1, n);
+    let chunk = n.div_ceil(workers);
+    if chunk >= n {
+        f(0, data);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (ci, part) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * chunk, part));
+        }
+    });
+}
+
+/// Dispatch overhead head-to-head: spawn/join fresh OS threads per call
+/// (the pre-PR-8 implementation above) vs the persistent parked pool, on
+/// deliberately tiny chunk workloads so the ratio measures dispatch, not
+/// compute. Bit-identity of the two fan-outs is asserted before timing,
+/// and the pool counters must show zero thread spawns across the timed
+/// reps (the steady-state contract); the ratio lands in
+/// BENCH_hotpath.json as kind `pool_dispatch` for the bench_check gate.
+fn pool_dispatch_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) {
+    use symog::util::pool;
+
+    println!("--- fan-out dispatch (spawn-per-call vs persistent pool) ---");
+    // per-element transform, derived from the global index so any chunk
+    // layout bug would show up as a bit difference
+    let step = |off: usize, chunk: &mut [u64]| {
+        for (j, x) in chunk.iter_mut().enumerate() {
+            *x = x.wrapping_add(((off + j) as u64).wrapping_mul(0x9E37_79B9));
+        }
+    };
+    // (name, fanout, elems): the fanout is fixed, not host-derived — the
+    // scoped baseline spawned exactly `fanout` threads whatever the core
+    // count, so the ratio stays comparable across machines; REPS
+    // dispatches per timed rep amortize the timer read, not the dispatch
+    // under test
+    let cases: &[(&str, usize, usize)] =
+        &[("pool_dispatch fanout4 1k", 4, 1024), ("pool_dispatch fanout8 16k", 8, 16 * 1024)];
+    const REPS: usize = 64;
+    for &(name, fanout, elems) in cases {
+        let init: Vec<u64> = (0..elems as u64).collect();
+
+        // correctness gate before timing anything
+        let mut a = init.clone();
+        let mut b = init.clone();
+        spawn_chunks_mut(&mut a, fanout, step);
+        pool::par_chunks_mut(&mut b, fanout, step);
+        assert_eq!(a, b, "{name}: pool fan-out diverged from scoped fan-out");
+
+        let mut data = init.clone();
+        let spawn = bench(&format!("spawn {name}"), 1, 5, || {
+            for _ in 0..REPS {
+                spawn_chunks_mut(&mut data, fanout, step);
+            }
+            std::hint::black_box(&data);
+        });
+        let c1 = pool::counters();
+        let mut data = init.clone();
+        let pooled = bench(&format!("pool  {name}"), 2, 10, || {
+            for _ in 0..REPS {
+                pool::par_chunks_mut(&mut data, fanout, step);
+            }
+            std::hint::black_box(&data);
+        });
+        let c2 = pool::counters();
+        assert_eq!(
+            c2.threads_spawned, c1.threads_spawned,
+            "{name}: persistent dispatch spawned OS threads mid-bench"
+        );
+        let speedup = spawn.median_s / pooled.median_s;
+        println!(
+            "{}\n{}\n  -> {:.1}us vs {:.1}us per dispatch: {:.2}x (target >= 2x), \
+             {} jobs through the persistent queue",
+            spawn.row(),
+            pooled.row(),
+            spawn.median_s / REPS as f64 * 1e6,
+            pooled.median_s / REPS as f64 * 1e6,
+            speedup,
+            c2.jobs_dispatched - c1.jobs_dispatched,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o.insert("kind".to_string(), Json::Str("pool_dispatch".to_string()));
+        o.insert("fanout".to_string(), json_num(fanout as f64));
+        o.insert("elems".to_string(), json_num(elems as f64));
+        o.insert("reps".to_string(), json_num(REPS as f64));
+        o.insert("spawn_s".to_string(), json_num(spawn.median_s));
+        o.insert("pool_s".to_string(), json_num(pooled.median_s));
+        o.insert("speedup".to_string(), json_num(speedup));
+        o.insert("bit_identical".to_string(), Json::Bool(true));
+        cases_json.push(Json::Obj(o));
+        report.push(spawn);
+        report.push(pooled);
+    }
 }
 
 /// Naive vs im2col+GEMM integer kernels; asserts bit-identity, reports

@@ -3,15 +3,18 @@
 //! Compares the `BENCH_hotpath.json` that `cargo bench --bench hotpath`
 //! just wrote against the committed `BENCH_baseline.json` and exits
 //! non-zero if any case's *speedup ratio* regressed more than the
-//! tolerance (default 30%). Three ratio families are gated side by side:
+//! tolerance (default 30%). Four ratio families are gated side by side:
 //! naive-vs-GEMM kernel speedups, interpret-vs-planned whole-model
 //! forwards (`kind: "planned_forward"` — the `ExecPlan` arena + fused
-//! epilogue path must stay ahead of the per-call GEMM walk), and serving
+//! epilogue path must stay ahead of the per-call GEMM walk), serving
 //! throughput (`kind: "serve_throughput"` — N closed-loop client threads
 //! through `serve::Server` vs solo batch-1 planned forwards of the same
-//! corpus; run the bench with `SYMOG_HOTPATH=gemm,serve` so both families
-//! land in one report). Ratios are compared — not wall-clock seconds — so
-//! the gate is machine-speed-invariant: both numbers of a ratio come from
+//! corpus), and fan-out dispatch (`kind: "pool_dispatch"` — the
+//! persistent parked pool vs spawn-per-call scoped threads on
+//! dispatch-dominated chunk sizes; run the bench with
+//! `SYMOG_HOTPATH=gemm,serve,bitslice,pool` so every gated family lands
+//! in one report). Ratios are compared — not wall-clock seconds — so the
+//! gate is machine-speed-invariant: both numbers of a ratio come from
 //! the same host.
 //!
 //!     bench_check [--current PATH] [--baseline PATH] [--tolerance 0.30]
@@ -90,7 +93,7 @@ fn real_main() -> Result<()> {
 
     let cur = load_cases(&current).context(
         "no current bench report — run `cargo bench --bench hotpath` first \
-         (SYMOG_HOTPATH=gemm,serve covers every gated case)",
+         (SYMOG_HOTPATH=gemm,serve,bitslice,pool covers every gated case)",
     )?;
     let base = load_cases(&baseline)?;
     anyhow::ensure!(!base.is_empty(), "baseline has no cases");

@@ -121,19 +121,16 @@ pub fn synth_dataset_with(spec: &SynthSpec, n: usize, seed: u64, workers: usize)
     let mut lab_rng = Rng::new(seed ^ 0x4C414245); // "LABE"
     let labels: Vec<i32> = (0..n).map(|_| lab_rng.below(spec.classes) as i32).collect();
 
-    // --- samples (parallel over a contiguous image buffer)
+    // --- samples (persistent-pool fan-out over per-image views of one
+    // contiguous buffer; every sample seeds its own RNG stream, so the
+    // chunk layout is bit-irrelevant and no staging vector is needed)
     let mut images = vec![0f32; n * elems];
-    let chunk_items: Vec<(usize, i32)> = labels.iter().copied().enumerate().collect();
-    let per = n.div_ceil(workers.max(1)).max(1);
-    std::thread::scope(|s| {
-        for (img_chunk, item_chunk) in images.chunks_mut(per * elems).zip(chunk_items.chunks(per)) {
-            let protos = &protos;
-            s.spawn(move || {
-                for (slot, &(i, label)) in img_chunk.chunks_mut(elems).zip(item_chunk) {
-                    let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
-                    sample_into(slot, &protos[label as usize], spec, &mut rng);
-                }
-            });
+    let mut views: Vec<&mut [f32]> = images.chunks_mut(elems).collect();
+    pool::par_chunks_mut(&mut views, workers, |offset, chunk| {
+        for (pos, slot) in chunk.iter_mut().enumerate() {
+            let i = offset + pos;
+            let mut rng = Rng::new(seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            sample_into(slot, &protos[labels[i] as usize], spec, &mut rng);
         }
     });
 

@@ -30,7 +30,9 @@
 //!   zeros rule at large depth), bit-sliced for the rest of the eligible
 //!   range, packed-panel multiply otherwise;
 //! * **batch parallelism**: images are independent, so the batch dimension
-//!   is fanned out over `util::pool::par_chunks_mut`.
+//!   is fanned out over `util::pool::par_chunks_mut`, which dispatches to
+//!   the process-wide persistent worker pool (no thread spawn per call —
+//!   see the threading-model notes in `util::pool`).
 //!
 //! Everything is exact i32 arithmetic in every path, so naive and GEMM
 //! results are bit-identical (asserted by property tests here and the

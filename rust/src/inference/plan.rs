@@ -475,6 +475,11 @@ impl ExecPlan {
     /// parallelism *across* rows: `scratches` (each from `scratch_for` on
     /// this plan) defines the worker fan-out, and any count yields the
     /// same bits.
+    ///
+    /// The row fan-out dispatches on the process-wide persistent pool;
+    /// any per-step fan-out *inside* a row then runs inline on that pool
+    /// worker (`util::pool`'s inline-when-nested rule), so serve-drain →
+    /// `run_rows` → step nesting cannot deadlock the pool.
     pub fn run_rows(
         &self,
         images: &[f32],
@@ -549,7 +554,9 @@ impl ExecPlan {
                 let data = &mut bufs[step.dst.0][..out_total];
                 let (a_m, bn_b): (&[i32], &[i64]) = (&a.a_mant, &bn_enc[..c]);
                 // clamp like exec_matmul so batch-1 serving rows stay on
-                // the single-chunk inline path (no spawn per step per row)
+                // the single-chunk inline path (no pool dispatch per step
+                // per row — the persistent pool is only engaged when the
+                // fan-out has more than one chunk)
                 let workers = self.workers.clamp(1, batch);
                 let amax2 = par_map_amax(data, amax, workers, |i, v| {
                     let ch = i % c;

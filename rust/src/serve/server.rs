@@ -255,7 +255,9 @@ impl Server {
         let workers = if cfg.workers == 0 {
             pool::default_workers()
         } else {
-            cfg.workers.min(64)
+            // explicit overrides get the same generous ceiling as
+            // SYMOG_WORKERS (see the cap rationale in util::pool)
+            cfg.workers.min(pool::ENV_WORKERS_CAP)
         };
         let models = registry
             .into_entries()

@@ -4,8 +4,9 @@
 //! dense weights are [in, out] row-major. Since the shared-GEMM refactor
 //! the hot paths run through `crate::kernels` — the same `MR x NR`
 //! register-blocked, packed-panel GEMM core the integer inference engine
-//! uses — batch-parallel over `util::pool` (worker count from
-//! `SYMOG_WORKERS` / `pool::default_workers`):
+//! uses — batch-parallel over `util::pool`'s persistent worker pool
+//! (worker count from `SYMOG_WORKERS` / `pool::default_workers`; no
+//! thread spawn per op — see the threading-model notes in `util::pool`):
 //!
 //! * `dense_forward` / `conv2d_forward`: (im2col +) GEMM against packed
 //!   weight panels, images/row-blocks fanned out across workers;

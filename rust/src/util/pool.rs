@@ -1,36 +1,347 @@
-//! Tiny scoped thread pool for data-parallel host work.
+//! Persistent parked worker pool for data-parallel host work.
 //!
 //! rayon is not vendored, so batch assembly / dataset generation, the
-//! integer inference GEMM, and the native training forward/backward all
-//! fan out through `std::thread::scope` chunking here. The entry points
-//! are `par_chunks_mut` (one contiguous mutable chunk per worker) and
+//! integer inference GEMM, every fused step inside `ExecPlan::run`, the
+//! serve drain's `run_rows` scatter, and the native training
+//! forward/backward all fan out through the chunking entry points here:
+//! `par_chunks_mut` (one contiguous mutable chunk per worker) and
 //! `par_map` (index-ordered results — the training `dw`/`db` reduction
 //! cells ride on this).
+//!
+//! Until PR 8 each call created and joined fresh OS threads via
+//! `std::thread::scope` — dozens of spawn/join round-trips per planned
+//! forward, per micro-batch, per train step. Dispatch now goes through a
+//! **process-wide persistent pool** ([`Pool`]): `default_workers() - 1`
+//! threads are spawned once on first use and then park on a condvar; a
+//! multi-chunk call pushes one type-erased job onto a shared queue, wakes
+//! the workers, claims chunks of its own job alongside them
+//! (caller-runs), and blocks until the job's completion counter drains.
+//! Steady state performs **zero thread spawns**, observable through
+//! [`counters`] and gated by the `pool_dispatch` hotpath-bench section.
+//!
+//! Three contracts the rest of the system leans on:
+//!
+//! * **Determinism** — the chunking formula (`ceil(n / workers)`
+//!   contiguous chunks, offsets at `i * chunk`) is byte-for-byte the one
+//!   the scoped implementation used, chunks write disjoint slices, and
+//!   nothing about *which* thread runs a chunk is observable; every
+//!   worker-invariance bit-identity suite remains the oracle.
+//! * **Reentrancy** — a job chunk that itself fans out (serve drains call
+//!   `run_rows`, whose rows run per-step fan-outs) must never wait on the
+//!   pool from a pool worker. Nested dispatch *from a worker thread* runs
+//!   inline on that worker (`inline_nested` counter); dispatchers
+//!   additionally always claim and run every unclaimed chunk of their own
+//!   job before blocking, so no thread ever waits on work that only a
+//!   blocked thread could run. See DESIGN.md §"Threading model".
+//! * **Panic parity** — a panicking chunk is caught on the executing
+//!   thread (workers survive), recorded, and re-thrown from the
+//!   dispatching call after the job completes — exactly where
+//!   `std::thread::scope` would have re-thrown it at join.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Cap on *detected* parallelism (`std::thread::available_parallelism`)
+/// when `SYMOG_WORKERS` is unset. The hot paths are memory-bandwidth-
+/// bound integer kernels: past ~16 host threads the extra workers mostly
+/// contend for the same bandwidth, and on big shared CI/serving hosts an
+/// unbounded default would also pin one pool thread per core for a
+/// process that may be one tenant among many. Deliberate deployments can
+/// go past this with the env override.
+pub const DETECTED_WORKERS_CAP: usize = 16;
+
+/// Cap on the explicit `SYMOG_WORKERS` override. Higher than
+/// [`DETECTED_WORKERS_CAP`] on purpose: an operator who *asks* for 64
+/// workers is sizing for a known machine, so the override is trusted up
+/// to this sanity bound (it exists only to keep a typo like
+/// `SYMOG_WORKERS=6400` from spawning thousands of parked threads).
+pub const ENV_WORKERS_CAP: usize = 64;
 
 /// Number of workers to use for host-side data parallelism. Overridable
 /// with `SYMOG_WORKERS`, honored by both the inference and the native
 /// training hot paths (serving/CI deployments pin this to their core
 /// budget; results never depend on it — only wall-clock does). The env
-/// var is read once per process — this sits on per-op hot paths.
+/// var is read once per process — this sits on per-op hot paths — and
+/// the persistent pool sizes itself from the first value returned.
 pub fn default_workers() -> usize {
-    static WORKERS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    static WORKERS: OnceLock<usize> = OnceLock::new();
     *WORKERS.get_or_init(|| {
         if let Some(n) = std::env::var("SYMOG_WORKERS")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
         {
             if n >= 1 {
-                return n.min(64);
+                return n.min(ENV_WORKERS_CAP);
             }
         }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(DETECTED_WORKERS_CAP)
     })
 }
 
-/// Run `f(offset, chunk)` over contiguous chunks of `data` on up to
-/// `workers` OS threads, where `offset` is the chunk's starting index
-/// within `data` (so callers never re-derive the chunking formula).
-/// Chunks are as even as possible; `f` must be Sync.
+// --- observability ----------------------------------------------------
+
+static JOBS_DISPATCHED: AtomicU64 = AtomicU64::new(0);
+static INLINE_SINGLE: AtomicU64 = AtomicU64::new(0);
+static INLINE_NESTED: AtomicU64 = AtomicU64::new(0);
+static CALLER_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static WORKER_CHUNKS: AtomicU64 = AtomicU64::new(0);
+static PARKS: AtomicU64 = AtomicU64::new(0);
+static WAKES: AtomicU64 = AtomicU64::new(0);
+static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the pool's lifetime dispatch counters (process-global,
+/// monotonic). `threads_spawned` changes only while the pool initializes,
+/// so `counters().threads_spawned` being equal across two snapshots that
+/// bracket hot-path work *proves* zero OS-thread spawns on that path —
+/// the steady-state contract the pool tests and the `pool_dispatch`
+/// bench section assert.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// multi-chunk jobs dispatched through the queue
+    pub jobs_dispatched: u64,
+    /// single-chunk calls run inline on the dispatcher (no queue touch)
+    pub inline_single: u64,
+    /// nested dispatches run inline because the caller was a pool worker
+    pub inline_nested: u64,
+    /// job chunks executed by their own dispatcher (caller-runs)
+    pub caller_chunks: u64,
+    /// job chunks executed by parked pool workers
+    pub worker_chunks: u64,
+    /// times a worker found the queue empty and parked on the condvar
+    pub parks: u64,
+    /// wake broadcasts issued by dispatchers pushing a job
+    pub wakes: u64,
+    /// OS threads ever spawned by the pool (fixed after initialization)
+    pub threads_spawned: u64,
+}
+
+/// Read the current [`PoolCounters`]. Counters are monotonic; take two
+/// snapshots and subtract to attribute activity to a code region (other
+/// threads may add in between, so assert `>=` on deltas, never `==` —
+/// except for `threads_spawned`, which is exact once the pool is warm).
+pub fn counters() -> PoolCounters {
+    PoolCounters {
+        jobs_dispatched: JOBS_DISPATCHED.load(Ordering::Relaxed),
+        inline_single: INLINE_SINGLE.load(Ordering::Relaxed),
+        inline_nested: INLINE_NESTED.load(Ordering::Relaxed),
+        caller_chunks: CALLER_CHUNKS.load(Ordering::Relaxed),
+        worker_chunks: WORKER_CHUNKS.load(Ordering::Relaxed),
+        parks: PARKS.load(Ordering::Relaxed),
+        wakes: WAKES.load(Ordering::Relaxed),
+        threads_spawned: THREADS_SPAWNED.load(Ordering::Relaxed),
+    }
+}
+
+// --- the pool ---------------------------------------------------------
+
+thread_local! {
+    /// True on pool worker threads for their whole lifetime: dispatch
+    /// from such a thread runs inline (the reentrancy rule).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One dispatched fan-out: a type-erased chunk closure plus the claim
+/// and completion state. Chunks are claimed by `fetch_add` on `next`
+/// (each index handed out exactly once); `pending` counts chunks not yet
+/// *finished* and reaching zero flips `done.finished` under the mutex —
+/// the dispatcher blocks on that, never on the queue.
+struct Job {
+    task: TaskRef,
+    n_chunks: usize,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    done: Mutex<JobDone>,
+    done_cv: Condvar,
+}
+
+struct JobDone {
+    finished: bool,
+    /// first chunk panic, re-thrown by the dispatcher after completion
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+/// Lifetime-erased reference to the dispatcher's chunk closure.
+///
+/// SAFETY: the `'static` is a lie told to the worker threads; it is
+/// sound because [`Pool::run`] does not return until `pending` reaches
+/// zero, i.e. until after the last use of this reference on any thread —
+/// the same guarantee `std::thread::scope` gives its borrows. Nothing
+/// outside this module can observe the reference.
+struct TaskRef(&'static (dyn Fn(usize) + Sync));
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+}
+
+/// The process-wide pool, created (and its workers spawned) on first
+/// multi-chunk dispatch.
+fn pool() -> &'static Arc<Pool> {
+    static POOL: OnceLock<Arc<Pool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let pool = Arc::new(Pool { queue: Mutex::new(VecDeque::new()), work_cv: Condvar::new() });
+        // `default_workers() - 1` parked threads: the dispatcher itself is
+        // the remaining worker (caller-runs), so a w-way fan-out uses
+        // exactly w threads, as the scoped implementation did.
+        for wi in 0..default_workers().saturating_sub(1) {
+            let p = Arc::clone(&pool);
+            let spawned = std::thread::Builder::new()
+                .name(format!("symog-pool-{wi}"))
+                .spawn(move || worker_loop(&p))
+                .is_ok();
+            if spawned {
+                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        pool
+    })
+}
+
+fn worker_loop(pool: &Pool) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let job: Arc<Job> = {
+            let mut q = lock(&pool.queue);
+            loop {
+                // first job with unclaimed chunks; fully-claimed jobs stay
+                // queued (their dispatcher removes them on completion) and
+                // are skipped here
+                let open = q
+                    .iter()
+                    .find(|j| j.next.load(Ordering::Relaxed) < j.n_chunks)
+                    .map(Arc::clone);
+                if let Some(j) = open {
+                    break j;
+                }
+                PARKS.fetch_add(1, Ordering::Relaxed);
+                q = pool.work_cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        WORKER_CHUNKS.fetch_add(job.work(), Ordering::Relaxed);
+    }
+}
+
+impl Job {
+    /// Claim and execute chunks until none remain unclaimed; returns how
+    /// many this thread ran. Panics inside a chunk are caught (recorded
+    /// once, for the dispatcher to re-throw) so the executing thread —
+    /// worker or dispatcher — survives and completion still drains.
+    fn work(&self) -> u64 {
+        let mut ran = 0u64;
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                return ran;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (self.task.0)(i))) {
+                let mut d = lock(&self.done);
+                if d.panic.is_none() {
+                    d.panic = Some(p);
+                }
+            }
+            ran += 1;
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = lock(&self.done);
+                d.finished = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+impl Pool {
+    /// Dispatch a multi-chunk job: enqueue, wake the parked workers,
+    /// claim chunks alongside them, then block until every chunk has
+    /// finished. Returns only after all side effects of `f` are visible
+    /// to the caller (the completion handshake is the synchronization
+    /// edge, like a scope join).
+    fn run(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: see `TaskRef` — this call blocks until the job fully
+        // completes, so extending the closure borrow to 'static never
+        // lets a worker touch it after `f` is dead.
+        let task = TaskRef(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        });
+        let job = Arc::new(Job {
+            task,
+            n_chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_chunks),
+            done: Mutex::new(JobDone { finished: false, panic: None }),
+            done_cv: Condvar::new(),
+        });
+        JOBS_DISPATCHED.fetch_add(1, Ordering::Relaxed);
+        lock(&self.queue).push_back(Arc::clone(&job));
+        WAKES.fetch_add(1, Ordering::Relaxed);
+        self.work_cv.notify_all();
+        // caller-runs: every chunk no worker has claimed runs right here,
+        // so progress never depends on pool capacity
+        CALLER_CHUNKS.fetch_add(job.work(), Ordering::Relaxed);
+        {
+            let mut d = lock(&job.done);
+            while !d.finished {
+                d = job.done_cv.wait(d).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // the dispatcher owns its queue entry's removal (workers only
+        // skip exhausted jobs), keeping the queue bounded by the number
+        // of in-flight dispatchers
+        {
+            let mut q = lock(&self.queue);
+            if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                q.remove(pos);
+            }
+        }
+        let panic = lock(&job.done).panic.take();
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Run `f(chunk_index)` for every index in `0..n_chunks`, each exactly
+/// once, returning after all have completed. Single-chunk calls and
+/// calls from pool workers (nested fan-outs) run inline.
+fn dispatch(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if IN_POOL_WORKER.with(|c| c.get()) {
+        // reentrancy rule: a worker never re-enqueues (and never blocks
+        // on another job), it just runs its nested fan-out inline
+        INLINE_NESTED.fetch_add(1, Ordering::Relaxed);
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    pool().run(n_chunks, f);
+}
+
+/// Pointer wrapper that lets the chunk closure reconstruct disjoint
+/// `&mut` sub-slices on whichever thread claims each chunk.
+struct SendPtr<T>(*mut T);
+// SAFETY: only ever used to rebuild non-overlapping sub-slices of a
+// caller-owned `&mut [T]` (one per claimed chunk index), with `T: Send`
+// bounds on the public entry points.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Run `f(offset, chunk)` over contiguous chunks of `data`, `workers`
+/// chunks wide, where `offset` is the chunk's starting index within
+/// `data` (so callers never re-derive the chunking formula). Chunks are
+/// as even as possible; `f` must be Sync. The chunk layout is a pure
+/// function of `(data.len(), workers)` — identical to the pre-pool
+/// scoped implementation — and chunks land on disjoint slices, so
+/// results are bit-identical for any worker count and any pool size.
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], workers: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
@@ -42,16 +353,23 @@ where
     let workers = workers.clamp(1, n);
     let chunk = n.div_ceil(workers);
     if chunk >= n {
-        // single chunk: run inline — a thread spawn would only add latency
+        // single chunk: run inline — queueing would only add latency
         // (this is the common case for batch-of-1 serving rows)
+        INLINE_SINGLE.fetch_add(1, Ordering::Relaxed);
         f(0, data);
         return;
     }
-    std::thread::scope(|s| {
-        for (i, part) in data.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || f(i * chunk, part));
-        }
+    let n_chunks = n.div_ceil(chunk);
+    let base = SendPtr(data.as_mut_ptr());
+    dispatch(n_chunks, &|ci: usize| {
+        let start = ci * chunk;
+        let len = chunk.min(n - start);
+        // SAFETY: chunk indices are claimed exactly once, so these
+        // reconstructed slices never overlap; `dispatch` returns only
+        // after every chunk finished, keeping the borrow of `data` live
+        // for as long as any thread touches it.
+        let part = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(start, part);
     });
 }
 
@@ -63,20 +381,16 @@ where
     let workers = workers.clamp(1, n.max(1));
     let chunk = n.div_ceil(workers.max(1)).max(1);
     if chunk >= n {
-        // single chunk: compute inline — no spawn, no staging allocations
+        // single chunk: compute inline — no dispatch, no staging slots
+        INLINE_SINGLE.fetch_add(1, Ordering::Relaxed);
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let base: Vec<usize> = (0..n).collect();
-    // pair each output slot with its index via chunked ranges
-    std::thread::scope(|s| {
-        for (slots, idxs) in out.chunks_mut(chunk).zip(base.chunks(chunk)) {
-            let f = &f;
-            s.spawn(move || {
-                for (slot, &i) in slots.iter_mut().zip(idxs) {
-                    *slot = Some(f(i));
-                }
-            });
+    // each slot's global index is its chunk offset plus its position —
+    // no staged index vector needed
+    par_chunks_mut(&mut out, workers, |off, slots| {
+        for (pos, slot) in slots.iter_mut().enumerate() {
+            *slot = Some(f(off + pos));
         }
     });
     out.into_iter().map(|o| o.unwrap()).collect()
@@ -124,5 +438,112 @@ mod tests {
     fn single_worker() {
         let out = par_map(10, 1, |i| i + 1);
         assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn nested_dispatch_completes_with_correct_results() {
+        // outer fan-out whose chunks fan out again: chunks that land on
+        // pool workers take the inline-nested path, chunks run by the
+        // dispatcher re-enter the queue — both must yield the same bits
+        let want: Vec<u64> = (0..24u64).map(|i| i + (0..32u64).sum::<u64>()).collect();
+        for _ in 0..50 {
+            let got = par_map(24, 6, |i| {
+                let inner = par_map(32, 4, |j| j as u64);
+                i as u64 + inner.iter().sum::<u64>()
+            });
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn deep_nesting_does_not_deadlock() {
+        // three levels of fan-out from every chunk; with a small pool
+        // this exercises worker-inline, dispatcher re-entry, and
+        // oversubscribed queues all at once
+        let out = par_map(8, 4, |i| {
+            par_map(8, 4, |j| {
+                let leaf = par_map(8, 4, |k| (i * 64 + j * 8 + k) as u64);
+                leaf.iter().sum::<u64>()
+            })
+            .iter()
+            .sum::<u64>()
+        });
+        let want: Vec<u64> = (0..8u64)
+            .map(|i| (0..64u64).map(|r| i * 64 + r).sum())
+            .collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut v = vec![0u32; 64];
+            par_chunks_mut(&mut v, 8, |off, _| {
+                if off >= 16 {
+                    panic!("chunk bomb");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "chunk panic must re-throw at the dispatch call");
+        // the pool (workers included) keeps serving jobs afterwards
+        let out = par_map(64, 8, |i| i * 2);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn steady_state_dispatch_spawns_no_threads() {
+        // warm: first multi-chunk dispatch initializes the pool
+        par_map(64, 8, |i| i);
+        let c1 = counters();
+        for _ in 0..10 {
+            let mut v = vec![1u32; 512];
+            par_chunks_mut(&mut v, 8, |_, chunk| {
+                for x in chunk {
+                    *x += 1;
+                }
+            });
+            assert!(v.iter().all(|&x| x == 2));
+        }
+        let c2 = counters();
+        assert_eq!(
+            c2.threads_spawned, c1.threads_spawned,
+            "steady-state dispatch must not create OS threads"
+        );
+        assert!(
+            c2.jobs_dispatched >= c1.jobs_dispatched + 10,
+            "multi-chunk calls must go through the persistent queue"
+        );
+        // pool size is fixed by default_workers() at init
+        assert_eq!(c2.threads_spawned, default_workers().saturating_sub(1) as u64);
+    }
+
+    #[test]
+    fn single_chunk_calls_stay_inline() {
+        let c1 = counters();
+        let mut v = vec![0u8; 16];
+        par_chunks_mut(&mut v, 1, |_, chunk| chunk.fill(7));
+        let _ = par_map(4, 1, |i| i);
+        let c2 = counters();
+        assert!(v.iter().all(|&x| x == 7));
+        assert!(c2.inline_single >= c1.inline_single + 2);
+    }
+
+    #[test]
+    fn oversubscribed_dispatchers_all_complete() {
+        // more concurrent dispatchers than pool threads: caller-runs
+        // keeps every job progressing even when no worker is free
+        let dispatchers = default_workers() * 3 + 2;
+        std::thread::scope(|s| {
+            for t in 0..dispatchers {
+                s.spawn(move || {
+                    for r in 0..20 {
+                        let out = par_map(33, 4, move |i| (t * 100_000 + r * 1000 + i) as u64);
+                        let want: Vec<u64> =
+                            (0..33).map(|i| (t * 100_000 + r * 1000 + i) as u64).collect();
+                        assert_eq!(out, want);
+                    }
+                });
+            }
+        });
     }
 }
