@@ -78,7 +78,7 @@ fn main() -> Result<()> {
     let mut reg = Registry::new();
     let opts = RegisterOpts::new().max_batch(4);
     let key = reg.add(&model_name, ModelSource::Artifact(&path), &opts)?;
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
     println!("serving {key} from the artifact");
     for r in 0..requests / 2 {
         let img: Vec<f32> = (0..elems).map(|_| rng.normal()).collect();

@@ -7,17 +7,26 @@
 //!
 //!     cargo run --release --example serve_bench -- \
 //!         --model vgg7 --bits 2 --width 16 --clients 4 --requests 64 \
-//!         --batch 8 --workers 0 --seed 1453
+//!         --batch 8 --workers 0 --seed 1453 \
+//!         --queue-depth 0 --deadline-ms 0 --faults ""
 //!
 //! `--workers 0` resolves to the host default (`SYMOG_WORKERS` honored).
+//! Failure-domain knobs: `--queue-depth N` bounds admission (0 =
+//! unbounded), `--deadline-ms N` attaches a deadline to every request
+//! (0 = none) — refused/swept/failed requests are tallied, not fatal —
+//! and `--faults site:prob:seed[,...]` arms the seeded injection sites
+//! (requires a `--features fault-injection` build; same syntax as
+//! `SYMOG_FAULTS`).
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 use symog::cli::Args;
 use symog::inference::IntModel;
-use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+use symog::serve::{InferOpts, ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 use symog::testing::models;
+use symog::util::fault;
 use symog::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -30,7 +39,20 @@ fn main() -> Result<()> {
     let batch = args.usize_or("batch", 8)?.max(1);
     let workers = args.usize_or("workers", 0)?;
     let seed = args.u64_or("seed", 0x1453)?;
+    let queue_depth = args.usize_or("queue-depth", 0)?;
+    let deadline_ms = args.u64_or("deadline-ms", 0)?;
+    let faults = args.str_or("faults", "");
     args.finish()?;
+
+    if !faults.is_empty() {
+        ensure!(
+            fault::ENABLED,
+            "--faults needs a fault-injection build: \
+             cargo run --release --features fault-injection --example serve_bench"
+        );
+        arm_faults(&faults)?;
+        println!("faults armed: {faults}");
+    }
 
     let mut rng = Rng::new(seed);
     let (man, ck) = match model_name.as_str() {
@@ -46,11 +68,14 @@ fn main() -> Result<()> {
     let mut reg = Registry::new();
     let opts = RegisterOpts::new().max_batch(batch);
     let key = reg.add(&model_name, ModelSource::InCode(&model), &opts)?;
-    let server = Server::new(reg, ServeConfig { workers });
+    let server =
+        Server::new(reg, ServeConfig::new().workers(workers).queue_depth(queue_depth));
     println!(
         "== serve_bench == model {key}  input {:?}  micro-batch cap {batch}  \
-         clients {clients} x {requests} requests",
-        man.input_shape
+         clients {clients} x {requests} requests  queue depth {}  deadline {}",
+        man.input_shape,
+        if queue_depth == 0 { "unbounded".to_string() } else { queue_depth.to_string() },
+        if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms}ms") },
     );
 
     // deterministic request corpus
@@ -75,22 +100,40 @@ fn main() -> Result<()> {
     let solo_s = t0.elapsed().as_secs_f64();
 
     // --- served: closed-loop client threads ------------------------------
+    // with deadlines/faults armed, refusals are expected outcomes: tally
+    // them and let the stats line show the exact failure-domain split
+    let served = AtomicU64::new(0);
+    let refused = AtomicU64::new(0);
     let t0 = Instant::now();
     std::thread::scope(|sc| {
         for t in 0..clients {
-            let (server, key, images) = (&server, &key, &images);
+            let (server, key, images, served, refused) =
+                (&server, &key, &images, &served, &refused);
             sc.spawn(move || {
                 for i in 0..requests {
                     let r = t * requests + i;
-                    let got = server
-                        .infer(key, &images[r * elems..(r + 1) * elems])
-                        .expect("serve request failed");
-                    std::hint::black_box(got);
+                    let iopts = if deadline_ms == 0 {
+                        InferOpts::new()
+                    } else {
+                        InferOpts::new().deadline_in(Duration::from_millis(deadline_ms))
+                    };
+                    match server.infer_with(key, &images[r * elems..(r + 1) * elems], &iopts) {
+                        Ok(got) => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                            std::hint::black_box(got);
+                        }
+                        Err(_) => {
+                            refused.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                 }
             });
         }
     });
     let serve_s = t0.elapsed().as_secs_f64();
+    let served = served.into_inner();
+    let refused = refused.into_inner();
+    ensure!(served + refused == total as u64, "a request vanished without a terminal outcome");
 
     // --- bit-exactness spot check ----------------------------------------
     for r in [0usize, total / 2, total - 1] {
@@ -108,9 +151,22 @@ fn main() -> Result<()> {
         total as f64 / solo_s
     );
     println!(
-        "served : {total} requests in {serve_s:.3}s  ({:.1} req/s)  -> {:.2}x vs solo",
-        total as f64 / serve_s,
+        "served : {served} ok + {refused} refused in {serve_s:.3}s  ({:.1} req/s)  \
+         -> {:.2}x vs solo",
+        served as f64 / serve_s,
         solo_s / serve_s
     );
     Ok(())
+}
+
+/// Arm `--faults`; compiled only when the registry exists so the example
+/// still builds (and the flag still errors cleanly) without the feature.
+#[cfg(feature = "fault-injection")]
+fn arm_faults(spec: &str) -> Result<()> {
+    fault::arm_from_spec(spec)
+}
+
+#[cfg(not(feature = "fault-injection"))]
+fn arm_faults(_spec: &str) -> Result<()> {
+    unreachable!("gated by fault::ENABLED above")
 }

@@ -616,7 +616,11 @@ fn serve_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<
         let mut reg = Registry::new();
         let opts = RegisterOpts::new().max_batch(case.max_batch);
         let key = reg.add(case.model, ModelSource::InCode(&model), &opts)?;
-        let server = Server::new(reg, ServeConfig::default());
+        // queue_depth = clients: admission control is *active* on the
+        // timed path (the hardened checks run per request), but a
+        // closed-loop client has at most one request outstanding, so
+        // nothing can ever shed — asserted after timing below
+        let server = Server::new(reg, ServeConfig::new().queue_depth(case.clients));
         let plan = solo.shared_plan(case.max_batch)?;
         let out_per = plan.out_per_img();
 
@@ -681,6 +685,19 @@ fn serve_benches(report: &mut Vec<Stats>, cases_json: &mut Vec<Json>) -> Result<
         let pre = server.stats(&key)?;
         let s_serve = bench(&format!("serve {}", case.name), 0, 5, &mut hammer);
         let post = server.stats(&key)?;
+        // the failure-domain layer must be invisible to healthy traffic:
+        // same floors as before the hardening (gated by bench_check), and
+        // zero refusals — every timed request was served, none shed,
+        // swept, or failed
+        anyhow::ensure!(
+            (post.sheds, post.timeouts, post.failures) == (0, 0, 0),
+            "{}: hardened serve path refused healthy closed-loop traffic \
+             ({} shed, {} timed out, {} failed)",
+            case.name,
+            post.sheds,
+            post.timeouts,
+            post.failures
+        );
         let timed_occ = (post.requests - pre.requests) as f64
             / (post.batches - pre.batches).max(1) as f64;
         let speedup = s_solo.median_s / s_serve.median_s;

@@ -22,7 +22,9 @@
 //!   **model version** (which deployment of this model the payload is —
 //!   the hot-swap handle `serve::Server::swap` keys on).
 //! * A CRC-32 over the payload plus per-section bounds checks turn disk
-//!   corruption into named errors instead of garbage weights.
+//!   corruption into named errors instead of garbage weights; the CRC is
+//!   re-verified over the exact bytes handed to the planner, so a payload
+//!   mutated between validation and planning (TOCTOU) is refused too.
 //!
 //! Publishing is atomic: the file is written to a `.tmp` sibling and
 //! renamed into place, so a watcher never observes a half-written artifact.
@@ -309,7 +311,7 @@ pub fn peek_version(path: &Path) -> Result<u32> {
 /// (codebook weights + deltas) exactly as published — straight to an
 /// [`IntModel`] whose plans are bit-identical to the source model's.
 pub fn load(path: &Path) -> Result<LoadedArtifact> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     let h = format::parse_header(&bytes, path)?;
     let have = (bytes.len() - format::HEADER_LEN) as u64;
     ensure!(
@@ -324,8 +326,7 @@ pub fn load(path: &Path) -> Result<LoadedArtifact> {
         path.display(),
         have - h.payload_len
     );
-    let payload = &bytes[format::HEADER_LEN..];
-    let crc = format::crc32(payload);
+    let crc = format::crc32(&bytes[format::HEADER_LEN..]);
     ensure!(
         crc == h.payload_crc,
         "{}: payload checksum mismatch (stored {:#010x}, computed {crc:#010x}) — \
@@ -333,8 +334,27 @@ pub fn load(path: &Path) -> Result<LoadedArtifact> {
         path.display(),
         h.payload_crc
     );
+    if crate::util::fault::fire(crate::util::fault::ARTIFACT_PAYLOAD_CORRUPT) {
+        // chaos hook: mutate the buffer *after* validation to model a
+        // TOCTOU bit-flip (bad RAM, a racing writer on a non-atomic copy)
+        let mid = format::HEADER_LEN + bytes[format::HEADER_LEN..].len() / 2;
+        bytes[mid] ^= 0x01;
+    }
+    // TOCTOU hardening: everything below consumes this one buffer, and the
+    // CRC is re-verified over the exact bytes handed to the planner — a
+    // payload mutated between validation and planning is refused, never
+    // silently decoded into garbage weights
+    let payload = &bytes[format::HEADER_LEN..];
     let (man, ck) = decode_payload(payload)
         .with_context(|| format!("{}: decoding .fxpa payload", path.display()))?;
+    let recrc = format::crc32(payload);
+    ensure!(
+        recrc == h.payload_crc,
+        "{}: payload mutated between validation and planning \
+         (checksum {:#010x} became {recrc:#010x}) — refusing the artifact",
+        path.display(),
+        h.payload_crc
+    );
     let model = IntModel::build(&man, &ck)
         .with_context(|| format!("{}: building the integer model", path.display()))?;
     Ok(LoadedArtifact { path: path.to_path_buf(), manifest: man, version: h.model_version, model })

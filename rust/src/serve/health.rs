@@ -1,0 +1,231 @@
+//! Typed serving failures and per-version health tracking.
+//!
+//! Every request the server refuses or fails resolves to exactly one
+//! [`ServeError`] variant — the stringly `Result<_, String>` channel is
+//! gone, so callers can branch on the failure domain (shed vs deadline vs
+//! batch failure vs quarantine) instead of grepping messages. `Display`
+//! strings are stable and pinned by tests; the public `infer*` APIs wrap
+//! the variant in `anyhow` context (the model key) without losing the
+//! typed source, so `err.downcast_ref::<ServeError>()` always works.
+//!
+//! Each deployed version also carries a [`Health`] state driven by a
+//! consecutive-failure circuit [`Breaker`]: one failed micro-batch marks
+//! the version `Degraded`, a configurable run of consecutive failures
+//! trips it to `Quarantined` (sticky until rollback or swap), and any
+//! success while not quarantined resets to `Ready`. Quarantine is the
+//! *version's* failure domain — the slot survives and rolls back to
+//! last-good (see `server.rs`).
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// Serving health of one deployed model version.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally (no failure since the last success).
+    Ready,
+    /// At least one recent micro-batch failed; still serving.
+    Degraded,
+    /// The consecutive-failure breaker tripped: this version no longer
+    /// serves (sticky — cleared only by rolling to another version).
+    Quarantined,
+}
+
+impl fmt::Display for Health {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Health::Ready => "ready",
+            Health::Degraded => "degraded",
+            Health::Quarantined => "quarantined",
+        })
+    }
+}
+
+/// Typed terminal outcome for a failed serving request. Every submitted
+/// request completes with logits or with exactly one of these; the
+/// counter identity `requests + sheds + timeouts + failures ==
+/// submissions` (per version, per slot) is pinned by the chaos suites.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control refused the request: the slot's queue was at its
+    /// configured `queue_depth` when the request arrived.
+    Shed {
+        /// the configured bound the queue was at
+        depth: usize,
+    },
+    /// The request's deadline had already passed when a drainer swept the
+    /// queue; it was never executed.
+    DeadlineExceeded,
+    /// The micro-batch containing this request panicked or failed in the
+    /// execution engine; the request was not served. Batchmates of a
+    /// poison input land here and may retry — the slot itself survives.
+    BatchPanicked(String),
+    /// The version that would have served this request is quarantined
+    /// (circuit breaker open) and no rollback target exists.
+    VersionQuarantined(u32),
+    /// The request was malformed (wrong input geometry) and was rejected
+    /// before admission.
+    BadRequest(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Shed { depth } => {
+                write!(f, "request shed: queue is at its configured depth ({depth})")
+            }
+            ServeError::DeadlineExceeded => {
+                f.write_str("deadline exceeded before execution (request swept, never run)")
+            }
+            ServeError::BatchPanicked(msg) => write!(f, "batch execution failed: {msg}"),
+            ServeError::VersionQuarantined(v) => {
+                write!(f, "version v{v} is quarantined (circuit breaker open)")
+            }
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+struct BreakerState {
+    consecutive: u32,
+    health: Health,
+}
+
+/// Consecutive-failure circuit breaker for one version. Not a rate
+/// limiter: only an unbroken run of `threshold` failed micro-batches
+/// trips it, so a single poison input surrounded by healthy traffic
+/// degrades but never quarantines.
+pub(crate) struct Breaker {
+    threshold: u32,
+    state: Mutex<BreakerState>,
+}
+
+impl Breaker {
+    pub(crate) fn new(threshold: u32) -> Breaker {
+        debug_assert!(threshold >= 1, "a breaker needs a positive threshold");
+        Breaker {
+            threshold,
+            state: Mutex::new(BreakerState { consecutive: 0, health: Health::Ready }),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(crate) fn health(&self) -> Health {
+        self.lock().health
+    }
+
+    /// A micro-batch succeeded: reset the failure run. Quarantine is
+    /// sticky — a success racing the trip does not resurrect the version.
+    pub(crate) fn record_success(&self) {
+        let mut s = self.lock();
+        s.consecutive = 0;
+        if s.health != Health::Quarantined {
+            s.health = Health::Ready;
+        }
+    }
+
+    /// A micro-batch failed. Returns `true` exactly once: on the failure
+    /// that trips the breaker (the caller then performs the rollback).
+    pub(crate) fn record_failure(&self) -> bool {
+        let mut s = self.lock();
+        if s.health == Health::Quarantined {
+            return false;
+        }
+        s.consecutive += 1;
+        if s.consecutive >= self.threshold {
+            s.health = Health::Quarantined;
+            true
+        } else {
+            s.health = Health::Degraded;
+            false
+        }
+    }
+
+    /// Force quarantine (manual rollback path). Returns `true` if this
+    /// call transitioned the version into quarantine.
+    pub(crate) fn quarantine(&self) -> bool {
+        let mut s = self.lock();
+        if s.health == Health::Quarantined {
+            return false;
+        }
+        s.health = Health::Quarantined;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        // these strings are part of the public API surface: operators and
+        // tests match on them, so changing one is a breaking change
+        assert_eq!(
+            ServeError::Shed { depth: 8 }.to_string(),
+            "request shed: queue is at its configured depth (8)"
+        );
+        assert_eq!(
+            ServeError::DeadlineExceeded.to_string(),
+            "deadline exceeded before execution (request swept, never run)"
+        );
+        assert_eq!(
+            ServeError::BatchPanicked("kernel bug".into()).to_string(),
+            "batch execution failed: kernel bug"
+        );
+        assert_eq!(
+            ServeError::VersionQuarantined(3).to_string(),
+            "version v3 is quarantined (circuit breaker open)"
+        );
+        assert_eq!(
+            ServeError::BadRequest("image has 7 elements".into()).to_string(),
+            "bad request: image has 7 elements"
+        );
+        assert_eq!(Health::Ready.to_string(), "ready");
+        assert_eq!(Health::Degraded.to_string(), "degraded");
+        assert_eq!(Health::Quarantined.to_string(), "quarantined");
+    }
+
+    #[test]
+    fn serve_error_downcasts_through_anyhow() {
+        let err = anyhow::Error::new(ServeError::Shed { depth: 4 }).context("lenet5@w2#v1");
+        let typed = err.downcast_ref::<ServeError>().expect("typed source survives context");
+        assert_eq!(*typed, ServeError::Shed { depth: 4 });
+        // the chain renders "context: source"
+        assert!(format!("{err:#}").contains("lenet5@w2#v1"));
+        assert!(format!("{err:#}").contains("configured depth (4)"));
+    }
+
+    #[test]
+    fn breaker_trips_only_on_consecutive_failures() {
+        let b = Breaker::new(3);
+        assert_eq!(b.health(), Health::Ready);
+        assert!(!b.record_failure());
+        assert_eq!(b.health(), Health::Degraded);
+        assert!(!b.record_failure());
+        // a success resets the run: the next failure starts from scratch
+        b.record_success();
+        assert_eq!(b.health(), Health::Ready);
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert!(b.record_failure(), "third consecutive failure trips");
+        assert_eq!(b.health(), Health::Quarantined);
+        // tripping is reported exactly once; quarantine is sticky
+        assert!(!b.record_failure());
+        b.record_success();
+        assert_eq!(b.health(), Health::Quarantined);
+    }
+
+    #[test]
+    fn manual_quarantine_reports_the_transition_once() {
+        let b = Breaker::new(100);
+        assert!(b.quarantine());
+        assert!(!b.quarantine());
+        assert_eq!(b.health(), Health::Quarantined);
+    }
+}

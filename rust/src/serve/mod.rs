@@ -22,7 +22,13 @@
 //! * bounded per-version scratch pools (checkout/return, zero
 //!   steady-state growth) and per-version running [`ModelStats`] with
 //!   analytic op accounting ([`Server::stats_by_version`] partitions
-//!   traffic exactly; [`Server::stats`] totals it).
+//!   traffic exactly; [`Server::stats`] totals it);
+//! * hardened failure domains: bounded admission ([`ServeConfig`]'s
+//!   `queue_depth` sheds with a typed [`ServeError::Shed`]), per-request
+//!   deadlines ([`Server::infer_with`] + [`InferOpts`]), per-version
+//!   [`Health`] with a consecutive-failure circuit breaker and automatic
+//!   last-good rollback ([`Server::rollback`], [`Server::health`]), all
+//!   proven under seeded fault schedules (`util::fault`, `tests/chaos.rs`).
 //!
 //! The load-bearing numeric contract: every response is bit-identical to
 //! a solo `Backend::Planned` forward of that request on the version that
@@ -35,10 +41,12 @@
 //! [`ExecPlan`]: crate::inference::ExecPlan
 //! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
 
+mod health;
 mod registry;
 mod server;
 mod stats;
 
+pub use health::{Health, ServeError};
 pub use registry::{ModelKey, ModelSource, RegisterOpts, Registry};
-pub use server::{ServeConfig, Server};
+pub use server::{InferOpts, ServeConfig, Server, DEFAULT_QUARANTINE_AFTER};
 pub use stats::ModelStats;

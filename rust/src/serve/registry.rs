@@ -8,6 +8,9 @@
 //! with distinct plans, stats, and scratch pools. Within a slot, entries
 //! carry a **version**: the deployment generation of the weights, which
 //! [`Server::swap`](super::Server::swap) advances atomically at runtime.
+//! Version numbers are monotonic over a slot's whole history and are
+//! *burned* on rollback — a generation quarantined by the circuit
+//! breaker can never be re-pinned; a replacement must be strictly newer.
 //!
 //! Models come from a [`ModelSource`]: either an in-process [`IntModel`]
 //! (`InCode`) or a published `.fxpa` file on disk (`Artifact`), with

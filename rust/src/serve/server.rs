@@ -1,4 +1,5 @@
-//! The synchronous batched inference server, with atomic hot-swap.
+//! The synchronous batched inference server, with atomic hot-swap and
+//! overload-hardened failure domains.
 //!
 //! ## Queue / flush policy (wall-clock-free)
 //!
@@ -16,32 +17,63 @@
 //! fan-out inside a batch and from other models); while a drain runs, new
 //! arrivals queue up and coalesce into the next micro-batch.
 //!
+//! ## Failure domains (admission → deadline → quarantine → rollback)
+//!
+//! Every submitted request resolves to **exactly one** typed terminal
+//! outcome — logits, or one [`ServeError`] variant — and the per-version
+//! counters in [`ModelStats`] account for it exactly
+//! (`requests + sheds + timeouts + failures == submissions`):
+//!
+//! * **Admission control.** [`ServeConfig::queue_depth`] bounds each
+//!   slot's queue; a request arriving at the bound is refused *at
+//!   enqueue* with [`ServeError::Shed`] instead of growing the queue (and
+//!   the tail latency of everything behind it) without bound.
+//! * **Deadlines.** [`Server::infer_with`] carries an optional deadline.
+//!   Expired requests are swept by the drainer *before* execution — they
+//!   never consume engine time — and complete with
+//!   [`ServeError::DeadlineExceeded`].
+//! * **Panic quarantine.** A micro-batch that panics or fails inside the
+//!   engine fails only its own batch: every batchmate resolves with
+//!   [`ServeError::BatchPanicked`], the scratches return to the pool, the
+//!   drain flag resets, and the slot keeps serving. A consecutive-failure
+//!   circuit breaker ([`ServeConfig::quarantine_after`]) moves the
+//!   version `Ready → Degraded → Quarantined` ([`Server::health`]).
+//! * **Last-good rollback.** When a version quarantines, the slot
+//!   atomically reroutes to the newest non-quarantined version it has
+//!   served ([`Server::rollback`] does the same manually), so a bad
+//!   deployment heals without a restart. [`Server::swap`] additionally
+//!   runs a **probe row** through the incoming plan before install —
+//!   a version that cannot execute one row never becomes current.
+//!
 //! ## Versioned slots and hot-swap
 //!
 //! A server slot is `(name, n_bits)`; what it *serves* is a
-//! [`VersionState`] — plan, scratch pool, staging buffers, and stats for
-//! one deployment generation — behind an `RwLock<Arc<VersionState>>`
-//! ([`Server::swap`] is the writer). A drainer pins the current `Arc` at
-//! the moment it takes its requests, so a swap never pauses traffic and
-//! never drops a request: in-flight drains finish on the version they
-//! pinned while new drains pick up the new one, and each response (and
-//! its stats) is attributed to exactly the version that executed it —
-//! still bit-identical to a solo forward on that version. Retired
-//! versions stay resident only for their stats
-//! ([`Server::stats_by_version`]); swaps are rare control-plane events,
-//! serialized by the slot's install lock, and validated for monotonically
-//! increasing versions and identical I/O geometry.
+//! [`VersionState`] — plan, scratch pool, staging buffers, stats, and
+//! breaker for one deployment generation — behind an
+//! `RwLock<Arc<VersionState>>` ([`Server::swap`] is the writer). A
+//! drainer pins the current `Arc` at the moment it takes its requests, so
+//! a swap never pauses traffic and never drops a request: in-flight
+//! drains finish on the version they pinned while new drains pick up the
+//! new one, and each response (and its stats) is attributed to exactly
+//! the version that executed it — still bit-identical to a solo forward
+//! on that version. Retired versions stay resident for their stats and as
+//! rollback targets ([`Server::stats_by_version`]); swaps are rare
+//! control-plane events, serialized by the slot's install lock, and
+//! validated for monotonically increasing versions (past *every* version
+//! ever installed, so a rolled-back generation cannot be reinstalled
+//! under the same number) and identical I/O geometry.
 //!
 //! ## Execution and the bit-exactness contract
 //!
 //! A drained micro-batch is gathered into a preallocated per-version
 //! buffer and driven through [`ExecPlan::run_rows`], which executes every
 //! row at batch 1 with per-request requantization isolation. Consequence:
-//! each response is **bit-identical to a solo `Backend::Planned` forward**
-//! of that request on the version that served it, independent of arrival
-//! order, batch composition, thread count, or concurrent swaps
+//! each *accepted* response is **bit-identical to a solo
+//! `Backend::Planned` forward** of that request on the version that
+//! served it, independent of arrival order, batch composition, thread
+//! count, concurrent swaps, or any amount of shedding/sweeping around it
 //! (`tests/serve_conformance.rs`, `tests/serve_concurrency.rs`,
-//! `tests/hot_swap.rs`).
+//! `tests/hot_swap.rs`, `tests/chaos.rs`).
 //!
 //! ## Scratch-pool lifecycle
 //!
@@ -49,34 +81,100 @@
 //! per-version [`ScratchPool`], filled *eagerly* when the version is
 //! installed (`Server::new` and `Server::swap` both create exactly
 //! `workers` row scratches per version): a drain checks out up to
-//! `workers.min(rows)` of them and returns every one afterwards, and
-//! nothing ever creates more. The pool plus the preallocated
-//! gather/scatter buffers are therefore a fixed set of allocations from
-//! install onward — serving performs zero steady-state growth, asserted
-//! via [`Server::pool_fingerprints`]. (Eager beats lazy here for
-//! determinism: a lazily-warmed pool's final size would depend on whether
-//! early traffic ever happened to coalesce a full-width batch.)
+//! `workers.min(rows)` of them and returns every one afterwards — also on
+//! the panic path, where the unwind is caught before it can leak a
+//! checkout — and nothing ever creates more. The pool plus the
+//! preallocated gather/scatter buffers are therefore a fixed set of
+//! allocations from install onward — serving performs zero steady-state
+//! growth, asserted via [`Server::pool_fingerprints`]. (Eager beats lazy
+//! here for determinism: a lazily-warmed pool's final size would depend
+//! on whether early traffic ever happened to coalesce a full-width
+//! batch.)
 //!
 //! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
+//! [`ModelStats`]: super::ModelStats
 
 use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::inference::ScratchPool;
-use crate::util::pool;
+use crate::util::{fault, pool};
 
+use super::health::{Breaker, Health, ServeError};
 use super::registry::{self, ModelEntry, ModelKey, ModelSource, RegisterOpts, Registry};
 use super::stats::ModelStats;
 
-/// Server-wide tuning knobs.
+/// Consecutive failed micro-batches before a version quarantines, when
+/// [`ServeConfig::quarantine_after`] is left at 0.
+pub const DEFAULT_QUARANTINE_AFTER: u32 = 3;
+
+/// Server-wide tuning knobs (builder-style, like `RegisterOpts`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeConfig {
     /// Row-parallel workers per micro-batch, which is also each version's
     /// scratch-pool bound. 0 (the default) resolves to
     /// `util::pool::default_workers()` (`SYMOG_WORKERS` honored).
     pub workers: usize,
+    /// Admission bound: a request arriving while a slot already has this
+    /// many queued is refused with [`ServeError::Shed`]. 0 (the default)
+    /// means unbounded — the pre-hardening behavior.
+    pub queue_depth: usize,
+    /// Consecutive failed micro-batches that trip a version's circuit
+    /// breaker into quarantine (triggering rollback to last-good). 0 (the
+    /// default) resolves to [`DEFAULT_QUARANTINE_AFTER`].
+    pub quarantine_after: u32,
+}
+
+impl ServeConfig {
+    pub fn new() -> ServeConfig {
+        ServeConfig::default()
+    }
+
+    pub fn workers(mut self, n: usize) -> ServeConfig {
+        self.workers = n;
+        self
+    }
+
+    pub fn queue_depth(mut self, n: usize) -> ServeConfig {
+        self.queue_depth = n;
+        self
+    }
+
+    pub fn quarantine_after(mut self, n: u32) -> ServeConfig {
+        self.quarantine_after = n;
+        self
+    }
+}
+
+/// Per-request options for [`Server::infer_with`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InferOpts {
+    /// Latest instant at which this request may still *start* executing.
+    /// A drainer sweeps expired requests out of its micro-batch before
+    /// running it; they resolve with [`ServeError::DeadlineExceeded`] and
+    /// never touch the engine. `None` (the default) never expires.
+    pub deadline: Option<Instant>,
+}
+
+impl InferOpts {
+    pub fn new() -> InferOpts {
+        InferOpts::default()
+    }
+
+    /// Absolute deadline.
+    pub fn deadline_at(mut self, t: Instant) -> InferOpts {
+        self.deadline = Some(t);
+        self
+    }
+
+    /// Deadline `d` from now.
+    pub fn deadline_in(self, d: Duration) -> InferOpts {
+        self.deadline_at(Instant::now() + d)
+    }
 }
 
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -87,16 +185,27 @@ fn rlock<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
     l.read().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Best-effort human rendering of a caught panic payload.
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Response rendezvous for one request. Filled exactly once by whichever
-/// caller drains the batch containing the request; carries the serving
-/// version the drain was pinned to.
+/// caller drains the batch containing the request (or sweeps/refuses it);
+/// carries the serving version the drain was pinned to.
 #[derive(Default)]
 struct Slot {
-    done: Mutex<Option<Result<(Vec<f32>, u32), String>>>,
+    done: Mutex<Option<Result<(Vec<f32>, u32), ServeError>>>,
 }
 
 impl Slot {
-    fn fill(&self, r: Result<(Vec<f32>, u32), String>) {
+    fn fill(&self, r: Result<(Vec<f32>, u32), ServeError>) {
         *lock(&self.done) = Some(r);
     }
 
@@ -104,7 +213,7 @@ impl Slot {
         lock(&self.done).is_some()
     }
 
-    fn take(&self) -> Option<Result<(Vec<f32>, u32), String>> {
+    fn take(&self) -> Option<Result<(Vec<f32>, u32), ServeError>> {
         lock(&self.done).take()
     }
 }
@@ -112,6 +221,7 @@ impl Slot {
 struct Request {
     image: Vec<f32>,
     slot: Arc<Slot>,
+    deadline: Option<Instant>,
 }
 
 struct QueueState {
@@ -128,13 +238,15 @@ struct ExecBufs {
 }
 
 /// Everything needed to serve one deployment generation of a model:
-/// compiled plan, scratch pool, staging buffers, and its own stats.
+/// compiled plan, scratch pool, staging buffers, stats, and the circuit
+/// breaker that tracks its health.
 struct VersionState {
     version: u32,
     entry: ModelEntry,
     pool: ScratchPool,
     bufs: Mutex<ExecBufs>,
     stats: Mutex<ModelStats>,
+    breaker: Breaker,
     workers: usize,
 }
 
@@ -143,7 +255,12 @@ impl VersionState {
     /// pool seeded eagerly *through* checkout so the scratches count
     /// toward the pool's lifetime-creation bound — the "nothing ever
     /// creates more" contract holds by construction.
-    fn install(version: u32, entry: ModelEntry, workers: usize) -> Arc<VersionState> {
+    fn install(
+        version: u32,
+        entry: ModelEntry,
+        workers: usize,
+        quarantine_after: u32,
+    ) -> Arc<VersionState> {
         let vs = VersionState {
             version,
             pool: ScratchPool::new(workers),
@@ -152,6 +269,7 @@ impl VersionState {
                 logits: vec![0f32; entry.max_batch * entry.out_per_img],
             }),
             stats: Mutex::new(ModelStats::default()),
+            breaker: Breaker::new(quarantine_after),
             workers,
             entry,
         };
@@ -161,9 +279,29 @@ impl VersionState {
         Arc::new(vs)
     }
 
+    fn health(&self) -> Health {
+        self.breaker.health()
+    }
+
+    /// Fail every request of a batch with one typed error, bill the
+    /// failures, and advance the breaker. Returns true iff this failure
+    /// tripped the version into quarantine (the caller rolls back).
+    fn fail_batch(&self, reqs: &[&Request], msg: String) -> bool {
+        let err = ServeError::BatchPanicked(msg);
+        for r in reqs {
+            r.slot.fill(Err(err.clone()));
+        }
+        lock(&self.stats).failures += reqs.len() as u64;
+        self.breaker.record_failure()
+    }
+
     /// Execute one drained micro-batch: gather rows, run with per-request
     /// isolation, scatter logits into the response slots, record stats.
-    fn run_batch(&self, reqs: &[Request]) {
+    /// Never unwinds: an engine panic is caught *here* (scratches still
+    /// return to the pool, staging stays consistent) and resolves the
+    /// whole batch with [`ServeError::BatchPanicked`]. Returns true iff
+    /// the failure tripped this version's breaker.
+    fn run_batch(&self, reqs: &[&Request]) -> bool {
         let k = reqs.len();
         let (ie, oe) = (self.entry.in_elems, self.entry.out_per_img);
         let want = self.workers.min(k);
@@ -178,65 +316,102 @@ impl VersionState {
             bufs.gather[i * ie..(i + 1) * ie].copy_from_slice(&r.image);
         }
         let ExecBufs { gather, logits } = &mut *bufs;
-        match self.entry.plan.run_rows(
-            &gather[..k * ie],
-            k,
-            &mut scratches,
-            &mut logits[..k * oe],
-        ) {
-            Ok(()) => {
+        // the unwind boundary sits between scratch checkout and return, so
+        // a poison batch (or an injected drain fault) can never leak pool
+        // capacity or wedge the staging buffers
+        let run = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            if fault::fire(fault::SERVE_DRAIN_PANIC) {
+                panic!("injected fault: {}", fault::SERVE_DRAIN_PANIC);
+            }
+            if fault::fire(fault::SERVE_DRAIN_FAIL) {
+                bail!("injected fault: {}", fault::SERVE_DRAIN_FAIL);
+            }
+            self.entry.plan.run_rows(&gather[..k * ie], k, &mut scratches, &mut logits[..k * oe])
+        }));
+        let tripped = match run {
+            Ok(Ok(())) => {
                 for (i, r) in reqs.iter().enumerate() {
                     r.slot.fill(Ok((logits[i * oe..(i + 1) * oe].to_vec(), self.version)));
                 }
                 let counts = self.entry.plan.op_counts(k);
                 lock(&self.stats).record_batch(k as u64, self.entry.max_batch as u64, &counts);
+                self.breaker.record_success();
+                false
             }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for r in reqs {
-                    r.slot.fill(Err(msg.clone()));
-                }
-            }
-        }
+            Ok(Err(e)) => self.fail_batch(reqs, format!("{e:#}")),
+            Err(p) => self.fail_batch(reqs, panic_message(p)),
+        };
         drop(bufs);
         self.pool.put_all(scratches);
+        tripped
     }
 }
 
 /// One `(name, n_bits)` serving slot: the request queue (shared across
 /// versions — a swap never disturbs queued work) and the Arc-swapped
-/// current version. `versions` doubles as the swap install lock and the
-/// stats-retaining version history.
+/// current version. `versions` doubles as the swap install lock, the
+/// stats-retaining version history, and the rollback-target candidate
+/// list.
 struct SlotState {
     q: Mutex<QueueState>,
     cv: Condvar,
     cur: RwLock<Arc<VersionState>>,
     versions: Mutex<Vec<Arc<VersionState>>>,
     workers: usize,
+    queue_depth: usize,
+    quarantine_after: u32,
 }
 
 impl SlotState {
     fn cur(&self) -> Arc<VersionState> {
         Arc::clone(&rlock(&self.cur))
     }
+
+    /// Reroute the slot away from `failed` (already quarantined) to the
+    /// newest non-quarantined version in its history. No-op when `failed`
+    /// is no longer serving (a concurrent swap beat us) or no healthy
+    /// target exists — in the latter case the slot keeps answering with
+    /// [`ServeError::VersionQuarantined`] until an operator swaps in a
+    /// fixed version. Returns the version now serving, if rerouted.
+    fn rollback_from(&self, failed: &Arc<VersionState>) -> Option<u32> {
+        let versions = lock(&self.versions);
+        let mut cur = self.cur.write().unwrap_or_else(|e| e.into_inner());
+        if !Arc::ptr_eq(&cur, failed) {
+            return None;
+        }
+        let target = versions
+            .iter()
+            .rev()
+            .find(|v| !Arc::ptr_eq(v, failed) && v.health() != Health::Quarantined)?;
+        *cur = Arc::clone(target);
+        Some(target.version)
+    }
 }
 
 /// Post-drain cleanup, run on both normal exit and unwind: answer any
 /// request the drain left unanswered, release the drain flag, and wake
-/// every waiter. Without this a panic inside a micro-batch would leave
-/// `draining == true` forever, deadlocking all present and future callers
-/// of the model.
+/// every waiter. `run_batch` catches engine panics itself, so this firing
+/// on the unwind path means something outside the batch broke — the
+/// leftovers are still billed as failures so the counter identity holds.
 struct DrainGuard<'a> {
     m: &'a SlotState,
     reqs: &'a [Request],
+    vs: &'a Arc<VersionState>,
 }
 
 impl Drop for DrainGuard<'_> {
     fn drop(&mut self) {
+        let mut leaked = 0u64;
         for r in self.reqs {
             if !r.slot.is_done() {
-                r.slot.fill(Err("drain panicked while executing this batch".to_string()));
+                r.slot.fill(Err(ServeError::BatchPanicked(
+                    "drain panicked while executing this batch".to_string(),
+                )));
+                leaked += 1;
             }
+        }
+        if leaked > 0 {
+            lock(&self.vs.stats).failures += leaked;
         }
         lock(&self.m.q).draining = false;
         self.m.cv.notify_all();
@@ -244,7 +419,7 @@ impl Drop for DrainGuard<'_> {
 }
 
 /// Multi-model batched inference server (see the module docs for the
-/// queue, execution, pooling, and hot-swap contracts).
+/// queue, execution, pooling, failure-domain, and hot-swap contracts).
 pub struct Server {
     models: BTreeMap<(String, u32), SlotState>,
 }
@@ -259,17 +434,24 @@ impl Server {
             // SYMOG_WORKERS (see the cap rationale in util::pool)
             cfg.workers.min(pool::ENV_WORKERS_CAP)
         };
+        let quarantine_after = if cfg.quarantine_after == 0 {
+            DEFAULT_QUARANTINE_AFTER
+        } else {
+            cfg.quarantine_after
+        };
         let models = registry
             .into_entries()
             .into_iter()
             .map(|(key, entry)| {
-                let vs = VersionState::install(key.version, entry, workers);
+                let vs = VersionState::install(key.version, entry, workers, quarantine_after);
                 let state = SlotState {
                     q: Mutex::new(QueueState { pending: VecDeque::new(), draining: false }),
                     cv: Condvar::new(),
                     versions: Mutex::new(vec![Arc::clone(&vs)]),
                     cur: RwLock::new(vs),
                     workers,
+                    queue_depth: cfg.queue_depth,
+                    quarantine_after,
                 };
                 (key.slot(), state)
             })
@@ -286,10 +468,13 @@ impl Server {
     /// Install a new version into `key`'s slot atomically: queued and
     /// in-flight requests keep draining (on the old version if their drain
     /// already pinned it), new drains serve the new version. Validated:
-    /// the slot must exist, the bit width and I/O geometry must match, and
-    /// the version must be strictly newer than the one serving. Unpinned
-    /// in-code sources get `current + 1`; artifacts bring their own
-    /// version. Returns the installed key.
+    /// the slot must exist, the bit width and I/O geometry must match, the
+    /// version must be strictly newer than *every* version the slot has
+    /// ever installed (so rollback can never be undone by reinstalling the
+    /// same number), and the incoming plan must survive a probe row —
+    /// a version that cannot execute is refused before it can serve.
+    /// Unpinned in-code sources get `max installed + 1`; artifacts bring
+    /// their own version. Returns the installed key.
     pub fn swap(
         &self,
         key: &ModelKey,
@@ -299,8 +484,8 @@ impl Server {
         let slot = self.slot(key)?;
         // install lock: swaps are serialized per slot; serving never takes it
         let mut versions = lock(&slot.versions);
-        let cur = slot.cur();
-        let (new_key, entry) = registry::build_entry(&key.name, &source, opts, cur.version + 1)?;
+        let max_v = versions.iter().map(|v| v.version).max().unwrap_or(0);
+        let (new_key, entry) = registry::build_entry(&key.name, &source, opts, max_v + 1)?;
         ensure!(
             new_key.n_bits == key.n_bits,
             "{}: swap cannot change the bit width (slot is w{}, source is w{})",
@@ -309,10 +494,10 @@ impl Server {
             new_key.n_bits
         );
         ensure!(
-            new_key.version > cur.version,
-            "{new_key}: swap version must exceed the serving version v{}",
-            cur.version
+            new_key.version > max_v,
+            "{new_key}: swap version must exceed every installed version (max v{max_v})"
         );
+        let cur = slot.cur();
         ensure!(
             entry.in_elems == cur.entry.in_elems && entry.out_per_img == cur.entry.out_per_img,
             "{new_key}: swap cannot change model geometry ({}->{} in, {}->{} out)",
@@ -321,10 +506,72 @@ impl Server {
             cur.entry.out_per_img,
             entry.out_per_img
         );
-        let vs = VersionState::install(new_key.version, entry, slot.workers);
+        // probe row: one zero-image forward through the incoming plan,
+        // with panics contained — a version that cannot execute a single
+        // row must never become the serving version
+        let probed = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            if fault::fire(fault::SERVE_SWAP_PROBE) {
+                bail!("injected fault: {}", fault::SERVE_SWAP_PROBE);
+            }
+            let mut scratches = vec![entry.plan.scratch_for(1)];
+            let mut out = vec![0f32; entry.out_per_img];
+            entry.plan.run_rows(&vec![0f32; entry.in_elems], 1, &mut scratches, &mut out)
+        }));
+        match probed {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                return Err(e.context(format!(
+                    "{new_key}: probe row failed — refusing to install, v{} keeps serving",
+                    cur.version
+                )))
+            }
+            Err(p) => bail!(
+                "{new_key}: probe row panicked ({}) — refusing to install, v{} keeps serving",
+                panic_message(p),
+                cur.version
+            ),
+        }
+        let vs = VersionState::install(new_key.version, entry, slot.workers, slot.quarantine_after);
         *slot.cur.write().unwrap_or_else(|e| e.into_inner()) = Arc::clone(&vs);
         versions.push(vs);
         Ok(new_key)
+    }
+
+    /// Manually quarantine the serving version and reroute the slot to
+    /// its newest non-quarantined predecessor (the same path a tripped
+    /// circuit breaker takes automatically). Fails — leaving the slot
+    /// serving untouched — when no rollback target exists. Returns the
+    /// version serving after the rollback.
+    pub fn rollback(&self, key: &ModelKey) -> Result<u32> {
+        let slot = self.slot(key)?;
+        let cur = slot.cur();
+        {
+            // refuse before quarantining: a rollback that would strand the
+            // slot with zero healthy versions must leave it serving
+            let versions = lock(&slot.versions);
+            ensure!(
+                versions
+                    .iter()
+                    .any(|v| !Arc::ptr_eq(v, &cur) && v.health() != Health::Quarantined),
+                "{key}: no last-good version to roll back to from v{}",
+                cur.version
+            );
+        }
+        cur.breaker.quarantine();
+        // None here means a concurrent swap replaced `cur` between the
+        // check and the reroute — the slot is already on a newer version
+        Ok(slot.rollback_from(&cur).unwrap_or_else(|| slot.cur().version))
+    }
+
+    /// Health of the currently serving version.
+    pub fn health(&self, key: &ModelKey) -> Result<Health> {
+        Ok(self.slot(key)?.cur().health())
+    }
+
+    /// Per-version health in install order (the companion of
+    /// [`Server::stats_by_version`]).
+    pub fn health_by_version(&self, key: &ModelKey) -> Result<Vec<(u32, Health)>> {
+        Ok(lock(&self.slot(key)?.versions).iter().map(|vs| (vs.version, vs.health())).collect())
     }
 
     /// Registered keys at their *currently serving* versions, in
@@ -357,7 +604,8 @@ impl Server {
     }
 
     /// Per-version stats in install order. Counters partition exactly:
-    /// every request is billed to precisely the version that executed it.
+    /// every request (and every shed, sweep, and failure) is billed to
+    /// precisely the version it was refused or executed under.
     pub fn stats_by_version(&self, key: &ModelKey) -> Result<Vec<(u32, ModelStats)>> {
         Ok(lock(&self.slot(key)?.versions)
             .iter()
@@ -383,31 +631,63 @@ impl Server {
     }
 
     /// Classify one image, blocking until its logits are ready. See
-    /// [`Server::infer_versioned`]; this drops the version tag.
+    /// [`Server::infer_with`]; this drops the version tag.
     pub fn infer(&self, key: &ModelKey, image: &[f32]) -> Result<Vec<f32>> {
         self.infer_versioned(key, image).map(|(logits, _)| logits)
     }
 
-    /// Classify one image, blocking until its logits are ready. The call
-    /// enqueues the request and then *participates*: whichever caller
-    /// finds the queue ready first drains and executes the micro-batch
-    /// containing it (leader/follower — no dedicated executor thread, no
-    /// timer). Returns the logits plus the version that served them —
-    /// bit-identical to a solo planned forward on that version. The key's
+    /// [`Server::infer_with`] with default options (no deadline).
+    pub fn infer_versioned(&self, key: &ModelKey, image: &[f32]) -> Result<(Vec<f32>, u32)> {
+        self.infer_with(key, image, &InferOpts::default())
+    }
+
+    /// Classify one image, blocking until its terminal outcome is ready.
+    /// The call enqueues the request and then *participates*: whichever
+    /// caller finds the queue ready first drains and executes the
+    /// micro-batch containing it (leader/follower — no dedicated executor
+    /// thread, no timer). Returns the logits plus the version that served
+    /// them — bit-identical to a solo planned forward on that version —
+    /// or an error whose source downcasts to [`ServeError`] (shed /
+    /// deadline / batch failure / quarantine / bad request). The key's
     /// own `version` field is ignored for routing: a slot always serves
     /// its current version.
-    pub fn infer_versioned(&self, key: &ModelKey, image: &[f32]) -> Result<(Vec<f32>, u32)> {
+    pub fn infer_with(
+        &self,
+        key: &ModelKey,
+        image: &[f32],
+        opts: &InferOpts,
+    ) -> Result<(Vec<f32>, u32)> {
         let m = self.slot(key)?;
-        let in_elems = m.cur().entry.in_elems;
-        ensure!(
-            image.len() == in_elems,
-            "{key}: image has {} elements, model expects {in_elems}",
-            image.len()
-        );
+        let vs0 = m.cur();
+        let fail = |e: ServeError| anyhow::Error::new(e).context(key.to_string());
+        if vs0.health() == Health::Quarantined {
+            // quarantined with no rollback target: fail fast, and keep the
+            // counter identity — the refusal is billed as a failure
+            lock(&vs0.stats).failures += 1;
+            return Err(fail(ServeError::VersionQuarantined(vs0.version)));
+        }
+        let in_elems = vs0.entry.in_elems;
+        if image.len() != in_elems {
+            return Err(fail(ServeError::BadRequest(format!(
+                "image has {} elements, model expects {in_elems}",
+                image.len()
+            ))));
+        }
         let slot = Arc::new(Slot::default());
         {
             let mut q = lock(&m.q);
-            q.pending.push_back(Request { image: image.to_vec(), slot: Arc::clone(&slot) });
+            // admission control: shed at enqueue, not at drain — a full
+            // queue refuses new work instead of stretching everyone's tail
+            if m.queue_depth > 0 && q.pending.len() >= m.queue_depth {
+                drop(q);
+                lock(&vs0.stats).sheds += 1;
+                return Err(fail(ServeError::Shed { depth: m.queue_depth }));
+            }
+            q.pending.push_back(Request {
+                image: image.to_vec(),
+                slot: Arc::clone(&slot),
+                deadline: opts.deadline,
+            });
         }
         loop {
             // decide under the queue lock: return, drain, or wait. The
@@ -433,16 +713,51 @@ impl Server {
             match drained {
                 None => {
                     let res = slot.take().expect("slot checked done under the lock");
-                    return res.map_err(|msg| anyhow!("{key}: {msg}"));
+                    return res.map_err(fail);
                 }
                 Some((reqs, vs)) => {
-                    // the guard also covers unwinding: if the drain panics
-                    // (kernel bug mid-batch), fail this batch — unfilled
-                    // slots get an error, the flag resets, followers wake —
-                    // instead of wedging the model behind draining == true
-                    let guard = DrainGuard { m, reqs: &reqs };
-                    vs.run_batch(&reqs);
+                    // the guard also covers unwinding: if anything below
+                    // panics, unanswered slots get a typed error, the flag
+                    // resets, followers wake — instead of wedging the
+                    // model behind draining == true
+                    let guard = DrainGuard { m, reqs: &reqs, vs: &vs };
+                    // deadline sweep: requests already expired when the
+                    // drain forms its batch are never executed
+                    let now = Instant::now();
+                    let mut live: Vec<&Request> = Vec::with_capacity(reqs.len());
+                    let mut expired = 0u64;
+                    for r in &reqs {
+                        if r.deadline.is_some_and(|d| d <= now) {
+                            r.slot.fill(Err(ServeError::DeadlineExceeded));
+                            expired += 1;
+                        } else {
+                            live.push(r);
+                        }
+                    }
+                    if expired > 0 {
+                        lock(&vs.stats).timeouts += expired;
+                    }
+                    let tripped = if live.is_empty() {
+                        false
+                    } else if vs.health() == Health::Quarantined {
+                        // the breaker tripped between pinning and running
+                        // (or no rollback target exists): resolve, don't run
+                        for r in &live {
+                            r.slot.fill(Err(ServeError::VersionQuarantined(vs.version)));
+                        }
+                        lock(&vs.stats).failures += live.len() as u64;
+                        false
+                    } else {
+                        vs.run_batch(&live)
+                    };
                     drop(guard);
+                    if tripped {
+                        // automatic rollback: the slot reroutes to its
+                        // newest non-quarantined version; future drains
+                        // (including ours, if our request is still queued)
+                        // pin the rolled-back version
+                        m.rollback_from(&vs);
+                    }
                     // loop back: our own request was either in this batch
                     // or is now closer to the queue front
                 }
@@ -468,7 +783,7 @@ mod tests {
         let key = reg
             .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(4))
             .unwrap();
-        (Server::new(reg, ServeConfig { workers: 2 }), key, solo, elems)
+        (Server::new(reg, ServeConfig::new().workers(2)), key, solo, elems)
     }
 
     #[test]
@@ -487,6 +802,8 @@ mod tests {
         // a lone caller never queues behind itself: every batch is size 1
         assert_eq!(stats.batches, 5);
         assert_eq!(stats.max_occupancy, 1);
+        assert_eq!((stats.sheds, stats.timeouts, stats.failures), (0, 0, 0));
+        assert_eq!(server.health(&key).unwrap(), Health::Ready);
         let per_row = solo.cost_report(1).unwrap().counts;
         let mut want_counts = crate::inference::OpCounts::default();
         for _ in 0..5 {
@@ -502,19 +819,25 @@ mod tests {
         let missing = ModelKey::new("nope", 2);
         assert!(server.infer(&missing, &img).is_err());
         assert!(server.stats(&missing).is_err());
-        assert!(server.infer(&key, &img[..elems - 1]).is_err());
+        let short = server.infer(&key, &img[..elems - 1]).unwrap_err();
+        match short.downcast_ref::<ServeError>() {
+            Some(ServeError::BadRequest(msg)) => {
+                assert!(msg.contains("model expects"), "{msg}")
+            }
+            other => panic!("geometry rejection must be typed BadRequest, got {other:?}"),
+        }
         // the key's version field does not affect routing
         let stale = ModelKey::versioned(key.name.clone(), key.n_bits, 99);
         assert!(server.infer(&stale, &img).is_ok());
     }
 
     #[test]
-    fn swap_validates_version_and_geometry() {
+    fn swap_validates_version_geometry_and_probes() {
         let (server, key, _, _) = lenet_server(2);
         let mut rng = Rng::new(0x5F);
         let (man, ck) = models::lenet5ish(&mut rng, 2);
         let next = IntModel::build(&man, &ck).unwrap();
-        // unpinned in-code swap: current + 1
+        // unpinned in-code swap: max installed + 1
         let opts = RegisterOpts::new().max_batch(4);
         let k2 = server.swap(&key, ModelSource::InCode(&next), &opts).unwrap();
         assert_eq!(k2.version, 2);
@@ -529,5 +852,34 @@ mod tests {
         // unknown slots are rejected
         let missing = ModelKey::new("nope", 2);
         assert!(server.swap(&missing, ModelSource::InCode(&next), &RegisterOpts::new()).is_err());
+    }
+
+    #[test]
+    fn expired_deadline_is_swept_not_executed() {
+        let (server, key, _, elems) = lenet_server(2);
+        let img = vec![0f32; elems];
+        let past = InferOpts::new().deadline_at(Instant::now() - Duration::from_secs(1));
+        let err = server.infer_with(&key, &img, &past).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ServeError>(),
+            Some(&ServeError::DeadlineExceeded),
+            "{err:#}"
+        );
+        let stats = server.stats(&key).unwrap();
+        assert_eq!((stats.requests, stats.timeouts), (0, 1), "swept request must never execute");
+        // a generous deadline serves normally
+        let soon = InferOpts::new().deadline_in(Duration::from_secs(3600));
+        server.infer_with(&key, &img, &soon).unwrap();
+        assert_eq!(server.stats(&key).unwrap().requests, 1);
+    }
+
+    #[test]
+    fn manual_rollback_requires_a_last_good_version() {
+        let (server, key, _, elems) = lenet_server(2);
+        // v1 is the only version: rollback refuses and the slot still serves
+        let err = server.rollback(&key).unwrap_err().to_string();
+        assert!(err.contains("no last-good version"), "{err}");
+        assert!(server.infer(&key, &vec![0f32; elems]).is_ok());
+        assert_eq!(server.health(&key).unwrap(), Health::Ready);
     }
 }

@@ -1,10 +1,12 @@
 //! Per-model running serving statistics.
 //!
-//! Counters are exact (the concurrency test asserts `requests` sums to
-//! precisely the number of `infer` calls) and op accounting is analytic:
-//! each micro-batch bills `ExecPlan::op_counts` for its row count, so the
-//! totals are a pure function of traffic — no instrumentation on the hot
-//! path beyond one mutex-guarded add per batch.
+//! Counters are exact — the chaos and concurrency suites assert the
+//! terminal-outcome identity `requests + sheds + timeouts + failures`
+//! equals precisely the number of admitted `infer` calls, per version —
+//! and op accounting is analytic: each micro-batch bills
+//! `ExecPlan::op_counts` for its row count, so the totals are a pure
+//! function of traffic — no instrumentation on the hot path beyond one
+//! mutex-guarded add per batch.
 
 use crate::inference::OpCounts;
 
@@ -21,6 +23,13 @@ pub struct ModelStats {
     pub full_batches: u64,
     /// largest micro-batch occupancy seen
     pub max_occupancy: u64,
+    /// requests refused at enqueue by admission control (queue at depth)
+    pub sheds: u64,
+    /// requests swept at drain time with an expired deadline (never run)
+    pub timeouts: u64,
+    /// requests that reached a terminal failure: batch panic/engine
+    /// error, or refusal because the version is quarantined
+    pub failures: u64,
     /// analytic integer-op totals over all served requests
     pub op_counts: OpCounts,
 }
@@ -40,6 +49,9 @@ impl ModelStats {
         self.batches += other.batches;
         self.full_batches += other.full_batches;
         self.max_occupancy = self.max_occupancy.max(other.max_occupancy);
+        self.sheds += other.sheds;
+        self.timeouts += other.timeouts;
+        self.failures += other.failures;
         self.op_counts.merge(&other.op_counts);
     }
 
@@ -53,9 +65,10 @@ impl ModelStats {
         self.op_counts.merge(counts);
     }
 
-    /// One-line human summary for drivers/benches.
+    /// One-line human summary for drivers/benches. The failure-domain
+    /// tail appears only when something was refused, swept, or failed.
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} requests in {} batches (mean occupancy {:.2}, max {}, {} full) — \
              {} adds, {} mults, {} shifts",
             self.requests,
@@ -66,7 +79,14 @@ impl ModelStats {
             self.op_counts.acc_adds,
             self.op_counts.int_mults,
             self.op_counts.shifts,
-        )
+        );
+        if self.sheds + self.timeouts + self.failures > 0 {
+            s.push_str(&format!(
+                " — {} shed, {} timed out, {} failed",
+                self.sheds, self.timeouts, self.failures
+            ));
+        }
+        s
     }
 }
 
@@ -108,5 +128,17 @@ mod tests {
         let before = a.clone();
         a.merge(&ModelStats::default());
         assert_eq!(a, before);
+    }
+
+    #[test]
+    fn failure_counters_merge_and_render() {
+        let mut a = ModelStats { sheds: 2, timeouts: 1, failures: 3, ..ModelStats::default() };
+        let b = ModelStats { sheds: 5, timeouts: 0, failures: 1, ..ModelStats::default() };
+        a.merge(&b);
+        assert_eq!((a.sheds, a.timeouts, a.failures), (7, 1, 4));
+        assert!(a.render().contains("7 shed, 1 timed out, 4 failed"));
+        // a clean snapshot keeps the classic one-line shape
+        let clean = ModelStats::default();
+        assert!(!clean.render().contains("shed"));
     }
 }

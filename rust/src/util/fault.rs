@@ -1,0 +1,256 @@
+//! Deterministic, seeded fault injection for the chaos suites.
+//!
+//! A fault **site** is a named point in production code (the serve drain
+//! path, the artifact reader, the swap path) that asks the registry
+//! "should I fail here?" via [`fire`]. Each armed site owns its own
+//! xoshiro256++ stream ([`crate::util::rng::Rng`]) and a probability, so
+//! a fault *schedule* is reproducible from `(site, prob, seed)` — the
+//! chaos suites pin three seeds in CI and replay the same storm every
+//! run.
+//!
+//! Arming is either programmatic ([`arm`], [`arm_from_spec`]) or via the
+//! `SYMOG_FAULTS` environment variable, parsed once on first use:
+//!
+//! ```text
+//! SYMOG_FAULTS=serve.drain.panic:0.2:7,artifact.payload.corrupt:1:3
+//! #            site              prob seed
+//! ```
+//!
+//! **Zero-cost when compiled out.** The real registry exists only under
+//! `cfg(any(test, feature = "fault-injection"))`; release builds without
+//! the feature get an `#[inline(always)] fn fire(..) -> false` stub, so
+//! every `if fault::fire(SITE) { ... }` hook folds away entirely — the
+//! hardened serving path carries no probe overhead in production (the
+//! `serve_throughput` bench floors gate this).
+//!
+//! Site names are declared here (not stringly scattered) so the set of
+//! injectable failure domains is auditable in one place.
+
+/// Drainer panics mid-batch, after scratch checkout (exercises panic
+/// quarantine + scratch-return-on-unwind in `VersionState::run_batch`).
+pub const SERVE_DRAIN_PANIC: &str = "serve.drain.panic";
+/// `run_rows` reports an injected engine error (the non-unwinding batch
+/// failure path; same typed outcome, different recovery route).
+pub const SERVE_DRAIN_FAIL: &str = "serve.drain.fail";
+/// The pre-install probe row of `Server::swap` fails, so the incoming
+/// version is refused and the serving version is untouched.
+pub const SERVE_SWAP_PROBE: &str = "serve.swap.probe";
+/// One payload byte flips between `artifact::load`'s CRC validation and
+/// planning — the re-verify pass must catch it (TOCTOU hardening).
+pub const ARTIFACT_PAYLOAD_CORRUPT: &str = "artifact.payload.corrupt";
+
+/// Whether this build carries the real fault registry. Drivers use this
+/// to reject `--faults` flags on builds where arming would be a no-op.
+pub const ENABLED: bool = cfg!(any(test, feature = "fault-injection"));
+
+#[cfg(any(test, feature = "fault-injection"))]
+mod enabled {
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::util::rng::Rng;
+
+    struct Site {
+        prob: f64,
+        rng: Rng,
+        draws: u64,
+        fired: u64,
+    }
+
+    /// Fast-path gate: false whenever the registry is empty, so disarmed
+    /// test runs pay one relaxed load per site visit and nothing else.
+    static ACTIVE: AtomicBool = AtomicBool::new(false);
+    static ENV_INIT: Once = Once::new();
+
+    fn registry() -> &'static Mutex<BTreeMap<String, Site>> {
+        static REGISTRY: OnceLock<Mutex<BTreeMap<String, Site>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+    }
+
+    fn lock() -> MutexGuard<'static, BTreeMap<String, Site>> {
+        registry().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Parse `SYMOG_FAULTS` exactly once. A malformed spec panics: a chaos
+    /// run that silently ignored its schedule would "pass" by testing
+    /// nothing.
+    fn init_env() {
+        ENV_INIT.call_once(|| {
+            if let Ok(spec) = std::env::var("SYMOG_FAULTS") {
+                if !spec.trim().is_empty() {
+                    arm_from_spec(&spec).expect("invalid SYMOG_FAULTS");
+                }
+            }
+        });
+    }
+
+    /// Should the named site fail right now? Draws from the site's seeded
+    /// stream; unarmed sites never fire. Counts every draw (see [`stats`]).
+    pub fn fire(site: &str) -> bool {
+        init_env();
+        if !ACTIVE.load(Ordering::Relaxed) {
+            return false;
+        }
+        let mut reg = lock();
+        match reg.get_mut(site) {
+            Some(s) => {
+                s.draws += 1;
+                // prob 1.0 always fires: f64() is uniform on [0, 1)
+                let hit = s.rng.f64() < s.prob;
+                if hit {
+                    s.fired += 1;
+                }
+                hit
+            }
+            None => false,
+        }
+    }
+
+    /// Arm (or re-arm, resetting the stream and counters) one site.
+    pub fn arm(site: &str, prob: f64, seed: u64) {
+        assert!((0.0..=1.0).contains(&prob), "fault probability must be in [0, 1], got {prob}");
+        let mut reg = lock();
+        reg.insert(site.to_string(), Site { prob, rng: Rng::new(seed), draws: 0, fired: 0 });
+        ACTIVE.store(true, Ordering::Relaxed);
+    }
+
+    /// Disarm one site (its counters are discarded).
+    pub fn disarm(site: &str) {
+        let mut reg = lock();
+        reg.remove(site);
+        if reg.is_empty() {
+            ACTIVE.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Disarm every site — chaos tests bracket themselves with this so
+    /// schedules never leak across tests sharing the process.
+    pub fn disarm_all() {
+        let mut reg = lock();
+        reg.clear();
+        ACTIVE.store(false, Ordering::Relaxed);
+    }
+
+    /// `(draws, fired)` for a site since it was (re-)armed.
+    pub fn stats(site: &str) -> (u64, u64) {
+        let reg = lock();
+        reg.get(site).map_or((0, 0), |s| (s.draws, s.fired))
+    }
+
+    /// Arm sites from a `site:prob:seed[,site:prob:seed...]` spec — the
+    /// `SYMOG_FAULTS` / `--faults` syntax.
+    pub fn arm_from_spec(spec: &str) -> Result<()> {
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() != 3 {
+                bail!("fault spec {part:?} is not site:prob:seed");
+            }
+            let prob: f64 = fields[1]
+                .parse()
+                .with_context(|| format!("fault spec {part:?}: bad probability {:?}", fields[1]))?;
+            if !(0.0..=1.0).contains(&prob) {
+                bail!("fault spec {part:?}: probability {prob} outside [0, 1]");
+            }
+            let seed: u64 = fields[2]
+                .parse()
+                .with_context(|| format!("fault spec {part:?}: bad seed {:?}", fields[2]))?;
+            arm(fields[0], prob, seed);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+pub use enabled::{arm, arm_from_spec, disarm, disarm_all, fire, stats};
+
+/// Stub for builds without the registry: never fires, folds away.
+#[cfg(not(any(test, feature = "fault-injection")))]
+#[inline(always)]
+pub fn fire(_site: &str) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Mutex, MutexGuard};
+
+    /// The registry is process-global; tests in this module serialize on
+    /// this lock (and leave the registry empty) so parallel test threads
+    /// never see each other's schedules.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> MutexGuard<'static, ()> {
+        let g = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        g
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        let _g = guard();
+        for _ in 0..100 {
+            assert!(!fire("serve.drain.panic"));
+        }
+        assert_eq!(stats("serve.drain.panic"), (0, 0));
+        disarm_all();
+    }
+
+    #[test]
+    fn schedules_are_seed_deterministic() {
+        let _g = guard();
+        let run = |seed: u64| -> Vec<bool> {
+            arm(SERVE_DRAIN_PANIC, 0.5, seed);
+            let v = (0..64).map(|_| fire(SERVE_DRAIN_PANIC)).collect();
+            disarm(SERVE_DRAIN_PANIC);
+            v
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert_ne!(a, c, "different seeds must differ (64 draws at p=0.5)");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+        disarm_all();
+    }
+
+    #[test]
+    fn prob_extremes_and_counters() {
+        let _g = guard();
+        arm("always", 1.0, 1);
+        arm("never", 0.0, 1);
+        for _ in 0..20 {
+            assert!(fire("always"));
+            assert!(!fire("never"));
+        }
+        assert_eq!(stats("always"), (20, 20));
+        assert_eq!(stats("never"), (20, 0));
+        disarm_all();
+        assert!(!fire("always"), "disarm_all must silence every site");
+    }
+
+    #[test]
+    fn spec_parsing_accepts_good_and_rejects_bad() {
+        let _g = guard();
+        arm_from_spec("a:0.25:9, b:1:3 ,").unwrap();
+        assert!(fire("b"));
+        assert!(arm_from_spec("a:0.5").is_err(), "missing seed");
+        assert!(arm_from_spec("a:1.5:2").is_err(), "prob out of range");
+        assert!(arm_from_spec("a:x:2").is_err(), "non-numeric prob");
+        assert!(arm_from_spec("a:0.5:x").is_err(), "non-numeric seed");
+        disarm_all();
+    }
+
+    #[test]
+    fn this_build_has_the_registry() {
+        // cfg(test) builds always carry the real implementation
+        assert!(ENABLED);
+    }
+}

@@ -1,5 +1,7 @@
-//! Zero-dependency substrates: PRNG, JSON, thread pool, small math helpers.
+//! Zero-dependency substrates: PRNG, JSON, thread pool, fault injection,
+//! small math helpers.
 
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -126,7 +126,7 @@ fn registry_and_server_accept_artifact_sources() {
     let good_pin = RegisterOpts::new().max_batch(4).version(5);
     reg2.add("lenet5", ModelSource::Artifact(&path), &good_pin).unwrap();
 
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
     let e: usize = man.input_shape.iter().product();
     for _ in 0..3 {
         let img: Vec<f32> = (0..e).map(|_| rng.normal()).collect();

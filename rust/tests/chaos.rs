@@ -1,0 +1,408 @@
+//! Chaos suite: the server under scripted fault schedules.
+//!
+//! Runs only with `--features fault-injection` (see `[[test]]` in
+//! Cargo.toml): the suite arms `util::fault` sites — drain panics, drain
+//! engine errors, artifact payload corruption, swap-probe failures — with
+//! seeded probability streams, hammers the server through floods,
+//! deadline storms, and bad deployments, and asserts the
+//! **terminal-outcome invariant** end to end:
+//!
+//! * every submitted request resolves exactly once, with logits or with
+//!   one typed [`ServeError`];
+//! * per-version counters partition exactly —
+//!   `requests + sheds + timeouts + failures` equals admitted
+//!   submissions, with each component matching the client-observed
+//!   outcome tallies;
+//! * every *accepted* response is bit-identical to the solo planned
+//!   oracle of the version that served it, no matter what was panicking,
+//!   shedding, or timing out around it;
+//! * a quarantined version rolls back to last-good and the slot resumes
+//!   serving without a restart.
+//!
+//! Schedules are deterministic per `(site, prob, seed)`; CI replays the
+//! suite under three pinned `SYMOG_CHAOS_SEED` values. The fault registry
+//! is process-global, so every test serializes on one lock and disarms
+//! all sites on entry and exit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use symog::artifact::{self, PublishOpts};
+use symog::inference::IntModel;
+use symog::serve::{
+    Health, InferOpts, ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig, ServeError,
+    Server,
+};
+use symog::testing::models;
+use symog::util::fault;
+use symog::util::rng::Rng;
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests and guarantee a clean registry on entry; the returned
+/// guard disarms again on drop so a panicking test can't leak a schedule.
+struct FaultGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::disarm_all();
+    }
+}
+
+fn fault_guard() -> FaultGuard {
+    let g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm_all();
+    FaultGuard(g)
+}
+
+/// CI matrix knob: replay the whole suite under a different fault-stream
+/// seed without recompiling.
+fn chaos_seed() -> u64 {
+    std::env::var("SYMOG_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Deterministic request image for (thread, index).
+fn request_image(elems: usize, t: usize, i: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x51CA ^ ((t * 1000 + i) as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    (0..elems).map(|_| rng.normal()).collect()
+}
+
+struct Fixture {
+    server: Server,
+    key: ModelKey,
+    solo: IntModel,
+    elems: usize,
+}
+
+fn lenet_fixture(cfg: ServeConfig) -> Fixture {
+    let mut rng = Rng::new(0xC4A0);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let solo = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let key = reg
+        .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(4))
+        .unwrap();
+    Fixture { server: Server::new(reg, cfg), key, solo, elems }
+}
+
+/// Client-observed outcome tallies, accumulated across hammer threads.
+#[derive(Default)]
+struct Outcomes {
+    ok: AtomicU64,
+    shed: AtomicU64,
+    deadline: AtomicU64,
+    batch_failed: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+impl Outcomes {
+    fn record(&self, res: &anyhow::Result<(Vec<f32>, u32)>) {
+        let c = match res {
+            Ok(_) => &self.ok,
+            Err(e) => match e.downcast_ref::<ServeError>() {
+                Some(ServeError::Shed { .. }) => &self.shed,
+                Some(ServeError::DeadlineExceeded) => &self.deadline,
+                Some(ServeError::BatchPanicked(_)) => &self.batch_failed,
+                Some(ServeError::VersionQuarantined(_)) => &self.quarantined,
+                other => panic!("untyped serving failure {other:?}: {e:#}"),
+            },
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn total(&self) -> u64 {
+        self.ok.load(Ordering::Relaxed)
+            + self.shed.load(Ordering::Relaxed)
+            + self.deadline.load(Ordering::Relaxed)
+            + self.batch_failed.load(Ordering::Relaxed)
+            + self.quarantined.load(Ordering::Relaxed)
+    }
+}
+
+/// Sum the failure-domain counters across every version of a slot and
+/// assert they equal both the client-observed tallies and the submission
+/// count — the terminal-outcome invariant, stated twice.
+fn assert_exact_accounting(server: &Server, key: &ModelKey, out: &Outcomes, submissions: u64) {
+    assert_eq!(out.total(), submissions, "a request vanished or resolved twice (client side)");
+    let s = server.stats(key).unwrap();
+    assert_eq!(s.requests, out.ok.load(Ordering::Relaxed), "requests != client-observed Oks");
+    assert_eq!(s.sheds, out.shed.load(Ordering::Relaxed), "sheds != client-observed sheds");
+    assert_eq!(
+        s.timeouts,
+        out.deadline.load(Ordering::Relaxed),
+        "timeouts != client-observed deadline errors"
+    );
+    assert_eq!(
+        s.failures,
+        out.batch_failed.load(Ordering::Relaxed) + out.quarantined.load(Ordering::Relaxed),
+        "failures != client-observed batch failures + quarantine refusals"
+    );
+    assert_eq!(
+        s.requests + s.sheds + s.timeouts + s.failures,
+        submissions,
+        "counter identity broken: requests + sheds + timeouts + failures != submissions"
+    );
+}
+
+#[test]
+fn drain_panic_storm_resolves_every_request_exactly_once() {
+    let _g = fault_guard();
+    let seed = chaos_seed();
+    // quarantine_after is set far above what a p=0.15 storm can reach in
+    // a row, so this test isolates the panic-recovery path from rollback
+    let f = lenet_fixture(ServeConfig::new().workers(2).quarantine_after(1_000_000));
+    fault::arm(fault::SERVE_DRAIN_PANIC, 0.15, seed);
+    fault::arm(fault::SERVE_DRAIN_FAIL, 0.10, seed ^ 0xDEAD);
+
+    let threads = 6usize;
+    let per_thread = 40usize;
+    let out = Outcomes::default();
+    std::thread::scope(|sc| {
+        for t in 0..threads {
+            let (server, key, solo, out) = (&f.server, &f.key, &f.solo, &out);
+            sc.spawn(move || {
+                for i in 0..per_thread {
+                    let image = request_image(f.elems, t, i);
+                    let res = server.infer_versioned(key, &image);
+                    if let Ok((got, v)) = &res {
+                        let (want, _) = solo.forward(&image, 1).unwrap();
+                        assert_eq!(*v, 1);
+                        assert_eq!(
+                            got, &want,
+                            "thread {t} request {i}: accepted logits diverged mid-storm"
+                        );
+                    }
+                    out.record(&res);
+                }
+            });
+        }
+    });
+    let (p_draws, p_fired) = fault::stats(fault::SERVE_DRAIN_PANIC);
+    assert!(p_draws > 0, "storm never reached the drain site");
+    assert!(
+        p_fired > 0 || fault::stats(fault::SERVE_DRAIN_FAIL).1 > 0,
+        "schedule (seed {seed}) never fired — the test proved nothing"
+    );
+    assert!(out.ok.load(Ordering::Relaxed) > 0, "nothing was served at p=0.15");
+    assert_exact_accounting(&f.server, &f.key, &out, (threads * per_thread) as u64);
+    // the slot survived the storm: disarm and serve cleanly
+    fault::disarm_all();
+    let image = request_image(f.elems, 99, 0);
+    let (got, _) = f.server.infer_versioned(&f.key, &image).unwrap();
+    let (want, _) = f.solo.forward(&image, 1).unwrap();
+    assert_eq!(got, want, "slot did not recover after the storm");
+}
+
+#[test]
+fn deadline_storm_sweeps_exactly_the_expired_requests() {
+    let _g = fault_guard();
+    let f = lenet_fixture(ServeConfig::new().workers(2));
+    let threads = 4usize;
+    let per_thread = 30usize;
+    let out = Outcomes::default();
+    std::thread::scope(|sc| {
+        for t in 0..threads {
+            let (server, key, solo, out) = (&f.server, &f.key, &f.solo, &out);
+            sc.spawn(move || {
+                for i in 0..per_thread {
+                    let image = request_image(f.elems, t, i);
+                    // every third request is born expired: it must be
+                    // swept (never executed), the rest must serve exactly
+                    let opts = if i % 3 == 0 {
+                        InferOpts::new().deadline_at(Instant::now() - Duration::from_millis(1))
+                    } else {
+                        InferOpts::new().deadline_in(Duration::from_secs(3600))
+                    };
+                    let res = server.infer_with(key, &image, &opts);
+                    if i % 3 == 0 {
+                        let e = res.as_ref().expect_err("expired request must not serve");
+                        assert_eq!(
+                            e.downcast_ref::<ServeError>(),
+                            Some(&ServeError::DeadlineExceeded)
+                        );
+                    } else if let Ok((got, _)) = &res {
+                        let (want, _) = solo.forward(&image, 1).unwrap();
+                        assert_eq!(got, &want, "thread {t} request {i} diverged");
+                    } else {
+                        panic!("live-deadline request failed: {:#}", res.unwrap_err());
+                    }
+                    out.record(&res);
+                }
+            });
+        }
+    });
+    let expired_per_thread = (0..per_thread).filter(|i| i % 3 == 0).count();
+    assert_eq!(
+        out.deadline.load(Ordering::Relaxed),
+        (threads * expired_per_thread) as u64,
+        "sweep count != born-expired count"
+    );
+    assert_exact_accounting(&f.server, &f.key, &out, (threads * per_thread) as u64);
+}
+
+#[test]
+fn corrupted_artifact_load_is_refused_and_clean_reload_recovers() {
+    let _g = fault_guard();
+    let seed = chaos_seed();
+    let mut rng = Rng::new(0xA57);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let oracle = IntModel::build(&man, &ck).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("symog-chaos-{}-{seed}.fxpa", std::process::id()));
+    artifact::publish(&man, &ck, &PublishOpts::new().version(1), &path).unwrap();
+
+    // TOCTOU fault: the payload mutates *after* the first CRC pass; the
+    // re-verify before planning must refuse the artifact
+    fault::arm(fault::ARTIFACT_PAYLOAD_CORRUPT, 1.0, seed);
+    let err = artifact::load(&path).expect_err("mutated payload must be refused");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("payload mutated between validation and planning"),
+        "wrong refusal: {msg}"
+    );
+    assert!(msg.contains(&path.display().to_string()), "error lost the path: {msg}");
+
+    // disarm: the same file loads cleanly and is bit-identical
+    fault::disarm_all();
+    let loaded = artifact::load(&path).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    for i in 0..3 {
+        let image = request_image(elems, 0, i);
+        let (want, _) = oracle.forward(&image, 1).unwrap();
+        let (got, _) = loaded.model.forward(&image, 1).unwrap();
+        assert_eq!(got, want, "clean reload diverged after the corruption storm");
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn failed_swap_probe_refuses_install_and_keeps_serving() {
+    let _g = fault_guard();
+    let seed = chaos_seed();
+    let f = lenet_fixture(ServeConfig::new().workers(2));
+    let mut rng = Rng::new(0xBEE);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let next = IntModel::build(&man, &ck).unwrap();
+    let opts = RegisterOpts::new().max_batch(4);
+
+    fault::arm(fault::SERVE_SWAP_PROBE, 1.0, seed);
+    let err = f.server.swap(&f.key, ModelSource::InCode(&next), &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("probe row"), "wrong refusal: {err:#}");
+    assert_eq!(f.server.current_version(&f.key).unwrap(), 1, "failed probe must not install");
+
+    // v1 still serves, bit-exactly
+    let image = request_image(f.elems, 0, 0);
+    let (got, v) = f.server.infer_versioned(&f.key, &image).unwrap();
+    let (want, _) = f.solo.forward(&image, 1).unwrap();
+    assert_eq!((v, got), (1, want));
+
+    // disarm: the same swap now installs (probe version numbers are not
+    // burned by a failed probe — only installed versions are)
+    fault::disarm_all();
+    let k2 = f.server.swap(&f.key, ModelSource::InCode(&next), &opts).unwrap();
+    assert_eq!(k2.version, 2);
+    assert_eq!(f.server.current_version(&f.key).unwrap(), 2);
+}
+
+#[test]
+fn combined_storm_trips_quarantine_and_rolls_back_to_last_good() {
+    let _g = fault_guard();
+    let seed = chaos_seed();
+    // phase A: flood + deadline storm + sub-critical panic storm on v1.
+    // quarantine_after(10) makes an accidental v1 trip essentially
+    // impossible at p=0.15 (needs 10 consecutive failed drains).
+    let f = lenet_fixture(
+        ServeConfig::new().workers(2).queue_depth(6).quarantine_after(10),
+    );
+    let mut rng = Rng::new(0xF00D ^ seed);
+    let (man, ck2) = models::lenet5ish(&mut rng, 2);
+    let model2 = IntModel::build(&man, &ck2).unwrap();
+    let opts = RegisterOpts::new().max_batch(4);
+
+    fault::arm(fault::SERVE_DRAIN_PANIC, 0.15, seed.wrapping_mul(31));
+    let threads = 6usize;
+    let per_thread = 30usize;
+    let out = Outcomes::default();
+    std::thread::scope(|sc| {
+        for t in 0..threads {
+            let (server, key, solo, out) = (&f.server, &f.key, &f.solo, &out);
+            sc.spawn(move || {
+                for i in 0..per_thread {
+                    let image = request_image(f.elems, t, i);
+                    let opts = if i % 7 == 0 {
+                        InferOpts::new().deadline_at(Instant::now() - Duration::from_millis(1))
+                    } else {
+                        InferOpts::new()
+                    };
+                    let res = server.infer_with(key, &image, &opts);
+                    if let Ok((got, v)) = &res {
+                        assert_eq!(*v, 1, "phase A serves v1 only");
+                        let (want, _) = solo.forward(&image, 1).unwrap();
+                        assert_eq!(got, &want, "accepted logits diverged in the storm");
+                    }
+                    out.record(&res);
+                }
+            });
+        }
+    });
+    fault::disarm_all();
+    assert_exact_accounting(&f.server, &f.key, &out, (threads * per_thread) as u64);
+    assert_ne!(
+        f.server.health(&f.key).unwrap(),
+        Health::Quarantined,
+        "sub-critical storm must not quarantine v1 (seed {seed})"
+    );
+
+    // phase B: deploy v2, then arm a certain drain panic — v2's breaker
+    // trips on the 10th consecutive failure and the slot auto-rolls back
+    // to v1 with no operator action and no restart. The fault site is
+    // global (any drain would panic while armed), so send exactly the
+    // tripping run and disarm before expecting v1 to serve.
+    f.server.swap(&f.key, ModelSource::InCode(&model2), &opts).unwrap();
+    assert_eq!(f.server.current_version(&f.key).unwrap(), 2);
+    fault::arm(fault::SERVE_DRAIN_PANIC, 1.0, seed.wrapping_mul(37));
+    for i in 0..10u64 {
+        let image = request_image(f.elems, 40, i as usize);
+        let e = f
+            .server
+            .infer_versioned(&f.key, &image)
+            .expect_err("armed p=1.0 drain panic must fail every v2 request");
+        assert!(
+            matches!(e.downcast_ref::<ServeError>(), Some(ServeError::BatchPanicked(_))),
+            "v2 meltdown request {i} failed with the wrong kind: {e:#}"
+        );
+    }
+    fault::disarm_all();
+
+    // the slot healed itself: v1 serves, v2 is quarantined, no restart
+    assert_eq!(
+        f.server.current_version(&f.key).unwrap(),
+        1,
+        "10 consecutive failures must trip the breaker and roll back to last-good"
+    );
+    assert_eq!(
+        f.server.health_by_version(&f.key).unwrap(),
+        vec![(1, Health::Ready), (2, Health::Quarantined)]
+    );
+    for i in 0..5 {
+        let image = request_image(f.elems, 50, i);
+        let (got, v) = f.server.infer_versioned(&f.key, &image).unwrap();
+        let (want, _) = f.solo.forward(&image, 1).unwrap();
+        assert_eq!((v, got), (1, want), "post-rollback request {i} diverged from the v1 oracle");
+    }
+    // the meltdown is recorded exactly: every v2 submission is a failure
+    // (it never served a row), and v1's partition is phase A plus the
+    // five post-rollback requests — nothing leaked across versions
+    let by_v = f.server.stats_by_version(&f.key).unwrap();
+    let v2 = &by_v.iter().find(|(v, _)| *v == 2).unwrap().1;
+    assert_eq!((v2.requests, v2.failures), (0, 10), "v2 must record exactly the tripping run");
+    let v1 = &by_v.iter().find(|(v, _)| *v == 1).unwrap().1;
+    assert_eq!(
+        v1.requests + v1.sheds + v1.timeouts + v1.failures,
+        (threads * per_thread) as u64 + 5,
+        "v1 partition != phase A submissions + post-rollback traffic"
+    );
+}

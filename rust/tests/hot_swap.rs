@@ -78,7 +78,7 @@ fn hot_swap_under_concurrent_traffic_never_drops_or_blurs_versions() {
     let mut reg = Registry::new();
     let opts = RegisterOpts::new().max_batch(4);
     let key = reg.add("lenet5", ModelSource::InCode(m1), &opts).unwrap();
-    let server = Server::new(reg, ServeConfig { workers: 3 });
+    let server = Server::new(reg, ServeConfig::new().workers(3));
 
     const CLIENTS: usize = 6;
     const PER_CLIENT: usize = 40;
@@ -176,7 +176,7 @@ fn sequential_swap_bookkeeping_is_exact() {
     let mut reg = Registry::new();
     let opts = RegisterOpts::new().max_batch(4);
     let key = reg.add("lenet5", ModelSource::InCode(m1), &opts).unwrap();
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
 
     let run = |n: usize, want_v: u32| {
         for i in 0..n {

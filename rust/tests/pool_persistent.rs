@@ -95,7 +95,7 @@ fn hammered_server_on_cap_sized_pool_is_bit_exact() {
     let key = reg
         .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(4))
         .unwrap();
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
 
     // 4 client threads > 1 pool thread: drain leaders dispatch row
     // fan-outs on the pool while other clients queue up behind them
@@ -225,7 +225,7 @@ fn steady_state_served_micro_batches_spawn_zero_threads() {
     let key = reg
         .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(4))
         .unwrap();
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
 
     let corpus: Vec<Vec<(Vec<f32>, Vec<f32>)>> = (0..3)
         .map(|t| {

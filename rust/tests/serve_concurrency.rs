@@ -15,7 +15,9 @@
 //! precomputed single-threaded and every thread checks its own answers.
 
 use symog::inference::{IntModel, OpCounts};
-use symog::serve::{ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+use symog::serve::{
+    Health, ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig, ServeError, Server,
+};
 use symog::testing::models;
 use symog::util::rng::Rng;
 
@@ -52,7 +54,7 @@ fn hammered_server_is_bit_exact_allocation_stable_and_counts_exactly() {
     let key_a = reg.add("lenet5", ModelSource::InCode(&model_a), &opts).unwrap();
     let key_b = reg.add("densenet", ModelSource::InCode(&model_b), &opts).unwrap();
     let workers = 3usize;
-    let server = Server::new(reg, ServeConfig { workers });
+    let server = Server::new(reg, ServeConfig::new().workers(workers));
 
     // single-threaded oracle: solo planned forward per request. Threads
     // alternate between the two registered models so multi-model serving
@@ -160,7 +162,7 @@ fn single_model_saturation_reaches_full_batches() {
     let key = reg
         .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(cap))
         .unwrap();
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
 
     let corpus: Vec<Vec<Case>> = (0..M)
         .map(|t| {
@@ -188,4 +190,143 @@ fn single_model_saturation_reaches_full_batches() {
     assert_eq!(s.requests, (M * K) as u64);
     assert!(s.max_occupancy <= cap as u64, "micro-batch exceeded the registered cap");
     assert!(s.batches >= (M * K).div_ceil(cap) as u64, "more rows per batch than the cap allows");
+}
+
+#[test]
+fn sustained_overload_sheds_but_never_loses_a_request() {
+    // a queue_depth-bounded slot under 8 hammering threads: some requests
+    // are shed (typed, at enqueue), every accepted one is bit-exact, and
+    // nothing is ever lost — per round, requests + sheds == submissions
+    // exactly, with zero timeouts/failures. Whether a given round sheds
+    // depends on scheduling, so rounds repeat until one does.
+    let mut rng = Rng::new(0xE2);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let solo = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let key = reg
+        .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(2))
+        .unwrap();
+    let depth = 2usize;
+    let server = Server::new(reg, ServeConfig::new().workers(2).queue_depth(depth));
+
+    let threads = 8usize;
+    let per_thread = 25usize;
+    let mut total_subs = 0u64;
+    for round in 0..20 {
+        std::thread::scope(|sc| {
+            for t in 0..threads {
+                let server = &server;
+                let key = &key;
+                let solo = &solo;
+                sc.spawn(move || {
+                    for i in 0..per_thread {
+                        let image = request_image(elems, t, i);
+                        match server.infer(key, &image) {
+                            Ok(got) => {
+                                let (want, _) = solo.forward(&image, 1).unwrap();
+                                assert_eq!(
+                                    got, want,
+                                    "round {round} thread {t} request {i}: \
+                                     accepted response diverged from solo oracle"
+                                );
+                            }
+                            Err(e) => match e.downcast_ref::<ServeError>() {
+                                Some(ServeError::Shed { depth: d }) => {
+                                    assert_eq!(*d, depth, "shed reports the configured depth")
+                                }
+                                other => panic!(
+                                    "round {round}: overload produced {other:?} ({e:#}), \
+                                     only Shed is a legal refusal here"
+                                ),
+                            },
+                        }
+                    }
+                });
+            }
+        });
+        total_subs += (threads * per_thread) as u64;
+        let s = server.stats(&key).unwrap();
+        assert_eq!(
+            s.requests + s.sheds,
+            total_subs,
+            "terminal-outcome identity broken: a request was lost or double-counted"
+        );
+        assert_eq!((s.timeouts, s.failures), (0, 0), "no deadlines or faults in this test");
+        if s.sheds > 0 {
+            return; // overload observed and accounted for — done
+        }
+    }
+    panic!("8 threads against queue_depth=2 never shed in 20 rounds — admission control dead?");
+}
+
+#[test]
+fn manual_rollback_quarantines_and_reroutes_to_last_good() {
+    // v1 -> v2 swap, manual rollback to v1: health_by_version shows v2
+    // quarantined, traffic resumes on v1 bit-exactly, the per-version
+    // stats partition stays exact, and a reinstall of v2's number is
+    // refused while v3 is accepted.
+    let mut rng = Rng::new(0xF3);
+    let (man, ck1) = models::lenet5ish(&mut rng, 2);
+    let (_, ck2) = models::lenet5ish(&mut rng, 2);
+    let (_, ck3) = models::lenet5ish(&mut rng, 2);
+    let model1 = IntModel::build(&man, &ck1).unwrap();
+    let model2 = IntModel::build(&man, &ck2).unwrap();
+    let model3 = IntModel::build(&man, &ck3).unwrap();
+    let solo1 = IntModel::build(&man, &ck1).unwrap();
+    let solo3 = IntModel::build(&man, &ck3).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let opts = RegisterOpts::new().max_batch(4);
+    let key = reg.add("lenet5", ModelSource::InCode(&model1), &opts).unwrap();
+    let server = Server::new(reg, ServeConfig::new().workers(2));
+
+    let img = request_image(elems, 0, 0);
+    let (_, served) = server.infer_versioned(&key, &img).unwrap();
+    assert_eq!(served, 1);
+
+    server.swap(&key, ModelSource::InCode(&model2), &opts).unwrap();
+    assert_eq!(server.current_version(&key).unwrap(), 2);
+    let (_, served) = server.infer_versioned(&key, &img).unwrap();
+    assert_eq!(served, 2);
+
+    // operator decides v2 is bad: roll back to last-good
+    let now_serving = server.rollback(&key).unwrap();
+    assert_eq!(now_serving, 1, "rollback must land on the newest non-quarantined version");
+    assert_eq!(server.current_version(&key).unwrap(), 1);
+    assert_eq!(
+        server.health_by_version(&key).unwrap(),
+        vec![(1, Health::Ready), (2, Health::Quarantined)]
+    );
+
+    // traffic resumes on v1, bit-identical to the v1 solo oracle
+    for i in 0..5 {
+        let image = request_image(elems, 1, i);
+        let (got, served) = server.infer_versioned(&key, &image).unwrap();
+        let (want, _) = solo1.forward(&image, 1).unwrap();
+        assert_eq!(served, 1, "request {i} served by the wrong version after rollback");
+        assert_eq!(got, want, "request {i} diverged from the v1 oracle after rollback");
+    }
+
+    // v2's number is burned: reinstalling it is refused, v3 is accepted
+    let pin2 = RegisterOpts::new().max_batch(4).version(2);
+    assert!(
+        server.swap(&key, ModelSource::InCode(&model2), &pin2).is_err(),
+        "a rolled-back version number must not be reinstallable"
+    );
+    server.swap(&key, ModelSource::InCode(&model3), &opts).unwrap();
+    assert_eq!(server.current_version(&key).unwrap(), 3);
+    let image = request_image(elems, 2, 0);
+    let (got, served) = server.infer_versioned(&key, &image).unwrap();
+    let (want, _) = solo3.forward(&image, 1).unwrap();
+    assert_eq!((served, got), (3, want), "post-rollback swap must serve the new version");
+
+    // exact per-version partition: 2 on v1 + 5 post-rollback, 1 on v2, 1 on v3
+    let by_v = server.stats_by_version(&key).unwrap();
+    let reqs: Vec<(u32, u64)> = by_v.iter().map(|(v, s)| (*v, s.requests)).collect();
+    assert_eq!(reqs, vec![(1, 6), (2, 1), (3, 1)]);
+    let total = server.stats(&key).unwrap();
+    assert_eq!(total.requests, 8);
+    assert_eq!((total.sheds, total.timeouts, total.failures), (0, 0, 0));
 }

@@ -107,7 +107,7 @@ fn server_serves_whole_zoo_bit_identical_to_solo() {
         }
     }
     assert_eq!(reg.len(), 12);
-    let server = Server::new(reg, ServeConfig { workers: 2 });
+    let server = Server::new(reg, ServeConfig::new().workers(2));
     assert_eq!(server.keys().len(), 12);
 
     let mut rng = Rng::new(0xBEEF);
