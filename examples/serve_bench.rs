@@ -17,20 +17,28 @@
 //! and `--faults site:prob:seed[,...]` arms the seeded injection sites
 //! (requires a `--features fault-injection` build; same syntax as
 //! `SYMOG_FAULTS`).
+//!
+//! `--tcp` routes every client request through the TCP front-end
+//! (`serve::net`) on an ephemeral loopback port instead of calling the
+//! in-process API, so the benchmark measures the full wire path: frame
+//! encode → socket → decode → `infer_with` → encode → socket. The final
+//! stats line is then read over the wire too (a Stats frame).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 use symog::cli::Args;
 use symog::inference::IntModel;
+use symog::serve::net::{Client, TcpFront};
 use symog::serve::{InferOpts, ModelSource, RegisterOpts, Registry, ServeConfig, Server};
 use symog::testing::models;
 use symog::util::fault;
 use symog::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&[])?;
+    let args = Args::from_env(&["tcp"])?;
     let model_name = args.str_or("model", "vgg7");
     let bits = args.usize_or("bits", 2)? as u32;
     let width = args.usize_or("width", 16)?;
@@ -42,6 +50,7 @@ fn main() -> Result<()> {
     let queue_depth = args.usize_or("queue-depth", 0)?;
     let deadline_ms = args.u64_or("deadline-ms", 0)?;
     let faults = args.str_or("faults", "");
+    let tcp = args.switch("tcp");
     args.finish()?;
 
     if !faults.is_empty() {
@@ -69,13 +78,18 @@ fn main() -> Result<()> {
     let opts = RegisterOpts::new().max_batch(batch);
     let key = reg.add(&model_name, ModelSource::InCode(&model), &opts)?;
     let server =
-        Server::new(reg, ServeConfig::new().workers(workers).queue_depth(queue_depth));
+        Arc::new(Server::new(reg, ServeConfig::new().workers(workers).queue_depth(queue_depth)));
+    let front = if tcp { Some(TcpFront::bind(Arc::clone(&server), "127.0.0.1:0")?) } else { None };
     println!(
         "== serve_bench == model {key}  input {:?}  micro-batch cap {batch}  \
-         clients {clients} x {requests} requests  queue depth {}  deadline {}",
+         clients {clients} x {requests} requests  queue depth {}  deadline {}{}",
         man.input_shape,
         if queue_depth == 0 { "unbounded".to_string() } else { queue_depth.to_string() },
         if deadline_ms == 0 { "none".to_string() } else { format!("{deadline_ms}ms") },
+        match &front {
+            Some(f) => format!("  via TCP {}", f.local_addr()),
+            None => String::new(),
+        },
     );
 
     // deterministic request corpus
@@ -104,23 +118,36 @@ fn main() -> Result<()> {
     // them and let the stats line show the exact failure-domain split
     let served = AtomicU64::new(0);
     let refused = AtomicU64::new(0);
+    let addr = front.as_ref().map(|f| f.local_addr());
     let t0 = Instant::now();
     std::thread::scope(|sc| {
         for t in 0..clients {
-            let (server, key, images, served, refused) =
-                (&server, &key, &images, &served, &refused);
+            let (server, key, images, served, refused, name) =
+                (&server, &key, &images, &served, &refused, model_name.as_str());
             sc.spawn(move || {
+                // one TCP connection per client thread, like a real client
+                let mut wire = addr.map(|a| Client::connect(a).expect("connecting to front-end"));
                 for i in 0..requests {
                     let r = t * requests + i;
-                    let iopts = if deadline_ms == 0 {
-                        InferOpts::new()
-                    } else {
-                        InferOpts::new().deadline_in(Duration::from_millis(deadline_ms))
+                    let image = &images[r * elems..(r + 1) * elems];
+                    let outcome = match &mut wire {
+                        Some(c) => {
+                            c.infer_with(name, bits, image, deadline_ms as u32, 0).map(|_| ())
+                        }
+                        None => {
+                            let iopts = if deadline_ms == 0 {
+                                InferOpts::new()
+                            } else {
+                                InferOpts::new().deadline_in(Duration::from_millis(deadline_ms))
+                            };
+                            server.infer_with(key, image, &iopts).map(|got| {
+                                std::hint::black_box(got);
+                            })
+                        }
                     };
-                    match server.infer_with(key, &images[r * elems..(r + 1) * elems], &iopts) {
-                        Ok(got) => {
+                    match outcome {
+                        Ok(()) => {
                             served.fetch_add(1, Ordering::Relaxed);
-                            std::hint::black_box(got);
                         }
                         Err(_) => {
                             refused.fetch_add(1, Ordering::Relaxed);
@@ -146,6 +173,18 @@ fn main() -> Result<()> {
 
     let stats = server.stats(&key)?;
     println!("stats: {}", stats.render());
+    if let Some(front) = front {
+        // read the same numbers back over the wire, like a remote
+        // operator would, then close up shop
+        let mut c = Client::connect(front.local_addr())?;
+        let s = c.stats(&model_name, bits)?;
+        println!(
+            "wire  : v{}  {} requests  latency p50 {}us p99 {}us max {}us ({} samples)",
+            s.version, s.requests, s.p50_us, s.p99_us, s.max_us, s.latency_count
+        );
+        drop(c);
+        front.shutdown();
+    }
     println!(
         "solo   : {total} requests in {solo_s:.3}s  ({:.1} req/s)",
         total as f64 / solo_s

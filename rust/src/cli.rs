@@ -1,12 +1,14 @@
 //! Hand-rolled CLI argument parser (clap is not vendored).
 //!
 //! Grammar: `symog <subcommand> [--flag value | --switch] ...`
-//! Every flag is `--kebab-case`; switches take no value. Unknown flags are
-//! hard errors so typos never silently change an experiment.
+//! Every flag is `--kebab-case`; switches take no value. Unknown flags,
+//! repeated flags, and a flag whose value looks like another flag (a
+//! `--value`) are hard errors so typos never silently change an
+//! experiment, and numeric parse failures name the offending flag.
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Parsed command line: subcommand + flag map.
 #[derive(Clone, Debug, Default)]
@@ -33,12 +35,25 @@ impl Args {
                 bail!("unexpected positional argument {a:?}");
             };
             if switch_names.contains(&name) {
+                // a repeated switch is as suspicious as a repeated flag:
+                // it usually means a line was pasted twice
+                if args.switches.iter().any(|s| s == name) {
+                    bail!("duplicate switch --{name}");
+                }
                 args.switches.push(name.to_string());
             } else {
-                let val = it
-                    .next()
-                    .ok_or_else(|| anyhow::anyhow!("flag --{name} requires a value"))?;
-                args.flags.insert(name.to_string(), val.clone());
+                // a value that itself looks like a flag means the real
+                // value was forgotten — consuming it would silently drop
+                // the next flag from the command line
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => bail!("flag --{name} requires a value"),
+                };
+                // last-wins overwrite would let `--seed 1 ... --seed 2`
+                // silently change an experiment; make the repeat loud
+                if args.flags.insert(name.to_string(), val).is_some() {
+                    bail!("duplicate flag --{name}");
+                }
             }
         }
         Ok(args)
@@ -65,7 +80,7 @@ impl Args {
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
         self.mark(name);
         match self.flags.get(name) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().with_context(|| format!("invalid value {v:?} for flag --{name}")),
             None => Ok(default),
         }
     }
@@ -73,7 +88,7 @@ impl Args {
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
         self.mark(name);
         match self.flags.get(name) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().with_context(|| format!("invalid value {v:?} for flag --{name}")),
             None => Ok(default),
         }
     }
@@ -81,7 +96,7 @@ impl Args {
     pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
         self.mark(name);
         match self.flags.get(name) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v.parse().with_context(|| format!("invalid value {v:?} for flag --{name}")),
             None => Ok(default),
         }
     }
@@ -161,5 +176,46 @@ mod tests {
     #[test]
     fn positional_after_flags_rejected() {
         assert!(Args::parse(&sv(&["t", "--a", "1", "stray"]), &[]).is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_is_a_hard_error() {
+        // last-wins would make `--seed 1 ... --seed 2` silently run seed 2
+        let err = Args::parse(&sv(&["t", "--seed", "1", "--seed", "2"]), &[]).unwrap_err();
+        assert!(err.to_string().contains("duplicate flag --seed"), "{err}");
+        let err = Args::parse(&sv(&["t", "--quiet", "--quiet"]), &["quiet"]).unwrap_err();
+        assert!(err.to_string().contains("duplicate switch --quiet"), "{err}");
+    }
+
+    #[test]
+    fn omitted_value_does_not_swallow_the_next_flag() {
+        // `--deadline-ms --faults x` used to parse deadline-ms = "--faults"
+        // and silently drop the faults flag from the command line
+        let err =
+            Args::parse(&sv(&["t", "--deadline-ms", "--faults", "x"]), &[]).unwrap_err();
+        assert!(err.to_string().contains("flag --deadline-ms requires a value"), "{err}");
+        // same when the next token is a switch
+        let err = Args::parse(&sv(&["t", "--epochs", "--quiet"]), &["quiet"]).unwrap_err();
+        assert!(err.to_string().contains("flag --epochs requires a value"), "{err}");
+        // a single-dash value (negative number) is still a legal value
+        let a = Args::parse(&sv(&["t", "--lr0", "-0.5"]), &[]).unwrap();
+        assert_eq!(a.f32_or("lr0", 0.0).unwrap(), -0.5);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn numeric_parse_errors_name_the_flag() {
+        let a = Args::parse(&sv(&["t", "--queue-depth", "x"]), &[]).unwrap();
+        let err = a.usize_or("queue-depth", 0).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("invalid value \"x\" for flag --queue-depth"),
+            "{err:#}"
+        );
+        let a = Args::parse(&sv(&["t", "--seed", "12e"]), &[]).unwrap();
+        let err = a.u64_or("seed", 0).unwrap_err();
+        assert!(format!("{err:#}").contains("for flag --seed"), "{err:#}");
+        let a = Args::parse(&sv(&["t", "--lr0", "fast"]), &[]).unwrap();
+        let err = a.f32_or("lr0", 0.0).unwrap_err();
+        assert!(format!("{err:#}").contains("for flag --lr0"), "{err:#}");
     }
 }

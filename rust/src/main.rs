@@ -6,6 +6,7 @@
 //!   quantize     post-training-quantize a checkpoint (naive PTQ)
 //!   stats        per-layer quantization statistics of a checkpoint
 //!   infer        run the pure integer inference engine + cost report
+//!   serve        expose a model over the TCP serving front-end
 //!   fig2         print the 2-bit quantizer transfer curve (paper Fig. 2)
 //!   list         list compiled artifacts
 //!
@@ -45,6 +46,7 @@ fn real_main() -> Result<()> {
         "pack" => cmd_pack(&args),
         "stats" => cmd_stats(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
         "fig2" => cmd_fig2(&args),
         "ablate-bits" => cmd_ablate_bits(&args),
         "ablate-lambda" => cmd_ablate_lambda(&args),
@@ -71,6 +73,10 @@ USAGE: symog <subcommand> [flags]
   pack      --artifact TAG --ckpt FILE --out FILE.fxpm   (2-bit packed model)
   stats     --artifact TAG --ckpt FILE
   infer     --artifact TAG --ckpt FILE [--test-n N --seed N --batch N]
+  serve     --model vgg7|lenet5|densenet | --fxpa FILE.fxpa
+            [--name NAME --bits N --width N --batch N --workers N
+            --queue-depth N --seed N --addr HOST:PORT]
+            (TCP front-end; length-prefixed binary protocol, see DESIGN.md)
   fig2      [--delta F --bits N]
   ablate-bits    [--epochs N --train-n N --test-n N --seed N]   (A1)
   ablate-lambda  [--epochs N --train-n N --test-n N --seed N]   (A2)
@@ -280,6 +286,61 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let report = model.cost_report(1)?;
     println!("{}", report.render());
     Ok(())
+}
+
+/// Stand up the TCP serving front-end on one model until killed.
+/// The model comes from the deterministic zoo (`--model` + `--seed`, handy
+/// for demos and load tests) or from a published `.fxpa` serving artifact
+/// (`--fxpa`, the production path).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use symog::serve::net::TcpFront;
+    use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+
+    let model_name = args.str_or("model", "lenet5");
+    let bits = args.usize_or("bits", 2)? as u32;
+    let width = args.usize_or("width", 16)?;
+    let batch = args.usize_or("batch", 8)?.max(1);
+    let workers = args.usize_or("workers", 0)?;
+    let queue_depth = args.usize_or("queue-depth", 0)?;
+    let seed = args.usize_or("seed", 0x1453)? as u64;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let fxpa = args.str_opt("fxpa");
+    let name = args.str_or("name", &model_name);
+    args.finish()?;
+
+    let opts = RegisterOpts::new().max_batch(batch);
+    let mut reg = Registry::new();
+    // the in-code model must outlive registration; built in either branch
+    let built;
+    let key = match &fxpa {
+        Some(path) => reg.add(&name, ModelSource::Artifact(Path::new(path)), &opts)?,
+        None => {
+            let mut rng = symog::util::rng::Rng::new(seed);
+            let (man, ck) = match model_name.as_str() {
+                "vgg7" => symog::testing::models::vgg7ish(&mut rng, bits, width),
+                "lenet5" => symog::testing::models::lenet5ish(&mut rng, bits),
+                "densenet" => symog::testing::models::densenetish(&mut rng, bits),
+                other => bail!("unknown --model {other:?} (vgg7|lenet5|densenet)"),
+            };
+            built = IntModel::build(&man, &ck)?;
+            reg.add(&name, ModelSource::InCode(&built), &opts)?
+        }
+    };
+    let server = std::sync::Arc::new(Server::new(
+        reg,
+        ServeConfig::new().workers(workers).queue_depth(queue_depth),
+    ));
+    let front = TcpFront::bind(std::sync::Arc::clone(&server), &addr)?;
+    println!(
+        "serving {key} on {}  (micro-batch cap {batch}, queue depth {})",
+        front.local_addr(),
+        if queue_depth == 0 { "unbounded".to_string() } else { queue_depth.to_string() },
+    );
+    println!("protocol: length-prefixed binary frames — see DESIGN.md \"Network front-end\"");
+    // serve until killed; connections are handled on their own threads
+    loop {
+        std::thread::park();
+    }
 }
 
 fn cmd_fig2(args: &Args) -> Result<()> {

@@ -28,7 +28,13 @@
 //!   deadlines ([`Server::infer_with`] + [`InferOpts`]), per-version
 //!   [`Health`] with a consecutive-failure circuit breaker and automatic
 //!   last-good rollback ([`Server::rollback`], [`Server::health`]), all
-//!   proven under seeded fault schedules (`util::fault`, `tests/chaos.rs`).
+//!   proven under seeded fault schedules (`util::fault`, `tests/chaos.rs`);
+//! * a TCP front-end ([`net`]) — thread-per-connection listener speaking
+//!   a length-prefixed binary protocol whose per-connection loop is a
+//!   pure transport over [`Server::infer_with`], so networked responses
+//!   inherit the bit-identity contract and typed failures cross the wire
+//!   as pinned error codes; latency quantiles from each slot's
+//!   [`LatencyHistogram`] ride the Stats frame.
 //!
 //! The load-bearing numeric contract: every response is bit-identical to
 //! a solo `Backend::Planned` forward of that request on the version that
@@ -42,6 +48,7 @@
 //! [`ExecPlan::run_rows`]: crate::inference::ExecPlan::run_rows
 
 mod health;
+pub mod net;
 mod registry;
 mod server;
 mod stats;
@@ -49,4 +56,4 @@ mod stats;
 pub use health::{Health, ServeError};
 pub use registry::{ModelKey, ModelSource, RegisterOpts, Registry};
 pub use server::{InferOpts, ServeConfig, Server, DEFAULT_QUARANTINE_AFTER};
-pub use stats::ModelStats;
+pub use stats::{LatencyHistogram, ModelStats, LATENCY_BUCKETS};

@@ -1,0 +1,158 @@
+//! Per-connection request loop: decode → submit → encode, nothing else.
+//!
+//! The handler is a **pure transport** over the in-process serving API:
+//! an `Infer` frame becomes exactly one [`Server::infer_with`] call (the
+//! same entry point the conformance/chaos suites pin), so a networked
+//! response is bit-identical to a solo planned forward by construction —
+//! the wire layer never touches images, logits, batching, or stats
+//! beyond copying bytes. Control frames map one-to-one onto
+//! [`Server::stats`]/[`Server::health`]/[`Server::swap`].
+//!
+//! One connection is one blocking request at a time (thread-per-
+//! connection; concurrency comes from more connections, exactly like the
+//! in-process API's one-thread-one-request shape). Typed serving
+//! failures travel as pinned error codes ([`proto::code_for`]); a
+//! malformed frame gets an [`ErrCode::Malformed`] reply and the
+//! connection is closed, since framing can no longer be trusted.
+//!
+//! [`Server::infer_with`]: crate::serve::Server::infer_with
+//! [`Server::stats`]: crate::serve::Server::stats
+//! [`Server::health`]: crate::serve::Server::health
+//! [`Server::swap`]: crate::serve::Server::swap
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::serve::{InferOpts, ModelKey, ModelSource, RegisterOpts, ServeError, Server};
+
+use super::proto::{self, ErrCode, Frame, ProtoError, WireStats};
+
+/// Serve one accepted connection until the peer hangs up (or a frame is
+/// malformed). Transport errors just end the loop — the peer is gone.
+pub(super) fn handle(server: &Server, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let reply = match proto::read_frame(&mut reader) {
+            Ok(frame) => dispatch(server, frame),
+            Err(ProtoError::Eof) | Err(ProtoError::Io(_)) => return,
+            Err(ProtoError::Malformed(msg)) => {
+                // answer, then drop the connection: after a framing error
+                // there is no way to find the next frame boundary
+                let _ = proto::write_frame(
+                    &mut writer,
+                    &Frame::Error { code: ErrCode::Malformed, message: msg },
+                );
+                let _ = writer.flush();
+                return;
+            }
+        };
+        if proto::write_frame(&mut writer, &reply).and_then(|()| writer.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+fn err_frame(code: ErrCode, message: impl Into<String>) -> Frame {
+    Frame::Error { code, message: message.into() }
+}
+
+/// Map one request frame to one serving-API call. Response frames only —
+/// never panics, never unwinds into the connection loop (the serving API
+/// already contains engine panics to typed errors).
+fn dispatch(server: &Server, frame: Frame) -> Frame {
+    match frame {
+        Frame::Infer { name, n_bits, version_pin, deadline_ms, image } => {
+            let key = ModelKey::new(name, n_bits);
+            // resolve slot existence up front so "no such model" is typed
+            // apart from in-band serving failures
+            let cur = match server.current_version(&key) {
+                Ok(v) => v,
+                Err(e) => return err_frame(ErrCode::UnknownModel, format!("{e:#}")),
+            };
+            // best-effort pre-check; the authoritative check is on the
+            // response version below (a swap can land mid-request)
+            if version_pin != 0 && cur != version_pin {
+                return err_frame(
+                    ErrCode::PinMismatch,
+                    format!("{key}: pinned v{version_pin}, slot is serving v{cur}"),
+                );
+            }
+            let opts = if deadline_ms == 0 {
+                InferOpts::new()
+            } else {
+                InferOpts::new().deadline_in(Duration::from_millis(deadline_ms as u64))
+            };
+            let t0 = Instant::now();
+            match server.infer_with(&key, &image, &opts) {
+                Ok((logits, version)) => {
+                    if version_pin != 0 && version != version_pin {
+                        return err_frame(
+                            ErrCode::PinMismatch,
+                            format!("{key}: pinned v{version_pin}, served by v{version}"),
+                        );
+                    }
+                    Frame::Logits { version, latency_us: t0.elapsed().as_micros() as u64, logits }
+                }
+                Err(e) => match e.downcast_ref::<ServeError>() {
+                    Some(se) => err_frame(proto::code_for(se), se.to_string()),
+                    None => err_frame(ErrCode::Internal, format!("{e:#}")),
+                },
+            }
+        }
+        Frame::Stats { name, n_bits } => {
+            let key = ModelKey::new(name, n_bits);
+            let (stats, version) = match (server.stats(&key), server.current_version(&key)) {
+                (Ok(s), Ok(v)) => (s, v),
+                (Err(e), _) | (_, Err(e)) => {
+                    return err_frame(ErrCode::UnknownModel, format!("{e:#}"))
+                }
+            };
+            Frame::StatsReply(WireStats {
+                version,
+                requests: stats.requests,
+                batches: stats.batches,
+                max_occupancy: stats.max_occupancy,
+                sheds: stats.sheds,
+                timeouts: stats.timeouts,
+                failures: stats.failures,
+                latency_count: stats.latency.count(),
+                p50_us: stats.latency.p50_us(),
+                p99_us: stats.latency.p99_us(),
+                max_us: stats.latency.max_us(),
+            })
+        }
+        Frame::Health { name, n_bits } => {
+            let key = ModelKey::new(name, n_bits);
+            match (server.health(&key), server.current_version(&key)) {
+                (Ok(h), Ok(v)) => Frame::HealthReply { health: proto::health_code(h), version: v },
+                (Err(e), _) | (_, Err(e)) => err_frame(ErrCode::UnknownModel, format!("{e:#}")),
+            }
+        }
+        Frame::Swap { name, n_bits, max_batch, version_pin, path } => {
+            let key = ModelKey::new(name, n_bits);
+            if server.current_version(&key).is_err() {
+                return err_frame(
+                    ErrCode::UnknownModel,
+                    format!("{}@w{} is not registered", key.name, key.n_bits),
+                );
+            }
+            let mut opts = RegisterOpts::new().max_batch(max_batch.max(1) as usize);
+            if version_pin != 0 {
+                opts = opts.version(version_pin);
+            }
+            match server.swap(&key, ModelSource::Artifact(Path::new(&path)), &opts) {
+                Ok(installed) => Frame::SwapReply { version: installed.version },
+                Err(e) => err_frame(ErrCode::Internal, format!("{e:#}")),
+            }
+        }
+        // a response frame arriving at the server is a confused peer
+        other => err_frame(
+            ErrCode::Malformed,
+            format!("server received a response frame: {other:?}"),
+        ),
+    }
+}

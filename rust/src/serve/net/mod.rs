@@ -1,0 +1,299 @@
+//! TCP front-end for the serving layer: a network skin over [`Server`].
+//!
+//! [`TcpFront`] binds a `std::net::TcpListener` and serves each accepted
+//! connection on its own thread (thread-per-connection — the in-process
+//! API is blocking and one-request-per-thread, so the natural network
+//! shape is one *connection* per thread; concurrency and micro-batch
+//! coalescing come from many connections, exactly as they come from many
+//! threads in-process). The protocol ([`proto`]) is length-prefixed
+//! binary frames; the per-connection loop ([`conn`]) is a pure transport
+//! over `Server::infer_with`/`stats`/`health`/`swap`, so networked
+//! responses are **bit-identical** to solo planned forwards and every
+//! typed failure domain crosses the wire as a pinned error code.
+//!
+//! [`Client`] is the matching blocking client, used by the test suite,
+//! `examples/serve_bench --tcp`, and the `serve` subcommand's
+//! documentation examples. A typed server-side refusal surfaces as a
+//! [`WireFail`] in the returned `anyhow::Error`, so callers branch on
+//! failure domains exactly as in-process callers downcast `ServeError`.
+//!
+//! Shutdown: [`TcpFront::shutdown`] stops the accept loop (flag + self-
+//! connect to unblock `accept`) and joins connection threads; connection
+//! threads exit when their client hangs up, so an orderly shutdown is
+//! "clients disconnect, then `shutdown()`".
+
+pub mod proto;
+
+mod conn;
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::serve::Server;
+
+use proto::{ErrCode, Frame, ProtoError, WireStats};
+
+/// A typed wire-level refusal: the server answered with an Error frame.
+/// Carried inside the `anyhow::Error` returned by [`Client`] calls so
+/// callers can `downcast_ref::<WireFail>()` and branch on the pinned
+/// [`ErrCode`] — the remote analogue of downcasting `ServeError`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireFail {
+    pub code: ErrCode,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireFail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server refused ({:?}): {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for WireFail {}
+
+/// A successful Infer round trip.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferReply {
+    /// logits, bit-identical to a solo planned forward on `version`
+    pub logits: Vec<f32>,
+    /// model version that served the request
+    pub version: u32,
+    /// server-measured submit→resolve wall time
+    pub latency_us: u64,
+}
+
+/// Listening TCP front-end. Owns the accept thread and every live
+/// connection thread; dropping it stops accepting (best effort) but only
+/// [`shutdown`](TcpFront::shutdown) joins the threads.
+pub struct TcpFront {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl TcpFront {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting connections against `server`.
+    pub fn bind(server: Arc<Server>, addr: &str) -> Result<TcpFront> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding TCP front-end to {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("serve-net-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let server = Arc::clone(&server);
+                        let handle = std::thread::Builder::new()
+                            .name("serve-net-conn".into())
+                            .spawn(move || conn::handle(&server, stream));
+                        if let Ok(h) = handle {
+                            conns.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                        }
+                    }
+                })
+                .context("spawning the accept thread")?
+        };
+        Ok(TcpFront { addr: local, stop, accept: Some(accept), conns })
+    }
+
+    /// The bound address (the real port when bound to `:0`).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread plus every connection
+    /// thread. Connection threads exit when their peer hangs up, so
+    /// call this after clients have disconnected (or dropped their
+    /// sockets) — it blocks until the last one does.
+    pub fn shutdown(mut self) {
+        self.stop_accept();
+        for h in self.conns.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stop_accept(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // unblock accept(): the flag is checked per accepted connection,
+        // so a throwaway self-connect guarantees one more wakeup
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpFront {
+    fn drop(&mut self) {
+        // best effort: stop accepting; connection threads are detached
+        // here (shutdown() is the orderly path that joins them)
+        if self.accept.is_some() {
+            self.stop_accept();
+        }
+    }
+}
+
+/// Blocking protocol client over one TCP connection. One request in
+/// flight at a time (matching the per-connection server loop); open more
+/// clients for concurrency.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to the TCP front-end")?;
+        let read_half = stream.try_clone().context("cloning the client socket")?;
+        Ok(Client { reader: BufReader::new(read_half), writer: BufWriter::new(stream) })
+    }
+
+    fn round_trip(&mut self, frame: &Frame) -> Result<Frame> {
+        proto::write_frame(&mut self.writer, frame).context("sending request frame")?;
+        self.writer.flush().context("flushing request frame")?;
+        let reply = match proto::read_frame(&mut self.reader) {
+            Ok(f) => f,
+            Err(ProtoError::Eof) => bail!("server closed the connection"),
+            Err(e) => return Err(anyhow!("{e}")),
+        };
+        if let Frame::Error { code, message } = reply {
+            return Err(anyhow!(WireFail { code, message }));
+        }
+        Ok(reply)
+    }
+
+    /// Infer with no deadline and no version pin.
+    pub fn infer(&mut self, name: &str, n_bits: u32, image: &[f32]) -> Result<InferReply> {
+        self.infer_with(name, n_bits, image, 0, 0)
+    }
+
+    /// Infer with optional relative deadline (`deadline_ms`, 0 = none)
+    /// and optional version pin (`version_pin`, 0 = none). A pinned
+    /// request answered by any other version fails with
+    /// [`ErrCode::PinMismatch`].
+    pub fn infer_with(
+        &mut self,
+        name: &str,
+        n_bits: u32,
+        image: &[f32],
+        deadline_ms: u32,
+        version_pin: u32,
+    ) -> Result<InferReply> {
+        let req = Frame::Infer {
+            name: name.to_string(),
+            n_bits,
+            version_pin,
+            deadline_ms,
+            image: image.to_vec(),
+        };
+        match self.round_trip(&req)? {
+            Frame::Logits { version, latency_us, logits } => {
+                Ok(InferReply { logits, version, latency_us })
+            }
+            other => bail!("expected Logits, got {other:?}"),
+        }
+    }
+
+    /// Fetch the slot's terminal-outcome counters and latency quantiles.
+    pub fn stats(&mut self, name: &str, n_bits: u32) -> Result<WireStats> {
+        let req = Frame::Stats { name: name.to_string(), n_bits };
+        match self.round_trip(&req)? {
+            Frame::StatsReply(s) => Ok(s),
+            other => bail!("expected StatsReply, got {other:?}"),
+        }
+    }
+
+    /// Fetch the slot's health byte (0 Ready / 1 Degraded / 2
+    /// Quarantined) and current serving version.
+    pub fn health(&mut self, name: &str, n_bits: u32) -> Result<(u8, u32)> {
+        let req = Frame::Health { name: name.to_string(), n_bits };
+        match self.round_trip(&req)? {
+            Frame::HealthReply { health, version } => Ok((health, version)),
+            other => bail!("expected HealthReply, got {other:?}"),
+        }
+    }
+
+    /// Hot-swap the slot to a server-local `.fxpa` artifact at `path`.
+    /// Returns the installed version.
+    pub fn swap(
+        &mut self,
+        name: &str,
+        n_bits: u32,
+        max_batch: u32,
+        version_pin: u32,
+        path: &str,
+    ) -> Result<u32> {
+        let req = Frame::Swap {
+            name: name.to_string(),
+            n_bits,
+            max_batch,
+            version_pin,
+            path: path.to_string(),
+        };
+        match self.round_trip(&req)? {
+            Frame::SwapReply { version } => Ok(version),
+            other => bail!("expected SwapReply, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::IntModel;
+    use crate::serve::{ModelKey, ModelSource, RegisterOpts, Registry, ServeConfig};
+    use crate::testing::models;
+    use crate::util::rng::Rng;
+
+    fn tiny_server() -> (Arc<Server>, ModelKey) {
+        let mut rng = Rng::new(11);
+        let (man, ck) = models::lenet5ish(&mut rng, 2);
+        let model = IntModel::build(&man, &ck).unwrap();
+        let mut reg = Registry::new();
+        let key = reg
+            .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(2))
+            .unwrap();
+        (Arc::new(Server::new(reg, ServeConfig::new().workers(1))), key)
+    }
+
+    #[test]
+    fn front_binds_ephemeral_port_and_shuts_down() {
+        let (server, key) = tiny_server();
+        let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let addr = front.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral bind must resolve to a real port");
+        {
+            let mut c = Client::connect(addr).unwrap();
+            let (health, version) = c.health(&key.name, key.n_bits).unwrap();
+            assert_eq!((health, version), (0, 1));
+        } // client drops → conn thread exits
+        front.shutdown();
+    }
+
+    #[test]
+    fn wire_fail_downcasts_with_its_pinned_code() {
+        let (server, _key) = tiny_server();
+        let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+        let mut c = Client::connect(front.local_addr()).unwrap();
+        let err = c.infer("nope", 2, &[0.0; 4]).unwrap_err();
+        let wf = err.downcast_ref::<WireFail>().expect("typed wire failure");
+        assert_eq!(wf.code, ErrCode::UnknownModel);
+        drop(c);
+        front.shutdown();
+    }
+}

@@ -1,0 +1,562 @@
+//! The wire protocol: length-prefixed binary frames over a byte stream.
+//!
+//! ## Framing
+//!
+//! Every frame is `u32 payload_len` (little-endian, excluding itself)
+//! followed by `payload_len` bytes. The payload's first byte is the
+//! opcode; the rest is a fixed field layout per opcode (all integers
+//! little-endian, `f32` as IEEE-754 bits, strings length-prefixed).
+//! A decoder error (unknown opcode, short payload, trailing bytes,
+//! oversize length) is **malformed** — the peer answers with an
+//! [`ErrCode::Malformed`] error frame and closes the connection, because
+//! stream framing can no longer be trusted.
+//!
+//! ## Frames
+//!
+//! Requests (client → server):
+//!
+//! | op | frame   | payload after the opcode byte                        |
+//! |----|---------|------------------------------------------------------|
+//! | 1  | Infer   | name, `u32` n_bits, `u32` version_pin (0 = none),    |
+//! |    |         | `u32` deadline_ms (0 = none), `u32` n + `f32`×n image|
+//! | 2  | Stats   | name, `u32` n_bits                                   |
+//! | 3  | Health  | name, `u32` n_bits                                   |
+//! | 4  | Swap    | name, `u32` n_bits, `u32` max_batch,                 |
+//! |    |         | `u32` version_pin (0 = none), path (server-local)    |
+//!
+//! Responses (server → client):
+//!
+//! | op   | frame       | payload after the opcode byte                  |
+//! |------|-------------|------------------------------------------------|
+//! | 0x81 | Logits      | `u32` version, `u64` latency_us, `u32` n + `f32`×n |
+//! | 0x82 | StatsReply  | [`WireStats`] field layout (see struct docs)   |
+//! | 0x83 | HealthReply | `u8` health (0/1/2), `u32` version             |
+//! | 0x84 | SwapReply   | `u32` installed version                        |
+//! | 0xFF | Error       | `u8` code, `u16`-prefixed message              |
+//!
+//! Strings are `u8`-length-prefixed UTF-8 (`u16` for the Swap path).
+//!
+//! ## Error codes
+//!
+//! Codes 1–5 are the five [`ServeError`] variants, pinned one-to-one
+//! ([`code_for`]); 6–9 are wire-layer outcomes that have no in-process
+//! equivalent. The numbers are part of the protocol and must never be
+//! renumbered — `tests/serve_net.rs` pins them.
+
+use std::io::{self, Read, Write};
+
+use crate::serve::{Health, ServeError};
+
+/// Upper bound on a frame payload; anything larger is malformed (the
+/// largest legal frame is an Infer image, and no zoo model comes near
+/// this). Guards the reader against allocating garbage lengths.
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+const OP_INFER: u8 = 1;
+const OP_STATS: u8 = 2;
+const OP_HEALTH: u8 = 3;
+const OP_SWAP: u8 = 4;
+const OP_LOGITS: u8 = 0x81;
+const OP_STATS_REPLY: u8 = 0x82;
+const OP_HEALTH_REPLY: u8 = 0x83;
+const OP_SWAP_REPLY: u8 = 0x84;
+const OP_ERROR: u8 = 0xFF;
+
+/// Pinned wire error codes (see the module docs; renumbering is a
+/// protocol break).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrCode {
+    /// admission control refused the request ([`ServeError::Shed`])
+    Shed = 1,
+    /// deadline passed before execution ([`ServeError::DeadlineExceeded`])
+    DeadlineExceeded = 2,
+    /// the micro-batch failed in the engine ([`ServeError::BatchPanicked`])
+    BatchFailed = 3,
+    /// serving version quarantined ([`ServeError::VersionQuarantined`])
+    Quarantined = 4,
+    /// malformed request content, e.g. wrong image geometry
+    /// ([`ServeError::BadRequest`])
+    BadRequest = 5,
+    /// no model registered under (name, n_bits)
+    UnknownModel = 6,
+    /// the response's serving version differs from the Infer frame's
+    /// version_pin (a swap landed, or the pin was stale)
+    PinMismatch = 7,
+    /// undecodable frame; the server closes the connection after sending
+    Malformed = 8,
+    /// any other server-side failure (e.g. a refused swap)
+    Internal = 9,
+}
+
+impl ErrCode {
+    pub fn from_u8(v: u8) -> Option<ErrCode> {
+        Some(match v {
+            1 => ErrCode::Shed,
+            2 => ErrCode::DeadlineExceeded,
+            3 => ErrCode::BatchFailed,
+            4 => ErrCode::Quarantined,
+            5 => ErrCode::BadRequest,
+            6 => ErrCode::UnknownModel,
+            7 => ErrCode::PinMismatch,
+            8 => ErrCode::Malformed,
+            9 => ErrCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// The pinned `ServeError` → wire-code mapping: every typed in-process
+/// failure domain has exactly one code, so a remote client can branch on
+/// the same domains the in-process API exposes.
+pub fn code_for(e: &ServeError) -> ErrCode {
+    match e {
+        ServeError::Shed { .. } => ErrCode::Shed,
+        ServeError::DeadlineExceeded => ErrCode::DeadlineExceeded,
+        ServeError::BatchPanicked(_) => ErrCode::BatchFailed,
+        ServeError::VersionQuarantined(_) => ErrCode::Quarantined,
+        ServeError::BadRequest(_) => ErrCode::BadRequest,
+    }
+}
+
+/// Wire byte for a [`Health`] state (HealthReply payload).
+pub fn health_code(h: Health) -> u8 {
+    match h {
+        Health::Ready => 0,
+        Health::Degraded => 1,
+        Health::Quarantined => 2,
+    }
+}
+
+pub fn health_from_code(v: u8) -> Option<Health> {
+    Some(match v {
+        0 => Health::Ready,
+        1 => Health::Degraded,
+        2 => Health::Quarantined,
+        _ => return None,
+    })
+}
+
+/// Per-model serving statistics as carried by the Stats wire frame:
+/// the terminal-outcome counters plus the latency histogram's summary
+/// quantiles. Field order is the payload layout (all `u64` except the
+/// leading `u32` version).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// version currently serving the slot
+    pub version: u32,
+    pub requests: u64,
+    pub batches: u64,
+    pub max_occupancy: u64,
+    pub sheds: u64,
+    pub timeouts: u64,
+    pub failures: u64,
+    /// latency samples recorded (== requests + timeouts + failures)
+    pub latency_count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// One decoded protocol frame (requests and responses share the enum;
+/// each side only ever constructs its own half).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Infer { name: String, n_bits: u32, version_pin: u32, deadline_ms: u32, image: Vec<f32> },
+    Stats { name: String, n_bits: u32 },
+    Health { name: String, n_bits: u32 },
+    Swap { name: String, n_bits: u32, max_batch: u32, version_pin: u32, path: String },
+    Logits { version: u32, latency_us: u64, logits: Vec<f32> },
+    StatsReply(WireStats),
+    HealthReply { health: u8, version: u32 },
+    SwapReply { version: u32 },
+    Error { code: ErrCode, message: String },
+}
+
+/// Why a read failed: a clean close between frames, a transport error, or
+/// a frame that decoded to garbage (the connection must be dropped).
+#[derive(Debug)]
+pub enum ProtoError {
+    /// EOF at a frame boundary: the peer hung up cleanly.
+    Eof,
+    /// Transport failure (including EOF mid-frame).
+    Io(io::Error),
+    /// Undecodable frame; the message says what was wrong.
+    Malformed(String),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Eof => f.write_str("connection closed"),
+            ProtoError::Io(e) => write!(f, "transport error: {e}"),
+            ProtoError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+// ---------------------------------------------------------------- encode
+
+fn put_str8(buf: &mut Vec<u8>, s: &str, what: &str) {
+    debug_assert!(s.len() <= u8::MAX as usize, "{what} too long for the wire");
+    buf.push(s.len().min(u8::MAX as usize) as u8);
+    buf.extend_from_slice(&s.as_bytes()[..s.len().min(u8::MAX as usize)]);
+}
+
+fn put_str16(buf: &mut Vec<u8>, s: &str) {
+    let n = s.len().min(u16::MAX as usize);
+    buf.extend_from_slice(&(n as u16).to_le_bytes());
+    buf.extend_from_slice(&s.as_bytes()[..n]);
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Serialize `frame` into its payload bytes (no length prefix).
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut b = Vec::new();
+    match frame {
+        Frame::Infer { name, n_bits, version_pin, deadline_ms, image } => {
+            b.push(OP_INFER);
+            put_str8(&mut b, name, "model name");
+            b.extend_from_slice(&n_bits.to_le_bytes());
+            b.extend_from_slice(&version_pin.to_le_bytes());
+            b.extend_from_slice(&deadline_ms.to_le_bytes());
+            put_f32s(&mut b, image);
+        }
+        Frame::Stats { name, n_bits } => {
+            b.push(OP_STATS);
+            put_str8(&mut b, name, "model name");
+            b.extend_from_slice(&n_bits.to_le_bytes());
+        }
+        Frame::Health { name, n_bits } => {
+            b.push(OP_HEALTH);
+            put_str8(&mut b, name, "model name");
+            b.extend_from_slice(&n_bits.to_le_bytes());
+        }
+        Frame::Swap { name, n_bits, max_batch, version_pin, path } => {
+            b.push(OP_SWAP);
+            put_str8(&mut b, name, "model name");
+            b.extend_from_slice(&n_bits.to_le_bytes());
+            b.extend_from_slice(&max_batch.to_le_bytes());
+            b.extend_from_slice(&version_pin.to_le_bytes());
+            put_str16(&mut b, path);
+        }
+        Frame::Logits { version, latency_us, logits } => {
+            b.push(OP_LOGITS);
+            b.extend_from_slice(&version.to_le_bytes());
+            b.extend_from_slice(&latency_us.to_le_bytes());
+            put_f32s(&mut b, logits);
+        }
+        Frame::StatsReply(s) => {
+            b.push(OP_STATS_REPLY);
+            b.extend_from_slice(&s.version.to_le_bytes());
+            for v in [
+                s.requests,
+                s.batches,
+                s.max_occupancy,
+                s.sheds,
+                s.timeouts,
+                s.failures,
+                s.latency_count,
+                s.p50_us,
+                s.p99_us,
+                s.max_us,
+            ] {
+                b.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Frame::HealthReply { health, version } => {
+            b.push(OP_HEALTH_REPLY);
+            b.push(*health);
+            b.extend_from_slice(&version.to_le_bytes());
+        }
+        Frame::SwapReply { version } => {
+            b.push(OP_SWAP_REPLY);
+            b.extend_from_slice(&version.to_le_bytes());
+        }
+        Frame::Error { code, message } => {
+            b.push(OP_ERROR);
+            b.push(*code as u8);
+            put_str16(&mut b, message);
+        }
+    }
+    b
+}
+
+/// Write one length-prefixed frame. The caller flushes (a conn handler
+/// batches a response per request; flushing per write would be wasteful
+/// for pipelined clients).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<()> {
+    let payload = encode(frame);
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian payload reader.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.b.len() - self.off < n {
+            return Err(format!(
+                "truncated payload: {what} needs {n} bytes, {} left",
+                self.b.len() - self.off
+            ));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn str8(&mut self, what: &str) -> Result<String, String> {
+        let n = self.u8(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| format!("{what} is not UTF-8"))
+    }
+
+    fn str16(&mut self, what: &str) -> Result<String, String> {
+        let n = self.u16(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| format!("{what} is not UTF-8"))
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>, String> {
+        let n = self.u32(what)? as usize;
+        let count = n.checked_mul(4).ok_or_else(|| format!("{what} element count overflow"))?;
+        let bytes = self.take(count, what)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Every opcode's field layout is fixed, so spare bytes mean the
+    /// peers disagree about the protocol — reject instead of guessing.
+    fn finish(self) -> Result<(), String> {
+        if self.off != self.b.len() {
+            return Err(format!("{} trailing bytes after the last field", self.b.len() - self.off));
+        }
+        Ok(())
+    }
+}
+
+/// Decode one payload (the bytes after the length prefix).
+pub fn decode(payload: &[u8]) -> Result<Frame, String> {
+    let mut r = Rd { b: payload, off: 0 };
+    let op = r.u8("opcode")?;
+    let frame = match op {
+        OP_INFER => Frame::Infer {
+            name: r.str8("model name")?,
+            n_bits: r.u32("n_bits")?,
+            version_pin: r.u32("version_pin")?,
+            deadline_ms: r.u32("deadline_ms")?,
+            image: r.f32s("image")?,
+        },
+        OP_STATS => Frame::Stats { name: r.str8("model name")?, n_bits: r.u32("n_bits")? },
+        OP_HEALTH => Frame::Health { name: r.str8("model name")?, n_bits: r.u32("n_bits")? },
+        OP_SWAP => Frame::Swap {
+            name: r.str8("model name")?,
+            n_bits: r.u32("n_bits")?,
+            max_batch: r.u32("max_batch")?,
+            version_pin: r.u32("version_pin")?,
+            path: r.str16("artifact path")?,
+        },
+        OP_LOGITS => Frame::Logits {
+            version: r.u32("version")?,
+            latency_us: r.u64("latency_us")?,
+            logits: r.f32s("logits")?,
+        },
+        OP_STATS_REPLY => {
+            let version = r.u32("version")?;
+            let mut v = [0u64; 10];
+            for (i, slot) in v.iter_mut().enumerate() {
+                *slot = r.u64(&format!("stats field {i}"))?;
+            }
+            Frame::StatsReply(WireStats {
+                version,
+                requests: v[0],
+                batches: v[1],
+                max_occupancy: v[2],
+                sheds: v[3],
+                timeouts: v[4],
+                failures: v[5],
+                latency_count: v[6],
+                p50_us: v[7],
+                p99_us: v[8],
+                max_us: v[9],
+            })
+        }
+        OP_HEALTH_REPLY => {
+            Frame::HealthReply { health: r.u8("health")?, version: r.u32("version")? }
+        }
+        OP_SWAP_REPLY => Frame::SwapReply { version: r.u32("version")? },
+        OP_ERROR => {
+            let raw = r.u8("error code")?;
+            let code = ErrCode::from_u8(raw).ok_or_else(|| format!("unknown error code {raw}"))?;
+            Frame::Error { code, message: r.str16("error message")? }
+        }
+        other => return Err(format!("unknown opcode 0x{other:02x}")),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame. EOF *between* frames is
+/// [`ProtoError::Eof`] (clean close); EOF inside a frame is a transport
+/// error; an undecodable payload is [`ProtoError::Malformed`].
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, ProtoError> {
+    let mut len = [0u8; 4];
+    // distinguish clean close (0 bytes) from mid-prefix truncation
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Err(ProtoError::Eof),
+            Ok(0) => {
+                return Err(ProtoError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame length prefix",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let n = u32::from_le_bytes(len);
+    if n == 0 || n > MAX_FRAME_LEN {
+        return Err(ProtoError::Malformed(format!(
+            "frame length {n} outside 1..={MAX_FRAME_LEN}"
+        )));
+    }
+    let mut payload = vec![0u8; n as usize];
+    r.read_exact(&mut payload).map_err(ProtoError::Io)?;
+    decode(&payload).map_err(ProtoError::Malformed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(f: Frame) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        let got = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, f, "frame did not survive the wire");
+        // and the stream is positioned at a clean boundary
+        let mut rest = &buf[buf.len()..];
+        assert!(matches!(read_frame(&mut rest), Err(ProtoError::Eof)));
+    }
+
+    #[test]
+    fn every_frame_round_trips_bit_exactly() {
+        round_trip(Frame::Infer {
+            name: "lenet5".into(),
+            n_bits: 2,
+            version_pin: 3,
+            deadline_ms: 250,
+            image: vec![0.0, -1.5, f32::MIN_POSITIVE, 3.25e7],
+        });
+        round_trip(Frame::Stats { name: "densenet".into(), n_bits: 4 });
+        round_trip(Frame::Health { name: "vgg7".into(), n_bits: 8 });
+        round_trip(Frame::Swap {
+            name: "lenet5".into(),
+            n_bits: 2,
+            max_batch: 8,
+            version_pin: 0,
+            path: "/tmp/lenet5-v2.fxpa".into(),
+        });
+        round_trip(Frame::Logits {
+            version: 7,
+            latency_us: 12_345,
+            logits: vec![-0.0, 1.0, f32::NEG_INFINITY],
+        });
+        round_trip(Frame::StatsReply(WireStats {
+            version: 2,
+            requests: 100,
+            batches: 30,
+            max_occupancy: 8,
+            sheds: 5,
+            timeouts: 2,
+            failures: 1,
+            latency_count: 103,
+            p50_us: 511,
+            p99_us: 4095,
+            max_us: 5000,
+        }));
+        round_trip(Frame::HealthReply { health: health_code(Health::Degraded), version: 4 });
+        round_trip(Frame::SwapReply { version: 9 });
+        round_trip(Frame::Error { code: ErrCode::Shed, message: "queue at depth 4".into() });
+    }
+
+    #[test]
+    fn error_codes_are_pinned() {
+        // renumbering any of these is a protocol break: deployed clients
+        // branch on the numeric value
+        assert_eq!(code_for(&ServeError::Shed { depth: 1 }) as u8, 1);
+        assert_eq!(code_for(&ServeError::DeadlineExceeded) as u8, 2);
+        assert_eq!(code_for(&ServeError::BatchPanicked("x".into())) as u8, 3);
+        assert_eq!(code_for(&ServeError::VersionQuarantined(1)) as u8, 4);
+        assert_eq!(code_for(&ServeError::BadRequest("x".into())) as u8, 5);
+        assert_eq!(ErrCode::UnknownModel as u8, 6);
+        assert_eq!(ErrCode::PinMismatch as u8, 7);
+        assert_eq!(ErrCode::Malformed as u8, 8);
+        assert_eq!(ErrCode::Internal as u8, 9);
+        for raw in 1..=9u8 {
+            assert_eq!(ErrCode::from_u8(raw).unwrap() as u8, raw);
+        }
+        assert_eq!(ErrCode::from_u8(0), None);
+        assert_eq!(ErrCode::from_u8(10), None);
+        assert_eq!(health_from_code(health_code(Health::Quarantined)), Some(Health::Quarantined));
+        assert_eq!(health_from_code(3), None);
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected_not_guessed() {
+        // unknown opcode
+        assert!(decode(&[0x42]).unwrap_err().contains("unknown opcode"));
+        // truncated: Stats promises a name longer than the payload
+        assert!(decode(&[OP_STATS, 200]).unwrap_err().contains("truncated"));
+        // trailing garbage after a complete frame
+        let mut ok = encode(&Frame::SwapReply { version: 1 });
+        ok.push(0);
+        assert!(decode(&ok).unwrap_err().contains("trailing"));
+        // zero-length and oversize frames die at the length prefix
+        let zero = 0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut zero.as_slice()), Err(ProtoError::Malformed(_))));
+        let huge = (MAX_FRAME_LEN + 1).to_le_bytes();
+        assert!(matches!(read_frame(&mut huge.as_slice()), Err(ProtoError::Malformed(_))));
+        // EOF mid-frame is a transport error, not a clean close
+        let mut partial = Vec::new();
+        write_frame(&mut partial, &Frame::SwapReply { version: 1 }).unwrap();
+        partial.truncate(6);
+        assert!(matches!(read_frame(&mut partial.as_slice()), Err(ProtoError::Io(_))));
+    }
+}

@@ -22,7 +22,13 @@
 //! Every submitted request resolves to **exactly one** typed terminal
 //! outcome — logits, or one [`ServeError`] variant — and the per-version
 //! counters in [`ModelStats`] account for it exactly
-//! (`requests + sheds + timeouts + failures == submissions`):
+//! (`requests + sheds + timeouts + failures == submissions`). Each
+//! terminal outcome that passed admission also deposits exactly one
+//! enqueue→resolve sample into the version's latency histogram — the
+//! request is stamped when it enters the queue and recorded (under the
+//! same stats lock that bills its counter) at whichever site resolves it,
+//! so `latency.count() == requests + timeouts + failures` is as exact as
+//! the outcome identity:
 //!
 //! * **Admission control.** [`ServeConfig::queue_depth`] bounds each
 //!   slot's queue; a request arriving at the bound is refused *at
@@ -218,10 +224,20 @@ impl Slot {
     }
 }
 
+/// Microseconds between two instants (saturating; the clock is monotonic
+/// so `now < from` only via scheduler weirdness, which clamps to 0).
+fn us_since(from: Instant, now: Instant) -> u64 {
+    now.saturating_duration_since(from).as_micros() as u64
+}
+
 struct Request {
     image: Vec<f32>,
     slot: Arc<Slot>,
     deadline: Option<Instant>,
+    /// admission timestamp: the latency histogram records
+    /// enqueue→resolve time for every terminal outcome of an enqueued
+    /// request (success, sweep, or failure)
+    enqueued: Instant,
 }
 
 struct QueueState {
@@ -284,14 +300,21 @@ impl VersionState {
     }
 
     /// Fail every request of a batch with one typed error, bill the
-    /// failures, and advance the breaker. Returns true iff this failure
-    /// tripped the version into quarantine (the caller rolls back).
+    /// failures (with their enqueue→resolve latency), and advance the
+    /// breaker. Returns true iff this failure tripped the version into
+    /// quarantine (the caller rolls back).
     fn fail_batch(&self, reqs: &[&Request], msg: String) -> bool {
         let err = ServeError::BatchPanicked(msg);
+        let now = Instant::now();
         for r in reqs {
             r.slot.fill(Err(err.clone()));
         }
-        lock(&self.stats).failures += reqs.len() as u64;
+        let mut stats = lock(&self.stats);
+        stats.failures += reqs.len() as u64;
+        for r in reqs {
+            stats.latency.record(us_since(r.enqueued, now));
+        }
+        drop(stats);
         self.breaker.record_failure()
     }
 
@@ -330,11 +353,20 @@ impl VersionState {
         }));
         let tripped = match run {
             Ok(Ok(())) => {
+                // resolve-time stamp: one `now` for the whole batch (the
+                // batchmates resolved together) before the fills, so a
+                // caller that wakes instantly still reads a recorded sample
+                let now = Instant::now();
                 for (i, r) in reqs.iter().enumerate() {
                     r.slot.fill(Ok((logits[i * oe..(i + 1) * oe].to_vec(), self.version)));
                 }
                 let counts = self.entry.plan.op_counts(k);
-                lock(&self.stats).record_batch(k as u64, self.entry.max_batch as u64, &counts);
+                let mut stats = lock(&self.stats);
+                stats.record_batch(k as u64, self.entry.max_batch as u64, &counts);
+                for r in reqs {
+                    stats.latency.record(us_since(r.enqueued, now));
+                }
+                drop(stats);
                 self.breaker.record_success();
                 false
             }
@@ -401,17 +433,22 @@ struct DrainGuard<'a> {
 
 impl Drop for DrainGuard<'_> {
     fn drop(&mut self) {
-        let mut leaked = 0u64;
+        let now = Instant::now();
+        let mut leaked: Vec<&Request> = Vec::new();
         for r in self.reqs {
             if !r.slot.is_done() {
                 r.slot.fill(Err(ServeError::BatchPanicked(
                     "drain panicked while executing this batch".to_string(),
                 )));
-                leaked += 1;
+                leaked.push(r);
             }
         }
-        if leaked > 0 {
-            lock(&self.vs.stats).failures += leaked;
+        if !leaked.is_empty() {
+            let mut stats = lock(&self.vs.stats);
+            stats.failures += leaked.len() as u64;
+            for r in &leaked {
+                stats.latency.record(us_since(r.enqueued, now));
+            }
         }
         lock(&self.m.q).draining = false;
         self.m.cv.notify_all();
@@ -662,8 +699,13 @@ impl Server {
         let fail = |e: ServeError| anyhow::Error::new(e).context(key.to_string());
         if vs0.health() == Health::Quarantined {
             // quarantined with no rollback target: fail fast, and keep the
-            // counter identity — the refusal is billed as a failure
-            lock(&vs0.stats).failures += 1;
+            // counter identity — the refusal is billed as a failure, with
+            // a 0µs latency sample (resolved at the instant it would have
+            // enqueued) so `latency.count == requests+timeouts+failures`
+            // stays exact on this path too
+            let mut stats = lock(&vs0.stats);
+            stats.failures += 1;
+            stats.latency.record(0);
             return Err(fail(ServeError::VersionQuarantined(vs0.version)));
         }
         let in_elems = vs0.entry.in_elems;
@@ -687,6 +729,7 @@ impl Server {
                 image: image.to_vec(),
                 slot: Arc::clone(&slot),
                 deadline: opts.deadline,
+                enqueued: Instant::now(),
             });
         }
         loop {
@@ -725,27 +768,36 @@ impl Server {
                     // drain forms its batch are never executed
                     let now = Instant::now();
                     let mut live: Vec<&Request> = Vec::with_capacity(reqs.len());
-                    let mut expired = 0u64;
+                    let mut swept: Vec<&Request> = Vec::new();
                     for r in &reqs {
                         if r.deadline.is_some_and(|d| d <= now) {
                             r.slot.fill(Err(ServeError::DeadlineExceeded));
-                            expired += 1;
+                            swept.push(r);
                         } else {
                             live.push(r);
                         }
                     }
-                    if expired > 0 {
-                        lock(&vs.stats).timeouts += expired;
+                    if !swept.is_empty() {
+                        let mut stats = lock(&vs.stats);
+                        stats.timeouts += swept.len() as u64;
+                        for r in &swept {
+                            stats.latency.record(us_since(r.enqueued, now));
+                        }
                     }
                     let tripped = if live.is_empty() {
                         false
                     } else if vs.health() == Health::Quarantined {
                         // the breaker tripped between pinning and running
                         // (or no rollback target exists): resolve, don't run
+                        let now = Instant::now();
                         for r in &live {
                             r.slot.fill(Err(ServeError::VersionQuarantined(vs.version)));
                         }
-                        lock(&vs.stats).failures += live.len() as u64;
+                        let mut stats = lock(&vs.stats);
+                        stats.failures += live.len() as u64;
+                        for r in &live {
+                            stats.latency.record(us_since(r.enqueued, now));
+                        }
                         false
                     } else {
                         vs.run_batch(&live)
@@ -871,6 +923,29 @@ mod tests {
         let soon = InferOpts::new().deadline_in(Duration::from_secs(3600));
         server.infer_with(&key, &img, &soon).unwrap();
         assert_eq!(server.stats(&key).unwrap().requests, 1);
+    }
+
+    #[test]
+    fn latency_histogram_counts_every_resolved_request() {
+        let (server, key, _, elems) = lenet_server(2);
+        let img = vec![0f32; elems];
+        for _ in 0..4 {
+            server.infer(&key, &img).unwrap();
+        }
+        // one swept deadline joins the sample set; a shed would not (it
+        // never enqueues), but this config is unbounded so none occur
+        let past = InferOpts::new().deadline_at(Instant::now() - Duration::from_secs(1));
+        let _ = server.infer_with(&key, &img, &past).unwrap_err();
+        let s = server.stats(&key).unwrap();
+        assert_eq!((s.requests, s.timeouts, s.failures), (4, 1, 0));
+        assert_eq!(
+            s.latency.count(),
+            s.requests + s.timeouts + s.failures,
+            "every enqueued terminal outcome must deposit exactly one latency sample"
+        );
+        assert!(s.latency.p50_us() <= s.latency.p99_us());
+        assert!(s.latency.p99_us() <= s.latency.max_us());
+        assert!(s.render().contains("latency p50"), "{}", s.render());
     }
 
     #[test]

@@ -7,8 +7,119 @@
 //! `ExecPlan::op_counts` for its row count, so the totals are a pure
 //! function of traffic — no instrumentation on the hot path beyond one
 //! mutex-guarded add per batch.
+//!
+//! Latency observability rides the same discipline: a fixed
+//! [`LatencyHistogram`] of log2-spaced buckets records each request's
+//! enqueue→resolve time in microseconds. Recording is a couple of integer
+//! ops into a fixed array (zero allocation, done under the stats lock the
+//! resolve site already holds), merging is element-wise addition — exact,
+//! like every other counter — and the sample-count identity is as sharp
+//! as the terminal-outcome one: `latency.count() == requests + timeouts +
+//! failures` (everything that entered the queue, or was refused *after*
+//! the version was selected; sheds and bad requests are turned away
+//! before they ever have an enqueue instant, so they are not latency
+//! samples).
 
 use crate::inference::OpCounts;
+
+/// Number of log2-spaced histogram buckets. Bucket 0 holds 0µs
+/// (sub-microsecond resolutions); bucket `k` holds `2^(k-1) ..= 2^k - 1`
+/// µs; the last bucket absorbs everything from `2^38` µs (~76 h) up.
+pub const LATENCY_BUCKETS: usize = 40;
+
+/// Fixed-size log2-bucket latency histogram (microseconds).
+///
+/// The bucket index of a value `v` is its bit length `64 - v.leading_zeros()`
+/// (0 for `v == 0`), clamped to the last bucket — i.e. buckets double in
+/// width, giving ~2x worst-case quantile error across 12 orders of
+/// magnitude for 40 * 8 bytes of state. Quantiles report the bucket's
+/// *upper* bound (pessimistic), clamped to the exactly-tracked max.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; LATENCY_BUCKETS],
+    count: u64,
+    max_us: u64,
+}
+
+// [u64; 40] has no derived Default (std stops at 32), so spell it out
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; LATENCY_BUCKETS], count: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(us: u64) -> usize {
+        (64 - us.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Upper bound (inclusive, in µs) of bucket `k`.
+    fn bucket_bound(k: usize) -> u64 {
+        if k == 0 {
+            0
+        } else {
+            (1u64 << k) - 1
+        }
+    }
+
+    /// Record one enqueue→resolve time. O(1), allocation-free.
+    pub fn record(&mut self, us: u64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded (== terminal outcomes of enqueued requests).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact largest sample, in µs (0 when empty).
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Upper bound on the `q`-quantile in µs (0 when empty): the bound of
+    /// the first bucket whose cumulative count reaches rank `ceil(q *
+    /// count)`, clamped to the exact max so `quantile(1.0) == max_us`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (k, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return Self::bucket_bound(k).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram in: element-wise bucket addition — exact,
+    /// like the counter merges (no resampling, no precision loss).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Raw bucket counts (tests assert they sum to `count`).
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.buckets
+    }
+}
 
 /// Snapshot of one model's serving counters (see [`Server::stats`]).
 ///
@@ -32,6 +143,10 @@ pub struct ModelStats {
     pub failures: u64,
     /// analytic integer-op totals over all served requests
     pub op_counts: OpCounts,
+    /// enqueue→resolve latency histogram; its sample count equals
+    /// `requests + timeouts + failures` exactly (sheds and bad requests
+    /// never enqueue, so they are not samples)
+    pub latency: LatencyHistogram,
 }
 
 impl ModelStats {
@@ -53,6 +168,7 @@ impl ModelStats {
         self.timeouts += other.timeouts;
         self.failures += other.failures;
         self.op_counts.merge(&other.op_counts);
+        self.latency.merge(&other.latency);
     }
 
     pub(crate) fn record_batch(&mut self, rows: u64, cap: u64, counts: &OpCounts) {
@@ -84,6 +200,15 @@ impl ModelStats {
             s.push_str(&format!(
                 " — {} shed, {} timed out, {} failed",
                 self.sheds, self.timeouts, self.failures
+            ));
+        }
+        if self.latency.count() > 0 {
+            s.push_str(&format!(
+                " — latency p50 {}us p99 {}us max {}us ({} samples)",
+                self.latency.p50_us(),
+                self.latency.p99_us(),
+                self.latency.max_us(),
+                self.latency.count(),
             ));
         }
         s
@@ -128,6 +253,65 @@ mod tests {
         let before = a.clone();
         a.merge(&ModelStats::default());
         assert_eq!(a, before);
+    }
+
+    #[test]
+    fn histogram_buckets_quantiles_and_max_are_exact() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!((h.count(), h.p50_us(), h.p99_us(), h.max_us()), (0, 0, 0, 0));
+        for us in [0u64, 1, 2, 3, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        // rank ceil(0.5*5)=3 lands on sample `2` -> its bucket [2,3] bound
+        assert_eq!(h.p50_us(), 3);
+        // rank ceil(0.99*5)=5 lands on 1000 -> bucket bound 1023 clamped
+        // to the exact max
+        assert_eq!(h.p99_us(), 1000);
+        assert_eq!(h.max_us(), 1000);
+        assert_eq!(h.quantile(1.0), h.max_us());
+        // a huge sample clamps into the last bucket instead of indexing
+        // out of bounds
+        h.record(u64::MAX);
+        assert_eq!(h.bucket_counts()[LATENCY_BUCKETS - 1], 1);
+        assert_eq!(h.max_us(), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_merge_equals_recording_into_one() {
+        let samples = [0u64, 5, 17, 17, 300, 40_000, 7];
+        let mut whole = LatencyHistogram::default();
+        for &s in &samples {
+            whole.record(s);
+        }
+        let (left, right) = samples.split_at(3);
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for &s in left {
+            a.record(s);
+        }
+        for &s in right {
+            b.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge must be exactly recording the union");
+        // merging an empty histogram is the identity
+        let before = a;
+        a.merge(&LatencyHistogram::default());
+        assert_eq!(a, before);
+    }
+
+    #[test]
+    fn render_appends_latency_tail_only_with_samples() {
+        let mut s = ModelStats::default();
+        assert!(!s.render().contains("latency"));
+        s.latency.record(120);
+        s.latency.record(90);
+        // both samples share the [64, 127] bucket; its 127µs bound is
+        // clamped to the exactly-tracked 120µs max
+        let line = s.render();
+        assert!(line.contains("latency p50 120us p99 120us max 120us (2 samples)"), "{line}");
     }
 
     #[test]

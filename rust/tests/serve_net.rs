@@ -1,0 +1,387 @@
+//! Network serving suite: the TCP front-end must be a *pure transport*
+//! over the in-process serving API. Concretely:
+//!
+//! (a) logits served over TCP to concurrent clients are bit-identical to
+//!     solo planned forwards (the same oracle `tests/serve_concurrency.rs`
+//!     pins for in-process threads);
+//! (b) typed failure domains cross the wire: sheds and expired deadlines
+//!     arrive as their pinned error codes, and the Stats frame's
+//!     terminal-outcome counters sum exactly to submissions;
+//! (c) the latency histogram's sample count equals the requests that were
+//!     actually enqueued (`requests + timeouts + failures`), with
+//!     p50 ≤ p99 ≤ max;
+//! (d) control frames work end to end: Health, Stats, version pins, and
+//!     a hot-swap to a published `.fxpa` artifact over the wire;
+//! (e) garbage on the socket is answered with a typed Malformed error and
+//!     a closed connection — never a crash, never a guessed frame.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use symog::artifact::{self, PublishOpts};
+use symog::inference::IntModel;
+use symog::serve::net::proto::{self, ErrCode, Frame, ProtoError};
+use symog::serve::net::{Client, TcpFront, WireFail};
+use symog::serve::{ModelSource, RegisterOpts, Registry, ServeConfig, Server};
+use symog::testing::models;
+use symog::util::rng::Rng;
+
+const M: usize = 6; // concurrent TCP clients
+const K: usize = 12; // requests per client
+
+/// Deterministic request image for (thread, index).
+fn request_image(elems: usize, t: usize, i: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x7E57 ^ ((t * K + i) as u64).wrapping_mul(0xA5A5A5A5A5A5));
+    (0..elems).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn tcp_responses_bit_identical_across_concurrent_clients() {
+    let mut rng = Rng::new(0xBEEF);
+    let (man_a, ck_a) = models::lenet5ish(&mut rng, 2);
+    let (man_b, ck_b) = models::densenetish(&mut rng, 4);
+    let model_a = IntModel::build(&man_a, &ck_a).unwrap();
+    let model_b = IntModel::build(&man_b, &ck_b).unwrap();
+    let solo_a = IntModel::build(&man_a, &ck_a).unwrap();
+    let solo_b = IntModel::build(&man_b, &ck_b).unwrap();
+    let elems_a: usize = man_a.input_shape.iter().product();
+    let elems_b: usize = man_b.input_shape.iter().product();
+
+    let mut reg = Registry::new();
+    let opts = RegisterOpts::new().max_batch(4);
+    let key_a = reg.add("lenet5", ModelSource::InCode(&model_a), &opts).unwrap();
+    let key_b = reg.add("densenet", ModelSource::InCode(&model_b), &opts).unwrap();
+    let server = Arc::new(Server::new(reg, ServeConfig::new().workers(2)));
+    let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let addr = front.local_addr();
+
+    // single-threaded oracle; clients alternate models so multi-model
+    // micro-batching happens *under* network concurrency
+    struct Case {
+        name: &'static str,
+        n_bits: u32,
+        image: Vec<f32>,
+        want: Vec<f32>,
+    }
+    let corpus: Vec<Vec<Case>> = (0..M)
+        .map(|t| {
+            (0..K)
+                .map(|i| {
+                    let to_a = (t + i) % 2 == 0;
+                    let (name, n_bits, solo, elems) = if to_a {
+                        ("lenet5", key_a.n_bits, &solo_a, elems_a)
+                    } else {
+                        ("densenet", key_b.n_bits, &solo_b, elems_b)
+                    };
+                    let image = request_image(elems, t, i);
+                    let (want, _) = solo.forward(&image, 1).unwrap();
+                    Case { name, n_bits, image, want }
+                })
+                .collect()
+        })
+        .collect();
+
+    std::thread::scope(|sc| {
+        for cases in &corpus {
+            sc.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for (i, case) in cases.iter().enumerate() {
+                    let reply = client.infer(case.name, case.n_bits, &case.image).unwrap();
+                    // bit-identity: exact equality on the f32 bit patterns
+                    assert_eq!(
+                        reply.logits, case.want,
+                        "request {i} for {} diverged from the solo oracle",
+                        case.name
+                    );
+                    assert_eq!(reply.version, 1, "nothing swapped, so v1 must serve");
+                }
+            });
+        }
+    });
+
+    // exact accounting per slot, read over the wire like a client would
+    let mut client = Client::connect(addr).unwrap();
+    let mut total_requests = 0;
+    for (name, n_bits) in [("lenet5", key_a.n_bits), ("densenet", key_b.n_bits)] {
+        let s = client.stats(name, n_bits).unwrap();
+        assert_eq!(s.version, 1);
+        assert_eq!((s.sheds, s.timeouts, s.failures), (0, 0, 0), "{name}: clean run");
+        assert_eq!(
+            s.latency_count, s.requests,
+            "{name}: every enqueued request must leave exactly one latency sample"
+        );
+        assert!(
+            s.p50_us <= s.p99_us && s.p99_us <= s.max_us,
+            "{name}: quantiles must be ordered, got p50 {} p99 {} max {}",
+            s.p50_us,
+            s.p99_us,
+            s.max_us
+        );
+        total_requests += s.requests;
+    }
+    assert_eq!(total_requests, (M * K) as u64, "every submission must be billed exactly once");
+    drop(client);
+    front.shutdown();
+}
+
+#[test]
+fn overload_sheds_cross_the_wire_with_exact_accounting() {
+    let mut rng = Rng::new(0x51ED);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let key = reg
+        .add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(2))
+        .unwrap();
+    let depth = 2usize;
+    let server =
+        Arc::new(Server::new(reg, ServeConfig::new().workers(2).queue_depth(depth)));
+    let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let addr = front.local_addr();
+
+    let threads = 8usize;
+    let per_thread = 25usize;
+    let mut total_subs = 0u64;
+    let mut total_sheds = 0u64;
+    // storm rounds until admission control visibly refuses something —
+    // scheduling decides when the queue actually fills
+    for round in 0..20 {
+        let round_sheds: u64 = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    sc.spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let mut sheds = 0u64;
+                        for i in 0..per_thread {
+                            let image = request_image(elems, t, i);
+                            match client.infer("lenet5", 2, &image) {
+                                Ok(_) => {}
+                                Err(e) => {
+                                    let wf = e
+                                        .downcast_ref::<WireFail>()
+                                        .expect("refusals must be typed WireFail");
+                                    assert_eq!(
+                                        wf.code,
+                                        ErrCode::Shed,
+                                        "only sheds are legal here: {wf}"
+                                    );
+                                    sheds += 1;
+                                }
+                            }
+                        }
+                        sheds
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        total_subs += (threads * per_thread) as u64;
+        total_sheds += round_sheds;
+        if total_sheds > 0 {
+            break;
+        }
+        assert!(round < 19, "20 storm rounds never filled a depth-{depth} queue");
+    }
+    assert!(total_sheds > 0);
+
+    let mut client = Client::connect(addr).unwrap();
+    let s = client.stats("lenet5", key.n_bits).unwrap();
+    assert_eq!(
+        s.requests + s.sheds,
+        total_subs,
+        "every submission must be exactly one terminal outcome"
+    );
+    assert_eq!(s.sheds, total_sheds, "client-observed sheds must match the server's count");
+    assert_eq!(
+        s.latency_count, s.requests,
+        "sheds never enqueue, so they must not leave latency samples"
+    );
+    drop(client);
+    front.shutdown();
+}
+
+#[test]
+fn deadline_expiry_crosses_the_wire_and_is_billed_exactly() {
+    // a wider model makes batches slow enough that a 1ms relative
+    // deadline expires in the queue under an 8-client storm
+    let mut rng = Rng::new(0xDEAD);
+    let (man, ck) = models::vgg7ish(&mut rng, 2, 8);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    let key = reg
+        .add("vgg7", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(2))
+        .unwrap();
+    let server = Arc::new(Server::new(reg, ServeConfig::new().workers(1)));
+    let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let addr = front.local_addr();
+
+    let threads = 8usize;
+    let per_thread = 6usize;
+    let mut total_subs = 0u64;
+    let mut total_timeouts = 0u64;
+    for round in 0..20 {
+        let round_timeouts: u64 = std::thread::scope(|sc| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    sc.spawn(move || {
+                        let mut client = Client::connect(addr).unwrap();
+                        let mut timeouts = 0u64;
+                        for i in 0..per_thread {
+                            let image = request_image(elems, t, i);
+                            match client.infer_with("vgg7", 2, &image, 1, 0) {
+                                Ok(_) => {}
+                                Err(e) => {
+                                    let wf = e
+                                        .downcast_ref::<WireFail>()
+                                        .expect("refusals must be typed WireFail");
+                                    assert_eq!(
+                                        wf.code,
+                                        ErrCode::DeadlineExceeded,
+                                        "only deadline sweeps are legal here: {wf}"
+                                    );
+                                    timeouts += 1;
+                                }
+                            }
+                        }
+                        timeouts
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        total_subs += (threads * per_thread) as u64;
+        total_timeouts += round_timeouts;
+        if total_timeouts > 0 {
+            break;
+        }
+        assert!(round < 19, "20 storm rounds never expired a 1ms deadline");
+    }
+
+    let mut client = Client::connect(addr).unwrap();
+    let s = client.stats("vgg7", key.n_bits).unwrap();
+    assert_eq!(s.requests + s.timeouts, total_subs);
+    assert_eq!(s.timeouts, total_timeouts);
+    // swept requests *were* enqueued, so they leave latency samples too
+    assert_eq!(
+        s.latency_count,
+        s.requests + s.timeouts,
+        "histogram samples must equal requests + timeouts"
+    );
+    drop(client);
+    front.shutdown();
+}
+
+#[test]
+fn control_frames_pins_and_artifact_swap_work_over_the_wire() {
+    let mut rng = Rng::new(0x5A9F);
+    let (man1, ck1) = models::lenet5ish(&mut rng, 2);
+    let (man2, ck2) = models::lenet5ish(&mut rng, 2);
+    let model1 = IntModel::build(&man1, &ck1).unwrap();
+    let solo2 = IntModel::build(&man2, &ck2).unwrap();
+    let elems: usize = man1.input_shape.iter().product();
+    let path = std::env::temp_dir().join(format!("symog-{}-serve-net.fxpa", std::process::id()));
+    artifact::publish(&man2, &ck2, &PublishOpts::new().version(2), &path).unwrap();
+
+    let mut reg = Registry::new();
+    let key = reg
+        .add("lenet5", ModelSource::InCode(&model1), &RegisterOpts::new().max_batch(4))
+        .unwrap();
+    let server = Arc::new(Server::new(reg, ServeConfig::new().workers(2)));
+    let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(front.local_addr()).unwrap();
+
+    // health + a pinned request on the initial version
+    assert_eq!(client.health("lenet5", key.n_bits).unwrap(), (0, 1));
+    let image = request_image(elems, 0, 0);
+    let reply = client.infer_with("lenet5", 2, &image, 0, 1).unwrap();
+    assert_eq!(reply.version, 1);
+
+    // swap refusals are typed
+    let err = client.swap("nope", 2, 4, 0, path.to_str().unwrap()).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireFail>().unwrap().code, ErrCode::UnknownModel);
+    let err = client.swap("lenet5", 2, 4, 0, "/nonexistent/v9.fxpa").unwrap_err();
+    assert_eq!(err.downcast_ref::<WireFail>().unwrap().code, ErrCode::Internal);
+    assert_eq!(
+        client.health("lenet5", key.n_bits).unwrap(),
+        (0, 1),
+        "a refused swap must leave v1 serving"
+    );
+
+    // the real swap: v2 installs from the artifact and serves bit-exactly
+    let installed = client.swap("lenet5", 2, 4, 0, path.to_str().unwrap()).unwrap();
+    assert_eq!(installed, 2);
+    let (want, _) = solo2.forward(&image, 1).unwrap();
+    let reply = client.infer("lenet5", 2, &image).unwrap();
+    assert_eq!(reply.version, 2);
+    assert_eq!(reply.logits, want, "post-swap serving must match the v2 solo oracle");
+
+    // a stale pin is refused; the current pin is honored
+    let err = client.infer_with("lenet5", 2, &image, 0, 1).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireFail>().unwrap().code, ErrCode::PinMismatch);
+    assert_eq!(client.infer_with("lenet5", 2, &image, 0, 2).unwrap().version, 2);
+
+    let _ = std::fs::remove_file(&path);
+    drop(client);
+    front.shutdown();
+}
+
+#[test]
+fn malformed_and_bad_requests_get_typed_refusals_not_crashes() {
+    let mut rng = Rng::new(0xFA11);
+    let (man, ck) = models::lenet5ish(&mut rng, 2);
+    let model = IntModel::build(&man, &ck).unwrap();
+    let elems: usize = man.input_shape.iter().product();
+    let mut reg = Registry::new();
+    reg.add("lenet5", ModelSource::InCode(&model), &RegisterOpts::new().max_batch(2)).unwrap();
+    let server = Arc::new(Server::new(reg, ServeConfig::new().workers(1)));
+    let front = TcpFront::bind(Arc::clone(&server), "127.0.0.1:0").unwrap();
+    let addr = front.local_addr();
+
+    // wrong image geometry is an in-band BadRequest; the connection
+    // stays usable afterwards
+    let mut client = Client::connect(addr).unwrap();
+    let err = client.infer("lenet5", 2, &[1.0; 3]).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireFail>().unwrap().code, ErrCode::BadRequest);
+    // unknown model likewise leaves the connection alive
+    let err = client.infer("mystery", 2, &request_image(elems, 0, 0)).unwrap_err();
+    assert_eq!(err.downcast_ref::<WireFail>().unwrap().code, ErrCode::UnknownModel);
+    client.infer("lenet5", 2, &request_image(elems, 0, 1)).unwrap();
+    drop(client);
+
+    // an unknown opcode is answered with Malformed, then the server
+    // closes — framing can no longer be trusted
+    {
+        use std::io::Write;
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&1u32.to_le_bytes()).unwrap();
+        raw.write_all(&[0x42]).unwrap();
+        raw.flush().unwrap();
+        let reply = proto::read_frame(&mut raw).unwrap();
+        match reply {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::Malformed),
+            other => panic!("expected a Malformed error frame, got {other:?}"),
+        }
+        assert!(
+            matches!(proto::read_frame(&mut raw), Err(ProtoError::Eof)),
+            "the server must close after a malformed frame"
+        );
+    }
+
+    // an absurd length prefix dies at the framing layer the same way
+    {
+        use std::io::Write;
+        let mut raw = TcpStream::connect(addr).unwrap();
+        raw.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        raw.flush().unwrap();
+        let reply = proto::read_frame(&mut raw).unwrap();
+        match reply {
+            Frame::Error { code, .. } => assert_eq!(code, ErrCode::Malformed),
+            other => panic!("expected a Malformed error frame, got {other:?}"),
+        }
+        assert!(matches!(proto::read_frame(&mut raw), Err(ProtoError::Eof)));
+    }
+
+    front.shutdown();
+}
